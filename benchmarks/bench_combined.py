@@ -1,0 +1,54 @@
+"""Paper Fig 12/13 (+ Fig 14 TermEst): the SM x PM grid and the TermEst
+replacement-rate restoration."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.clamshell import ClamShell, CSConfig
+
+
+def run(n_tasks=200, seeds=(3, 5)):
+    # Fig 12: all four SM x PM configurations
+    grid = {}
+    for sm in (False, True):
+        for pm in (float("inf"), 150.0):
+            tot, std, cost = [], [], []
+            for seed in seeds:
+                cs = ClamShell(CSConfig(pool_size=15, straggler=sm, pm_l=pm,
+                                        seed=seed))
+                r = cs.run_labeling(n_tasks)
+                tot.append(r.total_time)
+                std.append(np.std(r.batch_latencies))
+                cost.append(r.cost)
+            tag = f"{'SM' if sm else 'NoSM'}_{'PM' if pm < 1e9 else 'NoPM'}"
+            grid[tag] = (np.mean(tot), np.mean(std), np.mean(cost))
+            emit(f"fig12_{tag}", 0.0,
+                 f"total_s={np.mean(tot):.0f};batch_std={np.mean(std):.1f};"
+                 f"cost=${np.mean(cost):.2f}")
+    both = grid["SM_PM"]
+    base = grid["NoSM_NoPM"]
+    emit("fig12_combined_speedup", 0.0,
+         f"latency_x={base[0]/both[0]:.2f};std_x={base[1]/max(both[1],1e-9):.2f};"
+         f"paper=up_to_6x/15x")
+
+    # Fig 14: TermEst restores the replacement rate under SM
+    rows = {}
+    for sm, te, tag in ((False, False, "NoSM"), (True, False, "SM_noTermEst"),
+                        (True, True, "SM_TermEst")):
+        reps = []
+        for seed in seeds:
+            cs = ClamShell(CSConfig(pool_size=20, straggler=sm, pm_l=150.0,
+                                    use_termest=te, seed=seed,
+                                    session_mean_s=7200.0))
+            r = cs.run_labeling(300)
+            reps.append(r.n_replaced)
+        rows[tag] = np.mean(reps)
+        emit(f"fig14_replacement_{tag}", 0.0, f"replaced={np.mean(reps):.1f}")
+    emit("fig14_termest_effect", 0.0,
+         f"noSM={rows['NoSM']:.0f};SM_no={rows['SM_noTermEst']:.0f};"
+         f"SM_yes={rows['SM_TermEst']:.0f};paper=restores_rate")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Paper §6.6 / Fig 17/18: CLAMShell vs Base-R vs Base-NR end to end —
+time-to-accuracy, raw labeling throughput (paper: 7.24x vs Base-NR) and
+latency variance (paper: 151x, 3.1s vs 475s)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.clamshell import ClamShell, CSConfig, time_to_accuracy
+from repro.data.datasets import cifar_like, mnist_like, train_test_split
+
+
+def _mk(kind, seed):
+    if kind == "clamshell":
+        return ClamShell(CSConfig(pool_size=16, learner="HL", straggler=True,
+                                  pm_l=150.0, seed=seed))
+    if kind == "base_r":     # retainer pool + batch AL, no SM/PM, sync
+        return ClamShell(CSConfig(pool_size=16, learner="AL", straggler=False,
+                                  pm_l=float("inf"), async_retrain=False,
+                                  seed=seed))
+    return ClamShell(CSConfig(pool_size=16, learner="PL", straggler=False,
+                              pm_l=float("inf"), retainer=False, seed=seed))
+
+
+def run(seeds=(5, 6)):
+    # raw labeling throughput + variance (500 labels, no learning)
+    rows = {}
+    for kind in ("clamshell", "base_nr"):
+        thr, std = [], []
+        for seed in seeds:
+            cs = _mk(kind, seed)
+            r = cs.run_labeling(500)
+            thr.append(r.throughput)
+            std.append(np.std(r.task_latencies))
+        rows[kind] = (np.mean(thr), np.mean(std))
+        emit(f"sec66_raw_{kind}", 0.0,
+             f"labels_per_s={np.mean(thr):.3f};task_std_s={np.mean(std):.1f}")
+    emit("sec66_raw_ratios", 0.0,
+         f"throughput_x={rows['clamshell'][0]/rows['base_nr'][0]:.2f};"
+         f"variance_x={(rows['base_nr'][1]/max(rows['clamshell'][1],1e-9))**2:.0f};"
+         f"paper=7.24x/151x")
+
+    # Fig 17/18: time to model-accuracy thresholds
+    for name, data in (("mnist", mnist_like(2500, seed=4)),
+                       ("cifar", cifar_like(2500, seed=4))):
+        X, y = data
+        Xtr, ytr, Xte, yte = train_test_split(X, y)
+        times = {}
+        for kind in ("clamshell", "base_r", "base_nr"):
+            curves = [
+                _mk(kind, s).run_learning(Xtr, ytr, Xte, yte,
+                                          label_budget=360)[0]
+                for s in seeds
+            ]
+            times[kind] = curves
+        finals = {k: np.mean([c[-1][2] for c in v]) for k, v in times.items()}
+        target = min(finals.values()) - 0.02
+        tt = {k: np.mean([min(time_to_accuracy(c, target), 1e7) for c in v])
+              for k, v in times.items()}
+        emit(f"fig17_{name}", 0.0,
+             f"target={target:.2f};clamshell_s={tt['clamshell']:.0f};"
+             f"base_r_s={tt['base_r']:.0f};base_nr_s={tt['base_nr']:.0f};"
+             f"speedup_vs_nr={tt['base_nr']/max(tt['clamshell'],1e-9):.1f}x;"
+             f"paper=4-5x")
+
+
+if __name__ == "__main__":
+    run()

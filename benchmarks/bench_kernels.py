@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks: wall-clock of the jnp reference paths on CPU (the
+deployable number on this host) + interpret-mode Pallas validation cost.
+TPU-side performance is assessed structurally via the roofline (the kernels
+remove the attention/softmax HBM terms — see EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.linear_scan import linear_scan
+from repro.kernels.uncertainty import entropy_scores
+from repro.kernels.xent import streaming_xent
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 4)
+
+    B, Hq, Hkv, S, D = 1, 8, 2, 1024, 64
+    q = jax.random.normal(ks[0], (B, Hq, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    ref_fn = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    us = _time(ref_fn, q, k, v)
+    flops = 4 * B * Hq * S * S * D / 2
+    emit("kernel_attention_ref_xla", us,
+         f"gflops={flops/us/1e3:.1f};shape=B{B}H{Hq}S{S}D{D}")
+    o = flash_attention(q, k, v, causal=True, interpret=True)
+    err = float(jnp.abs(o - ref_fn(q, k, v)).max())
+    emit("kernel_attention_pallas_interp", 0.0, f"allclose_err={err:.2e}")
+
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (8, 2048, 256)))
+    b = jax.random.normal(ks[1], (8, 2048, 256))
+    scan_ref = jax.jit(lambda a, b: ref.linear_scan_ref(a, b))
+    us = _time(scan_ref, a, b)
+    emit("kernel_linear_scan_ref_xla", us, "shape=8x2048x256")
+    err = float(jnp.abs(linear_scan(a, b, interpret=True) -
+                        scan_ref(a, b)).max())
+    emit("kernel_linear_scan_pallas_interp", 0.0, f"allclose_err={err:.2e}")
+
+    x = jax.random.normal(ks[2], (512, 50304), jnp.float32)
+    ent_ref = jax.jit(ref.entropy_ref)
+    us = _time(ent_ref, x)
+    emit("kernel_entropy_ref_xla", us, "shape=512x50304")
+    err = float(jnp.abs(entropy_scores(x, interpret=True) -
+                        ent_ref(x)).max())
+    emit("kernel_entropy_pallas_interp", 0.0, f"allclose_err={err:.2e}")
+
+    t = jax.random.randint(ks[3], (512,), 0, 50304)
+    xent_ref_fn = jax.jit(ref.xent_ref)
+    us = _time(xent_ref_fn, x, t)
+    emit("kernel_xent_ref_xla", us, "shape=512x50304")
+    err = float(jnp.abs(streaming_xent(x, t, interpret=True) -
+                        xent_ref_fn(x, t)).max())
+    emit("kernel_xent_pallas_interp", 0.0, f"allclose_err={err:.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Paper Fig 9/10/11 (+ §4.1 QC decoupling): straggler mitigation vs R.
+
+Reports per-batch latency, std, and cost for SM on/off across the pool/batch
+ratio R, plus the QC-decoupling win at votes=3.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.clamshell import ClamShell, CSConfig
+
+
+def run(n_tasks=150, seeds=(3, 4)):
+    for R in (0.5, 0.75, 1.0, 2.0, 3.0):
+        for sm in (False, True):
+            lat, std, cost = [], [], []
+            us = 0.0
+            for seed in seeds:
+                cs = ClamShell(CSConfig(pool_size=15, batch_ratio=R,
+                                        straggler=sm, seed=seed))
+                r, t = timed(cs.run_labeling, n_tasks)
+                us += t / n_tasks
+                lat.append(np.mean(r.batch_latencies))
+                std.append(np.std(r.batch_latencies))
+                cost.append(r.cost)
+            tag = "SM" if sm else "NoSM"
+            emit(f"fig9_straggler_R{R}_{tag}", us / len(seeds),
+                 f"batch_mean_s={np.mean(lat):.1f};batch_std_s={np.mean(std):.1f};"
+                 f"cost=${np.mean(cost):.2f}")
+
+    # headline ratios at R=1 (paper: latency 2.5-5x, std 5-10x)
+    a = [ClamShell(CSConfig(pool_size=15, batch_ratio=1.0, straggler=False,
+                            seed=s)).run_labeling(n_tasks) for s in seeds]
+    b = [ClamShell(CSConfig(pool_size=15, batch_ratio=1.0, straggler=True,
+                            seed=s)).run_labeling(n_tasks) for s in seeds]
+    lat_ratio = np.mean([x.total_time for x in a]) / np.mean(
+        [x.total_time for x in b])
+    std_ratio = np.mean([np.std(x.batch_latencies) for x in a]) / max(
+        np.mean([np.std(x.batch_latencies) for x in b]), 1e-9)
+    emit("fig10_straggler_speedup", 0.0,
+         f"latency_x={lat_ratio:.2f};std_x={std_ratio:.2f};paper=2.5-5x/5-10x")
+
+    # QC decoupling (§4.1): naive duplication vs decoupled assignment
+    for max_dup, tag in ((6, "naive"), (1, "decoupled")):
+        ts = []
+        for seed in seeds:
+            cs = ClamShell(CSConfig(pool_size=15, straggler=True,
+                                    votes_needed=3, seed=seed))
+            cs.lifeguard.max_dup = max_dup
+            r = cs.run_labeling(60)
+            ts.append(r.total_time)
+        emit(f"sec41_qc_{tag}", 0.0, f"total_s={np.mean(ts):.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Fig 2: distribution of worker latencies (per-worker means and stds
+as CDF summary stats) — the empirical ground the population model stands on,
+calibrated to the medical-deployment statistics in §2.1."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.workers import Population
+
+
+def run(n=20000):
+    pop = Population(seed=0)
+    ws = [pop.draw() for _ in range(n)]
+    mus = np.array([w.mu for w in ws])
+    sds = np.array([w.sigma for w in ws])
+    accs = np.array([w.accuracy for w in ws])
+    q = lambda a, p: float(np.percentile(a, p))
+    emit("fig2_worker_mean_cdf", 0.0,
+         f"p10={q(mus,10):.0f};p50={q(mus,50):.0f};p90={q(mus,90):.0f};"
+         f"p99={q(mus,99):.0f};paper=tens_of_s_to_hours")
+    emit("fig2_worker_std_cdf", 0.0,
+         f"p10={q(sds,10):.0f};p50={q(sds,50):.0f};p99={q(sds,99):.0f};"
+         f"paper=fast_workers_still_vary")
+    emit("fig2_worker_accuracy", 0.0,
+         f"p10={q(accs,10):.3f};p50={q(accs,50):.3f};mean={accs.mean():.3f}")
+    # per-HIT latency distribution (a sampled task from a sampled worker)
+    rng = np.random.default_rng(7)
+    lat = np.array([max(2.0, rng.normal(w.mu, w.sigma))
+                    for w in (ws[i] for i in rng.integers(0, n, 20000))])
+    emit("fig2_task_latency_cdf", 0.0,
+         f"p50={q(lat,50):.0f};p90={q(lat,90):.0f};p99={q(lat,99):.0f};"
+         f"paper_HIT=median_4min_90pct_hours")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,21 @@
+"""Benchmark harness helpers: every benchmark emits `name,us_per_call,derived`
+CSV rows (us_per_call = wall-clock microseconds per simulated/numeric call;
+derived = the figure's headline quantity)."""
+from __future__ import annotations
+
+import time
+
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

@@ -1,0 +1,56 @@
+"""Inject the roofline + perf tables into EXPERIMENTS.md from artifacts.
+
+    PYTHONPATH=src:. python -m benchmarks.fill_experiments
+"""
+from __future__ import annotations
+
+import glob
+import json
+
+from benchmarks.roofline import load, markdown
+
+
+def perf_table():
+    base = {}
+    for f in glob.glob("artifacts/dryrun/*_single_baseline.json"):
+        r = json.load(open(f))
+        base[(r["arch"], r["shape"])] = r
+    rows = [
+        "| cell | variant | compute s | memory s | collective s | total s | "
+        "frac | peak GB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for f in sorted(glob.glob("artifacts/perf/*_optfinal.json")):
+        r = json.load(open(f))
+        key = (r["arch"], r["shape"])
+        for tag, rec in (("baseline", base.get(key)), ("optimized", r)):
+            if rec is None:
+                continue
+            t = rec["roofline"]
+            tot = sum(t.values())
+            rows.append(
+                f"| {key[0]}/{key[1]} | {tag} | {t['compute_s']:.2f} | "
+                f"{t['memory_s']:.2f} | {t['collective_s']:.2f} | {tot:.2f} | "
+                f"{t['compute_s']/tot:.3f} | "
+                f"{rec['memory']['peak_per_device_gb']:.1f} |")
+    return "\n".join(rows)
+
+
+def main():
+    recs = load()
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    text = text.replace("<!-- ROOFLINE_TABLE_SINGLE -->",
+                        markdown(recs, "single"))
+    text = text.replace("<!-- ROOFLINE_TABLE_MULTI -->",
+                        markdown(recs, "multi"))
+    text = text.replace("<!-- PERF_TABLE -->", perf_table())
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    ok = sum(1 for r in recs if r.get("status") == "ok")
+    sk = sum(1 for r in recs if r.get("status") == "skipped")
+    print(f"injected tables: {ok} ok cells, {sk} skipped")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Roofline reporting: reads artifacts/dryrun/*.json (written by
+repro.launch.dryrun) and renders the per-(arch x shape x mesh) table used in
+EXPERIMENTS.md §Roofline, with the three terms, dominant bottleneck, useful
+FLOPs ratio, and a one-line lever per cell."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+LEVER = {
+    "compute_s": "more TP / wider microbatch to raise MXU occupancy",
+    "memory_s": "Pallas flash attention + bf16 stashes cut HBM reads",
+    "collective_s": "bf16 collectives / overlap FSDP gathers with compute",
+}
+
+
+def load(outdir="artifacts/dryrun", tag="baseline"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(outdir, f"*_{tag}.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs, mesh="single"):
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("status") != "ok":
+            continue
+        t = r["roofline"]
+        total = sum(t.values())
+        dom = r["dominant"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "dominant": dom,
+            "roofline_frac": t["compute_s"] / total if total else 0.0,
+            "useful_flops_ratio": r.get("useful_flops_ratio", 0.0),
+            "peak_gb": r["memory"]["peak_per_device_gb"],
+            "lever": LEVER[dom],
+        })
+    return rows
+
+
+def markdown(recs, mesh="single"):
+    rows = table(recs, mesh)
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| roofline frac | 6ND/HLO | peak GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant'].replace('_s','')} | {r['roofline_frac']:.2f} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['peak_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def run():
+    recs = load()
+    if not recs:
+        emit("roofline", 0.0, "no dry-run artifacts found")
+        return
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    failed = [r for r in recs if r.get("status") == "error"]
+    emit("roofline_cells", 0.0,
+         f"ok={len(ok)};skipped={len(skipped)};failed={len(failed)}")
+    for mesh in ("single", "multi"):
+        rows = table(recs, mesh)
+        if not rows:
+            continue
+        worst = min(rows, key=lambda r: r["roofline_frac"])
+        coll = max(rows, key=lambda r: r["collective_s"])
+        emit(f"roofline_{mesh}_summary", 0.0,
+             f"cells={len(rows)};"
+             f"worst_frac={worst['arch']}/{worst['shape']}="
+             f"{worst['roofline_frac']:.3f};"
+             f"most_collective={coll['arch']}/{coll['shape']}="
+             f"{coll['collective_s']:.1f}s")
+    for r in table(recs, "single"):
+        emit(f"roofline_{r['arch']}_{r['shape']}", 0.0,
+             f"c={r['compute_s']:.3f};m={r['memory_s']:.3f};"
+             f"n={r['collective_s']:.3f};dom={r['dominant']};"
+             f"frac={r['roofline_frac']:.2f}")
+
+
+if __name__ == "__main__":
+    print(markdown(load(), "single"))

@@ -1,0 +1,29 @@
+"""Benchmark orchestrator. One section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_workers, bench_straggler, bench_pool,
+                            bench_combined, bench_hybrid, bench_e2e,
+                            bench_kernels, roofline)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for mod, tag in ((bench_workers, "worker latency CDFs (Fig 2)"),
+                     (bench_straggler, "straggler (Fig 9-11, s4.1)"),
+                     (bench_pool, "pool maintenance (Fig 3-8)"),
+                     (bench_combined, "combined + TermEst (Fig 12-14)"),
+                     (bench_hybrid, "hybrid learning (Fig 15-16)"),
+                     (bench_e2e, "end-to-end (Fig 17-18, s6.6)"),
+                     (bench_kernels, "pallas kernels"),
+                     (roofline, "roofline (dry-run artifacts)")):
+        print(f"# --- {tag} ---", flush=True)
+        mod.run()
+    print(f"# total {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

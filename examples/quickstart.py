@@ -1,0 +1,38 @@
+"""Quickstart: label a task stream with CLAMShell and watch the paper's two
+per-batch techniques work.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.clamshell import ClamShell, CSConfig
+
+
+def main():
+    rng = np.random.default_rng(0)
+    truth = rng.integers(0, 3, 300)          # 3-way sentiment, say
+
+    print("== baseline crowd (no straggler mitigation, no maintenance) ==")
+    base = ClamShell(CSConfig(pool_size=15, straggler=False,
+                              pm_l=float("inf"), seed=1))
+    rb = base.run_labeling(300, true_labels=truth, n_classes=3)
+    print(f"  {rb.n_labels} labels in {rb.total_time:,.0f}s sim-time "
+          f"({rb.throughput:.3f} labels/s), batch std {np.std(rb.batch_latencies):.0f}s, "
+          f"cost ${rb.cost:.2f}, label accuracy {rb.accuracy:.2%}")
+
+    print("== CLAMShell (straggler mitigation + pool maintenance) ==")
+    clam = ClamShell(CSConfig(pool_size=15, straggler=True, pm_l=150.0,
+                              seed=1))
+    rc = clam.run_labeling(300, true_labels=truth, n_classes=3)
+    print(f"  {rc.n_labels} labels in {rc.total_time:,.0f}s sim-time "
+          f"({rc.throughput:.3f} labels/s), batch std {np.std(rc.batch_latencies):.0f}s, "
+          f"cost ${rc.cost:.2f}, label accuracy {rc.accuracy:.2%}, "
+          f"{rc.n_replaced} slow workers replaced")
+
+    print(f"\nspeedup {rb.total_time / rc.total_time:.1f}x, "
+          f"batch-variance reduction "
+          f"{(np.std(rb.batch_latencies)/max(np.std(rc.batch_latencies),1e-9))**2:.0f}x")
+
+
+if __name__ == "__main__":
+    main()

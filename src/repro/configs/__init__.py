@@ -1,0 +1,9 @@
+from repro.configs.base import (
+    ModelConfig, ShapeConfig, SHAPES, cell_supported, reduced,
+)
+from repro.configs.registry import ARCHS, get_config, all_cells
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "cell_supported", "reduced",
+    "ARCHS", "get_config", "all_cells",
+]

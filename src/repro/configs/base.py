@@ -1,0 +1,202 @@
+"""Config system: model architectures and workload shapes.
+
+Every assigned architecture is a ``ModelConfig``; every workload cell is a
+``(ModelConfig, ShapeConfig)`` pair. Configs are pure data — nothing here
+imports jax, so importing configs never touches device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description.
+
+    ``block_pattern`` is the repeating unit of the layer stack, tiled (and
+    truncated) to ``n_layers``. Block kinds:
+      attn    — (self-)attention + MLP residual block (full or SWA via window)
+      xattn   — attention block followed by a cross-attention sub-block (VLM)
+      moe     — attention + mixture-of-experts MLP
+      mlstm   — xLSTM matrix-LSTM block (chunked linear attention form)
+      slstm   — xLSTM scalar-LSTM block (sequential gated recurrence)
+      rglru   — RG-LRU recurrent block + MLP (RecurrentGemma)
+    """
+
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    block_pattern: tuple = ("attn",)
+    window: int = 0                 # 0 = full attention; >0 = sliding window
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 0
+    capacity_factor: float = 1.25
+    # VLM cross attention
+    cross_attn_every: int = 0       # layer i gets cross-attn iff i % every == every - 1
+    n_img_tokens: int = 0
+    # encoder-decoder (audio)
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0            # precomputed frame embeddings (conv stub)
+    # recurrent blocks
+    conv_width: int = 4
+    lru_width: int = 0              # 0 -> d_model
+    # misc
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    act: str = "silu"
+    mlp_gated: bool = True
+    norm: str = "rmsnorm"
+
+    # ---- derived ----
+    @property
+    def subquadratic(self) -> bool:
+        """True if context cost is sub-quadratic -> long_500k is runnable."""
+        recurrent = any(b in ("mlstm", "slstm", "rglru") for b in self.blocks())
+        swa = self.window > 0
+        full_attn = any(
+            b in ("attn", "xattn", "moe") for b in self.blocks()
+        ) and self.window == 0
+        return (recurrent or swa) and not (full_attn and not swa)
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    def blocks(self) -> tuple:
+        """Expanded per-layer block kinds, length n_layers."""
+        pat = self.block_pattern
+        reps = -(-self.n_layers // len(pat))
+        out = list(pat) * reps
+        out = out[: self.n_layers]
+        if self.cross_attn_every > 0:
+            e = self.cross_attn_every
+            out = [
+                ("xattn" if (i % e == e - 1) else b) for i, b in enumerate(out)
+            ]
+        return tuple(out)
+
+    def layer_groups(self):
+        """(pattern_group, n_full_groups, remainder_blocks) for scan-over-layers.
+
+        Full groups are scanned with stacked params; the remainder (pattern
+        truncation, e.g. recurrentgemma's 26 = 8*3 + 2) is applied unrolled.
+        """
+        blocks = self.blocks()
+        g = len(self.block_pattern) if self.cross_attn_every == 0 else self.cross_attn_every
+        n_full = len(blocks) // g
+        group = tuple(blocks[:g])
+        # verify tiling assumption: every full group identical
+        for i in range(n_full):
+            if tuple(blocks[i * g : (i + 1) * g]) != group:
+                # heterogeneous tail handled by caller; only support exact tiling
+                raise ValueError(f"{self.name}: non-tiling block pattern {blocks}")
+        rem = tuple(blocks[n_full * g :])
+        return group, n_full, rem
+
+    @property
+    def d_lru(self) -> int:
+        return self.lru_width or self.d_model
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for 6ND math."""
+        d, f, V = self.d_model, self.d_ff, self.vocab_size
+        qd = self.n_heads * self.head_dim
+        kvd = self.n_kv_heads * self.head_dim
+        n = V * d * (1 if self.tie_embeddings else 2)
+        for b in self.blocks():
+            if b in ("attn", "xattn", "moe"):
+                n += d * qd + 2 * d * kvd + qd * d  # qkvo
+                if b == "xattn":
+                    n += d * qd + 2 * d * kvd + qd * d
+                nf = (3 if self.mlp_gated else 2) * d * f
+                if b == "moe":
+                    n += d * self.n_experts + self.n_experts * nf
+                else:
+                    n += nf
+            elif b == "mlstm":
+                dm = 2 * d
+                n += 2 * d * dm + 3 * dm * (self.head_dim * self.n_heads) // max(self.n_heads, 1) * self.n_heads  # approx qkv
+                n += dm * d
+            elif b == "slstm":
+                n += 4 * d * d + 3 * d * self._ff_inner()
+            elif b == "rglru":
+                dl = self.d_lru
+                n += 2 * d * dl + dl * self.conv_width + 2 * dl + dl * d
+                n += 3 * d * f
+        if self.is_encoder_decoder:
+            n += self.n_encoder_layers * (4 * d * d + 2 * d * f)
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        moe_blocks = sum(1 for b in self.blocks() if b == "moe")
+        dense = self.param_count() - moe_blocks * self.n_experts * 3 * d * f
+        return dense + moe_blocks * self.moe_top_k * 3 * d * f
+
+    def _ff_inner(self) -> int:
+        # xLSTM sLSTM post-block GEGLU at ~8/3 ratio, 64-aligned
+        return max(64, int(self.d_model * 8 / 3) // 64 * 64)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple:
+    """(supported, reason). long_500k needs sub-quadratic context handling."""
+    if shape.name == "long_500k":
+        if cfg.is_encoder_decoder:
+            return False, "enc-dec: 500k decoder context out of scope"
+        if not cfg.subquadratic:
+            return False, "pure full-attention arch: 500k dense KV out of scope"
+    return True, ""
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Smoke-test scale version of an architecture (same family/pattern)."""
+    g = len(cfg.block_pattern)
+    if cfg.cross_attn_every:
+        g = cfg.cross_attn_every
+    n_layers = max(2, g)  # at least one full pattern group
+    return dataclasses.replace(
+        cfg,
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2),
+        head_dim=16,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab_size=256,
+        window=min(cfg.window, 8) if cfg.window else 0,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        moe_top_k=min(cfg.moe_top_k, 2) if cfg.moe_top_k else 0,
+        n_img_tokens=8 if cfg.n_img_tokens else 0,
+        n_encoder_layers=2 if cfg.n_encoder_layers else 0,
+        encoder_seq=16 if cfg.encoder_seq else 0,
+        lru_width=64 if cfg.lru_width else 0,
+    )

@@ -1,0 +1,16 @@
+"""h2o-danube-1.8b [dense] — llama+mistral mix, sliding-window attention [arXiv:2401.16818]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-1.8b",
+    family="dense",
+    n_layers=24,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=80,
+    d_ff=6912,
+    vocab_size=32000,
+    block_pattern=("attn",),
+    window=4096,
+)

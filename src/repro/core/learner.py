@@ -1,0 +1,110 @@
+"""JAX learners for the labeling loop.
+
+The paper trains scikit-learn logistic regression; we reimplement multinomial
+logistic regression in JAX so the identical code path scales from 784-feature
+MNIST-like vectors to LM-backbone classification heads, and so uncertainty
+scoring can use the fused Pallas kernel (repro.kernels.uncertainty) on TPU.
+
+Uncertainty = predictive entropy; point selection takes the top-k most
+uncertain of a random subsample (paper §5.3: sampling the unlabeled set has
+little accuracy impact and makes decision latency O(sample), not O(corpus)).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _fit(W, b, X, y, sw, steps: int = 120, lr: float = 0.15, l2: float = 1e-3):
+    """Full-batch Adam on weighted multinomial logistic regression."""
+
+    def loss_fn(params):
+        W, b = params
+        logits = X @ W + b
+        ll = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(ll, y[:, None], axis=1)[:, 0]
+        return jnp.sum(nll * sw) / jnp.maximum(sw.sum(), 1e-9) + l2 * jnp.sum(W * W)
+
+    grad = jax.grad(loss_fn)
+
+    def body(carry, _):
+        params, m, v, t = carry
+        g = grad(params)
+        t = t + 1
+        m = jax.tree_util.tree_map(lambda m, g: 0.9 * m + 0.1 * g, m, g)
+        v = jax.tree_util.tree_map(lambda v, g: 0.999 * v + 0.001 * g * g, v, g)
+        def upd(p, m, v):
+            mh = m / (1 - 0.9**t)
+            vh = v / (1 - 0.999**t)
+            return p - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        params = jax.tree_util.tree_map(upd, params, m, v)
+        return (params, m, v, t), None
+
+    z = jax.tree_util.tree_map(jnp.zeros_like, (W, b))
+    (params, _, _, _), _ = jax.lax.scan(
+        body, ((W, b), z, z, jnp.zeros((), jnp.int32)), None, length=steps)
+    return params
+
+
+@jax.jit
+def _proba(W, b, X):
+    return jax.nn.softmax(X @ W + b, axis=-1)
+
+
+@jax.jit
+def _entropy(W, b, X):
+    """Predictive entropy (the pure-jnp oracle of kernels/uncertainty)."""
+    logp = jax.nn.log_softmax(X @ W + b, axis=-1)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+@dataclass
+class LogisticLearner:
+    n_features: int
+    n_classes: int
+    seed: int = 0
+    steps: int = 120
+    W: jnp.ndarray = field(default=None, repr=False)
+    b: jnp.ndarray = field(default=None, repr=False)
+    version: int = 0
+
+    def __post_init__(self):
+        self.W = jnp.zeros((self.n_features, self.n_classes), jnp.float32)
+        self.b = jnp.zeros((self.n_classes,), jnp.float32)
+
+    def fit(self, X, y, sample_weight=None):
+        if len(y) == 0:
+            return self
+        X = jnp.asarray(X, jnp.float32)
+        y = jnp.asarray(y, jnp.int32)
+        sw = (jnp.ones((len(y),), jnp.float32) if sample_weight is None
+              else jnp.asarray(sample_weight, jnp.float32))
+        self.W, self.b = _fit(self.W, self.b, X, y, sw, steps=self.steps)
+        self.version += 1
+        return self
+
+    def predict_proba(self, X):
+        return np.asarray(_proba(self.W, self.b, jnp.asarray(X, jnp.float32)))
+
+    def predict(self, X):
+        return self.predict_proba(X).argmax(-1)
+
+    def score(self, X, y):
+        return float((self.predict(X) == np.asarray(y)).mean())
+
+    def uncertainty(self, X):
+        return np.asarray(_entropy(self.W, self.b, jnp.asarray(X, jnp.float32)))
+
+    def select_uncertain(self, X_pool, candidates: np.ndarray, k: int):
+        """Top-k most uncertain among `candidates` (row indices into X_pool)."""
+        if k <= 0 or len(candidates) == 0:
+            return np.array([], dtype=np.int64)
+        u = self.uncertainty(X_pool[candidates])
+        order = np.argsort(-u)
+        return candidates[order[:k]]

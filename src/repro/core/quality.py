@@ -1,0 +1,60 @@
+"""Quality control: redundancy voting and EM worker-accuracy estimation.
+
+CLAMShell's latency techniques are explicitly compatible with standard QC
+(paper §4.1 "Working with Quality Control"): a task needing v votes stays
+`active` until it has v answers, and straggler mitigation adds at most one
+duplicate per missing vote (implemented in core/lifeguard.py). This module
+provides the vote aggregation + a Dawid-Skene-style EM accuracy estimator
+used to weight votes and to drive quality-based pool maintenance.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def majority_vote(votes, n_classes: int) -> int:
+    counts = np.zeros(n_classes)
+    for label, *_ in votes:
+        counts[label] += 1
+    return int(counts.argmax())
+
+
+def weighted_vote(votes, n_classes: int, acc_by_worker: dict) -> int:
+    """Log-odds weighted vote using estimated worker accuracies."""
+    scores = np.zeros(n_classes)
+    for label, wid, *_ in votes:
+        a = np.clip(acc_by_worker.get(wid, 0.7), 0.51, 0.999)
+        w = np.log(a / (1 - a))
+        scores[label] += w
+    return int(scores.argmax())
+
+
+def em_worker_accuracy(task_votes, n_classes: int, *, iters: int = 20):
+    """One-coin Dawid-Skene EM.
+
+    task_votes: list of [(label, worker_id), ...] per task.
+    Returns (posterior_labels, acc_by_worker).
+    """
+    workers = sorted({w for votes in task_votes for _, w in votes})
+    acc = {w: 0.8 for w in workers}
+    post = [np.ones(n_classes) / n_classes for _ in task_votes]
+    for _ in range(iters):
+        # E-step: posterior over true labels
+        for i, votes in enumerate(task_votes):
+            logp = np.zeros(n_classes)
+            for label, w in votes:
+                a = np.clip(acc[w], 1e-3, 1 - 1e-3)
+                for c in range(n_classes):
+                    logp[c] += np.log(a if c == label else (1 - a) / (n_classes - 1))
+            p = np.exp(logp - logp.max())
+            post[i] = p / p.sum()
+        # M-step: worker accuracies
+        num = {w: 1.0 for w in workers}   # +1 smoothing
+        den = {w: 2.0 for w in workers}
+        for i, votes in enumerate(task_votes):
+            for label, w in votes:
+                num[w] += post[i][label]
+                den[w] += 1.0
+        acc = {w: num[w] / den[w] for w in workers}
+    labels = [int(p.argmax()) for p in post]
+    return labels, acc

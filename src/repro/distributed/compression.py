@@ -1,0 +1,53 @@
+"""Gradient compression: symmetric per-tensor int8 quantize/dequantize with
+error feedback. Applied as the train_step's ``grad_transform`` hook, it models
+a compressed gradient exchange (the dequantized values are what the optimizer
+— and therefore every replica — sees), cutting all-reduce wire bytes 4x vs
+f32. Error feedback keeps the quantization noise from biasing convergence:
+the residual (g - deq(q(g))) is added back into the next step's gradient.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads):
+    """Pure QDQ (stateless): wire format int8 + f32 scale per tensor."""
+    def qdq(g):
+        q, s = quantize_int8(g.astype(jnp.float32))
+        return dequantize_int8(q, s).astype(g.dtype)
+    return jax.tree_util.tree_map(qdq, grads)
+
+
+def make_error_feedback():
+    """Returns (init, transform): transform(grads, residual) ->
+    (compressed_grads, new_residual)."""
+
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def transform(grads, residual):
+        def one(g, r):
+            gf = g.astype(jnp.float32) + r
+            q, s = quantize_int8(gf)
+            deq = dequantize_int8(q, s)
+            return deq.astype(g.dtype), gf - deq
+        flat = jax.tree_util.tree_map(one, grads, residual)
+        comp = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        res = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        return comp, res
+
+    return init, transform

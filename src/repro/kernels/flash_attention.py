@@ -1,0 +1,130 @@
+"""Pallas TPU flash attention: causal / sliding-window / cross, with GQA.
+
+TPU-native design (not a CUDA port): the (block_q x d) query tile stays
+resident in VMEM across the whole k-sweep; k/v arrive as (block_k x d) VMEM
+tiles via BlockSpec; the online-softmax accumulators (m, l, acc) live in VMEM
+scratch and persist across the innermost grid dimension. MXU alignment: block
+sizes are multiples of 128; masked blocks are skipped with @pl.when, so causal
+attention does ~half the work (the XLA fallback in models/layers.py cannot
+skip and pays 2x — see EXPERIMENTS.md §Perf).
+
+Grid: (batch*q_heads, n_q_blocks, n_k_blocks), k innermost. GQA is expressed
+in the k/v BlockSpec index_map (q head h reads kv head h // group_size).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale, causal, window, block_q, block_k, n_k, seq_k):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # skip fully-masked tiles (causal: k block entirely after q block;
+    # window: k block entirely before the first q row's window)
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start < q_start + block_q)
+    if window > 0 and causal:
+        run = jnp.logical_and(run, k_start + block_k > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[...].astype(jnp.float32)            # (block_q, d)
+        k = k_ref[...].astype(jnp.float32)            # (block_k, d)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < seq_k                           # padded tail
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_prev * alpha + p.sum(axis=1)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[...] = (acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+                      ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, sm_scale=None,
+                    block_q=128, block_k=128, interpret=False):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D). Returns (B, Hq, Sq, D)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(D)
+
+    pq, pk = (-Sq) % block_q, (-Sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    Sq_p, Sk_p = Sq + pq, Sk + pk
+    nq, nk = Sq_p // block_q, Sk_p // block_k
+
+    qf = q.reshape(B * Hq, Sq_p, D)
+    kf = k.reshape(B * Hkv, Sk_p, D)
+    vf = v.reshape(B * Hkv, Sk_p, D)
+
+    def kv_index(bh, iq, ik):
+        return (bh // Hq) * Hkv + (bh % Hq) // G, ik, 0
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=nk, seq_k=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, block_q, D), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((None, block_k, D), kv_index),
+            pl.BlockSpec((None, block_k, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, D),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq_p, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # m
+            pltpu.VMEM((block_q,), jnp.float32),       # l
+            pltpu.VMEM((block_q, D), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Sq_p, D)[:, :, :Sq]

@@ -1,0 +1,74 @@
+"""Pallas TPU diagonal linear recurrence: h_t = a_t * h_{t-1} + b_t.
+
+The RG-LRU / sLSTM state update, blocked for the TPU memory hierarchy: the
+(block_b x block_d) state tile lives in VMEM scratch and persists across the
+sequence-chunk grid dimension (innermost), so HBM traffic is exactly one read
+of (a, b) and one write of h — the recurrence itself never leaves VMEM. Inside
+a chunk the scan runs over time with an unrolled VPU loop.
+
+Grid: (n_b_blocks, n_d_blocks, n_s_chunks), sequence innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, b_ref, h0_ref, o_ref, h_scr, *, chunk):
+    isq = pl.program_id(2)
+
+    @pl.when(isq == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)   # (block_b, chunk, block_d)
+    b = b_ref[...].astype(jnp.float32)
+    h = h_scr[...]                        # (block_b, block_d)
+
+    def body(t, carry):
+        h, out = carry
+        h = a[:, t, :] * h + b[:, t, :]
+        out = jax.lax.dynamic_update_slice_in_dim(out, h[:, None, :], t, axis=1)
+        return h, out
+
+    out0 = jnp.zeros(a.shape, jnp.float32)
+    h, out = jax.lax.fori_loop(0, chunk, body, (h, out0))
+    h_scr[...] = h
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def linear_scan(a, b, h0=None, *, block_b=8, block_d=128, chunk=256,
+                interpret=False):
+    """a, b: (B, S, D); h0: (B, D) or None. Returns h: (B, S, D)."""
+    B, S, D = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), a.dtype)
+    pb, pd, ps = (-B) % block_b, (-D) % block_d, (-S) % chunk
+    if pb or pd or ps:
+        a = jnp.pad(a, ((0, pb), (0, ps), (0, pd)))
+        b = jnp.pad(b, ((0, pb), (0, ps), (0, pd)))
+        h0 = jnp.pad(h0, ((0, pb), (0, pd)))
+    Bp, Sp, Dp = a.shape
+    grid = (Bp // block_b, Dp // block_d, Sp // chunk)
+
+    out = pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, chunk, block_d),
+                         lambda ib, id_, isq: (ib, isq, id_)),
+            pl.BlockSpec((block_b, chunk, block_d),
+                         lambda ib, id_, isq: (ib, isq, id_)),
+            pl.BlockSpec((block_b, block_d), lambda ib, id_, isq: (ib, id_)),
+        ],
+        out_specs=pl.BlockSpec((block_b, chunk, block_d),
+                               lambda ib, id_, isq: (ib, isq, id_)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Sp, Dp), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, block_d), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return out[:B, :S, :D]

@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the Mosaic path runs; on CPU (this container, tests, dry-run) the
+kernels execute in interpret mode, which runs the kernel body in Python and
+validates the BlockSpec tiling. ``impl='ref'`` selects the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.linear_scan import linear_scan as _lscan
+from repro.kernels.uncertainty import entropy_scores as _entropy
+from repro.kernels.xent import streaming_xent as _xent
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl"))
+def attention(q, k, v, *, causal=True, window=0, impl="auto"):
+    """q: (B,Hq,S,D); k,v: (B,Hkv,S,D)."""
+    if impl == "ref":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window)
+    return _flash(q, k, v, causal=causal, window=window,
+                  interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def linear_scan(a, b, h0=None, *, impl="auto"):
+    if impl == "ref":
+        return _ref.linear_scan_ref(a, b, h0)
+    return _lscan(a, b, h0, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def entropy_scores(logits, *, impl="auto"):
+    if impl == "ref":
+        return _ref.entropy_ref(logits)
+    return _entropy(logits, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def streaming_xent(logits, targets, *, impl="auto"):
+    if impl == "ref":
+        return _ref.xent_ref(logits, targets)
+    return _xent(logits, targets, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def uncertainty_topk(logits, k: int):
+    """Fused point selection: entropy scores -> top-k candidate indices.
+    This is CLAMShell's uncertainty sampler as one TPU-side op."""
+    scores = _entropy(logits, interpret=not _on_tpu())
+    return jax.lax.top_k(scores, k)

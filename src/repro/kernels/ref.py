@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, sm_scale=None):
+    """q: (B,Hq,Sq,D); k,v: (B,Hkv,Sk,D). Full materialized attention."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(D)
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * sm_scale
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= qp - kp < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def linear_scan_ref(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t. a, b: (B, S, D); h0: (B, D) or None."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def comb(l, r):
+        return (l[0] * r[0], l[1] * r[0] + r[1])
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h
+
+
+def entropy_ref(logits):
+    """Predictive entropy per row. logits: (N, V) -> (N,)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+def margin_ref(logits):
+    """Top-1 minus top-2 probability margin (low margin = uncertain)."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top2 = jax.lax.top_k(p, 2)[0]
+    return top2[..., 0] - top2[..., 1]
+
+
+def xent_ref(logits, targets):
+    """Per-row cross entropy. logits: (N, V), targets: (N,) -> (N,)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    lt = jnp.take_along_axis(logits.astype(jnp.float32),
+                             targets[:, None], axis=1)[:, 0]
+    return lse - lt

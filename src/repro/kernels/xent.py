@@ -1,0 +1,76 @@
+"""Pallas TPU streaming-vocab cross entropy: loss_i = LSE(logits_i) - l_target.
+
+For 150k-256k vocabularies (qwen2.5, recurrentgemma) the f32 softmax over
+logits is a dominant HBM term in the XLA loss. This kernel streams logit tiles
+through VMEM with running (m, Z) per row, picks the target logit from the tile
+that contains it, and never materializes probabilities.
+
+Grid: (n_row_blocks, n_vocab_blocks), vocab innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _xent_kernel(x_ref, t_ref, o_ref, m_scr, z_scr, lt_scr, *, n_v, v_total,
+                 block_v):
+    iv = pl.program_id(1)
+
+    @pl.when(iv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        z_scr[...] = jnp.zeros_like(z_scr)
+        lt_scr[...] = jnp.zeros_like(lt_scr)
+
+    x = x_ref[...].astype(jnp.float32)                 # (block_n, block_v)
+    col = iv * block_v + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    x = jnp.where(col < v_total, x, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, x.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(col < v_total, jnp.exp(x - m_new[:, None]), 0.0)
+    z_scr[...] = z_scr[...] * alpha + p.sum(axis=1)
+    m_scr[...] = m_new
+
+    t = t_ref[...]                                     # (block_n,)
+    hit = col == t[:, None]
+    lt_scr[...] = lt_scr[...] + jnp.sum(jnp.where(hit, x, 0.0), axis=1)
+
+    @pl.when(iv == n_v - 1)
+    def _fin():
+        o_ref[...] = (m_scr[...] + jnp.log(jnp.maximum(z_scr[...], 1e-30))
+                      - lt_scr[...]).astype(o_ref.dtype)
+
+
+def streaming_xent(logits, targets, *, block_n=256, block_v=512,
+                   interpret=False):
+    """logits: (N, V), targets: (N,) int32 -> per-row loss (N,) float32."""
+    N, V = logits.shape
+    pn, pv = (-N) % block_n, (-V) % block_v
+    if pn or pv:
+        logits = jnp.pad(logits, ((0, pn), (0, pv)))
+        targets = jnp.pad(targets, ((0, pn),))
+    Np, Vp = logits.shape
+    n_v = Vp // block_v
+
+    out = pl.pallas_call(
+        functools.partial(_xent_kernel, n_v=n_v, v_total=V, block_v=block_v),
+        grid=(Np // block_n, n_v),
+        in_specs=[
+            pl.BlockSpec((block_n, block_v), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_n,), jnp.float32)] * 3,
+        interpret=interpret,
+    )(logits, targets)
+    return out[:N]

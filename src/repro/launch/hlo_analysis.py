@@ -1,0 +1,367 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` visits while-loop bodies ONCE, so
+any scan-over-layers / grad-accumulation model is undercounted by ~n_layers x
+n_microbatches. This module re-derives the three roofline inputs directly from
+the post-SPMD-partitioning HLO text (``compiled.as_text()``), propagating
+``known_trip_count`` multipliers through the call graph:
+
+  * flops           — 2 * |result| * prod(lhs contracting dims) per dot op
+  * hbm bytes       — sum over top-level instructions of result+operand bytes
+                      (fusion granularity approximates post-fusion HBM traffic)
+  * collective wire — per-op bytes scaled by kind-specific wire factors:
+        all-reduce      2*R*(g-1)/g     (ring: reduce-scatter + all-gather)
+        all-gather      R*(g-1)/g       (R = gathered result)
+        reduce-scatter  R*(g-1)         (operand = R*g)
+        all-to-all      R*(g-1)/g
+        collective-permute R
+
+All quantities are PER DEVICE (the partitioned module is the per-device
+program).
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*->")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_elems_bytes(type_str):
+    """Total (elements, bytes) over all array shapes in a type string."""
+    elems = tot = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        tot += n * DTYPE_BYTES[dt]
+    return elems, tot
+
+
+def _split_computations(text):
+    comps, name, lines = {}, None, []
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("}"):
+            if name:
+                comps[name] = lines
+            name, lines = None, []
+        elif not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_RE.match(line)
+            if m:
+                name = m.group(1)
+                if line.startswith("ENTRY"):
+                    entry = name
+                lines = []
+        elif name is not None:
+            lines.append(line)
+    return comps, entry
+
+
+def _balanced(s, start=0):
+    """End index (exclusive) of the paren group opening at s[start]."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _parse_instr(line):
+    """Procedural parse: handles tuple types with /*index=N*/ comments."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rest = s[eq + 3 :]
+    if rest.startswith("("):
+        end = _balanced(rest, 0)
+        type_str, rest2 = rest[:end], rest[end:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest2 = rest[:sp], rest[sp + 1 :].lstrip()
+    m = re.match(r"([\w\-]+)\(", rest2)
+    if not m:
+        return None
+    op = m.group(1)
+    args = rest2[len(op) + 1 : _balanced(rest2, len(op)) - 1]
+    return {"name": name, "type": type_str, "op": op, "args": args,
+            "line": line}
+
+
+def _operand_names(ins):
+    return re.findall(r"%([\w.\-]+)", ins["args"])
+
+
+def _group_size(line, default=1):
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [n_groups,group_size]
+        return int(m.group(2))
+    return default
+
+
+def _wire_bytes(op, res_bytes, g):
+    if g <= 1:
+        g = 2  # conservative: unknown groups still move data
+    if op == "all-reduce":
+        return 2.0 * res_bytes * (g - 1) / g
+    if op == "all-gather":
+        return res_bytes * (g - 1) / g
+    if op == "reduce-scatter":
+        return res_bytes * (g - 1)
+    if op == "all-to-all":
+        return res_bytes * (g - 1) / g
+    return float(res_bytes)  # collective-permute
+
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota",
+}
+
+
+def analyze_hlo(text):
+    comps, entry = _split_computations(text)
+    parsed = {}
+    for cname, lines in comps.items():
+        instrs, types = [], {}
+        for line in lines:
+            ins = _parse_instr(line)
+            if ins:
+                instrs.append(ins)
+                types[ins["name"]] = ins["type"]
+        parsed[cname] = (instrs, types)
+
+    # Slice-aware traffic model. A fusion whose body slices a big operand
+    # (dynamic-slice / gather of a stacked layer-weight array inside a scan)
+    # reads only the slice, not the operand; dynamic-update-slice writes only
+    # the update. _fusion_profile inspects a fusion body once and reports
+    # which call-site operands are slice-consumed and whether the root is DUS.
+    _SLICERS = {"dynamic-slice", "gather"}
+    _UPDATERS = {"dynamic-update-slice", "scatter"}
+
+    def _fusion_profile(cname):
+        instrs, types = parsed.get(cname, ([], {}))
+        inner = 0.0                 # traffic from slicing ops inside the body
+        sliced = set()              # names of slice-consumed values
+        root_is_dus = False
+        param_idx = {}              # body param name -> call-site operand idx
+        for ins in instrs:
+            if ins["op"] == "parameter":
+                m = re.match(r"(\d+)", ins["args"])
+                if m:
+                    param_idx[ins["name"]] = int(m.group(1))
+            ops_ = _operand_names(ins)
+            _, rb = _shape_elems_bytes(ins["type"])
+            if ins["op"] in _SLICERS:
+                inner += 2 * rb  # read slice + write result
+                if ops_:
+                    sliced.add(ops_[0])
+            elif ins["op"] in _UPDATERS:
+                upd = types.get(ops_[1], "") if len(ops_) > 1 else ""
+                _, ub = _shape_elems_bytes(upd)
+                inner += 2 * ub
+                if ops_:
+                    sliced.add(ops_[0])
+                if "ROOT" in ins["line"]:
+                    root_is_dus = True
+        sliced_operand_idx = {param_idx[n] for n in sliced if n in param_idx}
+        return inner, sliced_operand_idx, root_is_dus
+
+    fusion_profiles = {}
+
+    # per-computation local costs and call edges
+    local = {}
+    for cname, (instrs, types) in parsed.items():
+        flops = hbm = 0.0
+        coll = defaultdict(float)
+        coll_ops = []
+        hbm_ops = []
+        edges = []  # (callee, multiplier)
+        for ins in instrs:
+            op, line = ins["op"], ins["line"]
+            res_elems, res_bytes = _shape_elems_bytes(ins["type"])
+            hbm_before = hbm
+            if op == "dot":
+                ops_ = _operand_names(ins)
+                lhs_t = types.get(ops_[0], "") if ops_ else ""
+                mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                cdims = [int(d) for d in mdims.group(1).split(",")] if (
+                    mdims and mdims.group(1)) else []
+                sm = _SHAPE_RE.search(lhs_t)
+                k = 1
+                if sm and sm.group(2):
+                    dims = [int(d) for d in sm.group(2).split(",")]
+                    for c in cdims:
+                        if c < len(dims):
+                            k *= dims[c]
+                flops += 2.0 * res_elems * k
+            elif op == "convolution":
+                flops += 2.0 * res_elems  # lower bound; convs are stubs here
+            if op in COLLECTIVES or (
+                op.endswith("-start") and op[:-6] in COLLECTIVES
+            ):
+                kind = op[:-6] if op.endswith("-start") else op
+                w = _wire_bytes(kind, res_bytes, _group_size(line))
+                # XLA:CPU's AllReducePromotion pass upcasts bf16 all-reduces
+                # to f32 ("..._promoted" reducers); the TPU target reduces
+                # natively in bf16, so charge wire at bf16 width.
+                if "_promoted" in line:
+                    w *= 0.5
+                coll[kind] += w
+                coll_ops.append((kind, res_bytes, w, line.strip()[:200]))
+            # HBM traffic at top-level (fusion) granularity
+            if op in ("while", "conditional", "call"):
+                pass  # bodies are charged separately; carried buffers alias
+            elif op in _SLICERS:
+                hbm += 2 * res_bytes
+            elif op in _UPDATERS:
+                ops_ = _operand_names(ins)
+                upd = types.get(ops_[1], "") if len(ops_) > 1 else ""
+                _, ub = _shape_elems_bytes(upd)
+                hbm += 2 * ub
+            elif op == "fusion":
+                to = re.search(r"calls=%?([\w.\-]+)", line)
+                callee = to.group(1) if to else None
+                if callee not in fusion_profiles:
+                    fusion_profiles[callee] = _fusion_profile(callee)
+                inner, sliced_idx, root_is_dus = fusion_profiles[callee]
+                hbm += inner
+                if not root_is_dus:
+                    hbm += res_bytes
+                for i, o in enumerate(_operand_names(ins)):
+                    if i in sliced_idx:
+                        continue  # slice-consumed: charged via `inner`
+                    _, b = _shape_elems_bytes(types.get(o, ""))
+                    hbm += b
+            elif op == "copy" and cname != entry and res_bytes > (64 << 20):
+                # XLA:CPU inserts full-size copies of while-carried stacks
+                # (remat/scan ys) inside loop bodies; XLA:TPU aliases these
+                # in place. Target-model: charge nothing for carried-stack
+                # copies, keep small layout copies.
+                pass
+            elif op not in _FREE_OPS and not op.endswith("-done"):
+                operand_bytes = 0
+                for o in _operand_names(ins):
+                    _, b = _shape_elems_bytes(types.get(o, ""))
+                    operand_bytes += b
+                hbm += res_bytes + operand_bytes
+            if hbm - hbm_before > 0:
+                hbm_ops.append((hbm - hbm_before, op, line.strip()[:160]))
+            # call edges
+            if op == "while":
+                body = re.search(r"body=%?([\w.\-]+)", line)
+                cond = re.search(r"condition=%?([\w.\-]+)", line)
+                trip = re.search(r'known_trip_count[^{]*\{"n":"(\d+)"\}', line)
+                t = int(trip.group(1)) if trip else 1
+                if body:
+                    edges.append((body.group(1), t))
+                if cond:
+                    edges.append((cond.group(1), t))
+            elif op in ("call", "fusion", "async-start"):
+                to = re.search(r"(?:to_apply|calls)=%?([\w.\-]+)", line)
+                if to and op == "call":
+                    edges.append((to.group(1), 1))
+                # fusion bodies: costs already counted at the fusion instr
+            elif op == "conditional":
+                for mm in re.finditer(
+                    r"(?:true_computation|false_computation|branch_computations=\{)"
+                    r"=?%?([\w.\-,% ]+)", line
+                ):
+                    for nm in re.findall(r"[\w.\-]+", mm.group(1)):
+                        edges.append((nm, 1))
+        hbm_ops.sort(reverse=True)
+        local[cname] = {
+            "flops": flops, "hbm": hbm, "coll": dict(coll),
+            "coll_ops": coll_ops, "hbm_ops": hbm_ops[:8], "edges": edges,
+        }
+
+    # propagate multipliers from the entry computation
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        c = order[i]
+        i += 1
+        for callee, t in local.get(c, {}).get("edges", []):
+            if callee in local:
+                mult[callee] += mult[c] * t
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    total = {"flops": 0.0, "hbm_bytes": 0.0, "collective_wire_bytes": 0.0}
+    by_kind = defaultdict(float)
+    top_ops = []
+    top_hbm = []
+    for cname, lc in local.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        total["flops"] += m * lc["flops"]
+        total["hbm_bytes"] += m * lc["hbm"]
+        for k, v in lc["coll"].items():
+            by_kind[k] += m * v
+            total["collective_wire_bytes"] += m * v
+        for kind, rb, w, line in lc["coll_ops"]:
+            top_ops.append({"kind": kind, "result_bytes": rb,
+                            "wire_x_trips": m * w, "line": line})
+        for b, op, line in lc["hbm_ops"]:
+            top_hbm.append({"op": op, "bytes_x_trips": m * b, "line": line})
+    top_ops.sort(key=lambda d: -d["wire_x_trips"])
+    top_hbm.sort(key=lambda d: -d["bytes_x_trips"])
+    total["collective_by_kind"] = dict(by_kind)
+    total["top_collectives"] = top_ops[:12]
+    total["top_hbm"] = top_hbm[:12]
+    return total
+
+
+# hardware constants (TPU v5e-class target per the brief)
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+LINK_BW = 50e9            # bytes/s / link (ICI)
+
+
+def roofline_terms(analysis, *, peak=PEAK_FLOPS, hbm=HBM_BW, link=LINK_BW):
+    """Three roofline terms in seconds (per device == per chip)."""
+    return {
+        "compute_s": analysis["flops"] / peak,
+        "memory_s": analysis["hbm_bytes"] / hbm,
+        "collective_s": analysis["collective_wire_bytes"] / link,
+    }

@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct stand-ins for every model input of every workload cell.
+
+No device allocation ever happens here — everything is abstract, which is what
+lets the dry-run lower + compile 14B-40B configs on a CPU host.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import init_cache
+from repro.models.params import abstract_params
+from repro.models.model import model_template
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract inputs for the step function of this (arch x shape) cell.
+
+    train   -> {"tokens","targets"[,"cross_src"]}
+    prefill -> {"tokens"[,"cross_src"]}
+    decode  -> {"tokens" (B,1), "positions" (B,), "cache": <pytree>}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    if shape.kind == "train":
+        batch = {"tokens": _sds((B, S), jnp.int32),
+                 "targets": _sds((B, S), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            batch["cross_src"] = _sds((B, cfg.encoder_seq, d), jnp.bfloat16)
+        elif cfg.n_img_tokens:
+            batch["cross_src"] = _sds((B, cfg.n_img_tokens, d), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            batch["cross_src"] = _sds((B, cfg.encoder_seq, d), jnp.bfloat16)
+        elif cfg.n_img_tokens:
+            batch["cross_src"] = _sds((B, cfg.n_img_tokens, d), jnp.bfloat16)
+        return batch
+    if shape.kind == "decode":
+        cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+        return {
+            "tokens": _sds((B, 1), jnp.int32),
+            "positions": _sds((B,), jnp.int32),
+            "cache": cache,
+        }
+    raise ValueError(shape.kind)
+
+
+def abstract_model(cfg: ModelConfig, dtype=jnp.float32):
+    return abstract_params(model_template(cfg), dtype)
+
+
+def abstract_train_state(cfg: ModelConfig, dtype=jnp.float32):
+    p = abstract_model(cfg, dtype)
+    zf = lambda s: jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), s)
+    return {
+        "params": p,
+        "opt_state": {"mu": zf(p), "nu": zf(p),
+                      "count": _sds((), jnp.int32)},
+        "step": _sds((), jnp.int32),
+    }

@@ -1,0 +1,51 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --steps 100
+
+On a real TPU pod this runs under the production mesh with FSDPxTP sharding;
+on this CPU host it runs the same Trainer single-device (the dry-run proves
+the sharded lowering for every arch x shape — see repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, reduced
+from repro.data.corpus import CorpusConfig
+from repro.training.trainer import Trainer, TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m", choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config of the same family")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compression", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = reduced(cfg)
+    corpus = CorpusConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch, seed=0,
+                          n_shards=jax.process_count(),
+                          shard_id=jax.process_index())
+    tc = TrainConfig(steps=args.steps, lr=args.lr,
+                     microbatches=args.microbatches,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                     compression=args.compression)
+    trainer = Trainer(cfg, corpus, tc)
+    trainer.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,443 @@
+"""Core transformer layers: norms, RoPE, attention (direct / XLA-flash /
+banded-SWA / decode), MLP, and capacity-routed MoE.
+
+Memory discipline: full score matrices are never materialized for long
+sequences — training/prefill attention runs as a nested-chunk online-softmax
+scan (the pure-jnp analogue of the Pallas flash kernel in
+``repro.kernels.flash_attention``; that kernel replaces this path on TPU).
+Sliding-window attention gathers a per-q-chunk KV band so FLOPs stay
+O(S * window) instead of O(S^2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import PSpec
+
+# ---------------------------------------------------------------- norms ----
+
+
+def norm_template(d, kind):
+    t = {"scale": PSpec((d,), ("embed",), "ones")}
+    if kind == "layernorm":
+        t["bias"] = PSpec((d,), ("embed",), "zeros")
+    return t
+
+
+def apply_norm(p, x, kind, eps):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = (xf**2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+
+
+def rope(x, positions, theta):
+    """x: (..., S, H, D), positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, D/2)
+    if ang.ndim == x.ndim - 2:  # add batch dim
+        ang = jnp.broadcast_to(ang, x.shape[:-3] + ang.shape)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+
+_NEG = -1e30
+
+
+def _scores_mask(q_pos, k_pos, causal, window):
+    """(..., Sq, Sk) additive mask from position vectors."""
+    valid = k_pos[..., None, :] >= 0  # negative k_pos marks invalid slots
+    if causal:
+        valid &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        valid &= q_pos[..., :, None] - k_pos[..., None, :] < window
+    return jnp.where(valid, 0.0, _NEG)
+
+
+def _attn_direct(q, k, v, q_pos, k_pos, causal, window, mixed=False):
+    """q: (B,Sq,Hkv,G,D), k/v: (B,Sk,Hkv,D). Full score materialization.
+
+    mixed=True keeps operands bf16 with f32 MXU accumulation
+    (preferred_element_type) instead of upcasting in HBM — §Perf lever."""
+    scale = q.shape[-1] ** -0.5
+    if mixed:
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                       preferred_element_type=jnp.float32)
+    else:
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32))
+    s = s * scale + _scores_mask(q_pos, k_pos, causal, window)[:, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o
+
+
+def _attn_flash_xla(q, k, v, q_pos, k_pos, causal, window, cq=512, ck=1024,
+                    mixed=False):
+    """Nested-chunk online-softmax attention (pure jnp flash).
+
+    Outer lax.map over q chunks, inner lax.scan over kv chunks; peak score
+    memory is (B, Hkv, G, cq, ck) regardless of sequence length.
+    """
+    B, Sq, Hkv, G, D = q.shape
+    Sk = k.shape[1]
+    cq = min(cq, Sq)
+    ck = min(ck, Sk)
+    # pad ragged sequence lengths; padded k slots get k_pos=-1 (masked out)
+    pq, pk = (-Sq) % cq, (-Sk) % ck
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pq)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pk)), constant_values=-1)
+    Sq_p, Sk_p = Sq + pq, Sk + pk
+    nq, nk = Sq_p // cq, Sk_p // ck
+    scale = D**-0.5
+
+    qs = q.reshape(B, nq, cq, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    qps = q_pos.reshape(B, nq, cq).transpose(1, 0, 2)
+    ks = k.reshape(B, nk, ck, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, ck, Hkv, D).transpose(1, 0, 2, 3, 4)
+    kps = k_pos.reshape(B, nk, ck).transpose(1, 0, 2)
+
+    def q_body(args):
+        qc, qp = args  # (B,cq,Hkv,G,D), (B,cq)
+
+        def kv_body(carry, xs):
+            m, l, acc = carry
+            kc, vc, kp = xs
+            if mixed:
+                s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                               preferred_element_type=jnp.float32) * scale
+            else:
+                s = jnp.einsum("bqhgd,bkhd->bhgqk", qc.astype(jnp.float32),
+                               kc.astype(jnp.float32)) * scale
+            s = s + _scores_mask(qp, kp, causal, window)[:, None, None]
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            if mixed:
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+                    preferred_element_type=jnp.float32)
+            else:
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, cq, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (ks, vs, kps))
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        return o.transpose(0, 3, 1, 2, 4)  # (B,cq,Hkv,G,D)
+
+    o = jax.lax.map(q_body, (qs, qps))  # (nq,B,cq,Hkv,G,D)
+    o = o.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq_p, Hkv, G, D)
+    return o[:, :Sq].astype(v.dtype)
+
+
+def _attn_band(q, k, v, q_pos, k_pos, causal, window, cq=512, mixed=False):
+    """Sliding-window attention via per-q-chunk KV bands: O(S*(window+cq))."""
+    B, Sq, Hkv, G, D = q.shape
+    Sk = k.shape[1]
+    cq = min(cq, Sq)
+    nq = Sq // cq
+    band = window + cq
+    if band >= Sk:
+        return _attn_flash_xla(q, k, v, q_pos, k_pos, causal, window,
+                               mixed=mixed)
+
+    qs = q.reshape(B, nq, cq, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    qps = q_pos.reshape(B, nq, cq).transpose(1, 0, 2)
+    idx = jnp.arange(nq)
+
+    def q_body(args):
+        qc, qp, i = args
+        start = jnp.clip((i + 1) * cq - band, 0, Sk - band)
+        kc = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        kp = jax.lax.dynamic_slice_in_dim(k_pos, start, band, axis=1)
+        return _attn_direct(qc, kc, vc, qp, kp, causal, window, mixed=mixed)
+
+    o = jax.lax.map(q_body, (qs, qps, idx))
+    return o.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hkv, G, D).astype(v.dtype)
+
+
+def attention(q, k, v, *, q_pos, k_pos, causal=True, window=0, impl="auto",
+              mixed=False):
+    """GQA attention. q: (B,Sq,Hq,D); k,v: (B,Sk,Hkv,D). Returns (B,Sq,Hq,D).
+
+    ``impl``: auto | direct | flash_xla | band — 'auto' picks direct for short
+    or decode shapes, band for SWA, flash_xla otherwise. (On TPU the Pallas
+    kernel in repro.kernels takes this path's place via stepfn wiring.)
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None], (B, Sq))
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos[None], (B, k.shape[1]))
+
+    if impl == "auto":
+        if Sq <= 1024 or Sq * k.shape[1] <= 1 << 22:
+            impl = "direct"
+        elif window > 0 and causal:
+            impl = "band"
+        else:
+            impl = "flash_xla"
+    kw = {"mixed": mixed}
+    if ":" in impl:  # e.g. "flash_xla:1024:4096" -> cq=1024, ck=4096 (§Perf)
+        parts = impl.split(":")
+        impl = parts[0]
+        kw["cq"] = int(parts[1])
+        if impl == "flash_xla" and len(parts) > 2:
+            kw["ck"] = int(parts[2])
+    fn = {
+        "direct": _attn_direct,
+        "flash_xla": _attn_flash_xla,
+        "band": _attn_band,
+    }[impl]
+    o = fn(qg, k, v, q_pos, k_pos, causal, window, **kw)
+    return o.reshape(B, Sq, Hq, D).astype(v.dtype)
+
+
+# ------------------------------------------------------- attention block ----
+
+
+def attn_template(cfg, cross=False):
+    d = cfg.d_model
+    qd = cfg.n_heads * cfg.head_dim
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    t = {
+        "wq": PSpec((d, qd), ("embed", "heads")),
+        "wk": PSpec((d, kvd), ("embed", "kv")),
+        "wv": PSpec((d, kvd), ("embed", "kv")),
+        "wo": PSpec((qd, d), ("heads", "embed")),
+        "norm": norm_template(d, cfg.norm),
+    }
+    if cfg.qkv_bias and not cross:
+        t["bq"] = PSpec((qd,), ("heads",), "zeros")
+        t["bk"] = PSpec((kvd,), ("kv",), "zeros")
+        t["bv"] = PSpec((kvd,), ("kv",), "zeros")
+    return t
+
+
+def _proj_qkv(p, x, cfg):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+# ------------------------------------------------------------------ mlp ----
+
+
+def mlp_template(cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    t = {
+        "w_up": PSpec((d, f), ("embed", "ffn")),
+        "w_down": PSpec((f, d), ("ffn", "embed")),
+        "norm": norm_template(d, cfg.norm),
+    }
+    if cfg.mlp_gated:
+        t["w_gate"] = PSpec((d, f), ("embed", "ffn"))
+    return t
+
+
+def apply_mlp(p, x, cfg):
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = x @ p["w_up"]
+    if cfg.mlp_gated:
+        h = act(x @ p["w_gate"]) * h
+    else:
+        h = act(h)
+    return h @ p["w_down"]
+
+
+# ------------------------------------------------------------------ moe ----
+
+
+def moe_template(cfg):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": PSpec((d, E), ("embed", "experts_dim")),
+        "w_gate": PSpec((E, d, f), ("experts", "embed", "ffn")),
+        "w_up": PSpec((E, d, f), ("experts", "embed", "ffn")),
+        "w_down": PSpec((E, f, d), ("experts", "ffn", "embed")),
+        "norm": norm_template(d, cfg.norm),
+    }
+
+
+def apply_moe(p, x, cfg, cons=None, groups=1):
+    """Capacity-routed top-k MoE with GROUP-LOCAL argsort dispatch.
+
+    ``groups`` is set to the number of data shards by the launcher: tokens are
+    reshaped to (G, T/G) and sorted/scattered within their group, so under
+    pjit every dispatch op is shard-local — no cross-device scatter, no
+    involuntary replication (a global argsort routes through all-to-alls and
+    blows up both memory and the collective term; see EXPERIMENTS.md).
+    Capacity is per group (= per device), the production semantics anyway.
+
+    FLOPs stay proportional to *active* params: E*C_g*G = top_k * T * c_f.
+    Overflowed tokens are dropped (standard token-choice semantics).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    T = B * S
+    G = groups if T % groups == 0 else 1
+    Tg = T // G
+    xf = x.reshape(G, Tg, d)
+    if cons is not None:
+        xf = cons(xf, ("batch", "seq", "embed_act"))
+
+    logits = (xf @ p["router"]).astype(jnp.float32)               # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                          # (G, Tg, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    C = int(max(8, -(-k * Tg * cfg.capacity_factor // E)))        # per-group cap
+    slots_e = topi.reshape(G, Tg * k)
+    order = jnp.argsort(slots_e, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(slots_e, order, axis=-1)
+    # rank within each expert run (group-local)
+    first = jax.vmap(
+        lambda se: jnp.searchsorted(se, se, side="left"))(sorted_e)
+    rank = jnp.arange(Tg * k)[None] - first
+    keep = rank < C
+    dest = jnp.where(keep, sorted_e * C + rank, E * C)            # E*C = drop bin
+    tok = order // k                                              # source token
+
+    gidx = jnp.arange(G)[:, None]
+    xe = jnp.zeros((G, E * C + 1, d), x.dtype).at[gidx, dest].set(
+        xf[gidx, tok])
+    xe = xe[:, :-1].reshape(G, E, C, d)
+    if cons is not None:  # groups over DP, ffn over TP
+        xe = cons(xe, ("batch", "experts_act", "seq", "embed_act"))
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) * jnp.einsum(
+        "gecd,edf->gecf", xe, p["w_up"]
+    )
+    if cons is not None:
+        h = cons(h, ("batch", "experts_act", "seq", "ffn_act"))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"]).reshape(G, E * C, d)
+
+    w_slot = jnp.take_along_axis(topw.reshape(G, Tg * k), order, axis=-1)
+    ys = jnp.where(keep[..., None],
+                   ye[gidx, jnp.clip(dest, 0, E * C - 1)], 0.0)
+    out = jnp.zeros((G, Tg, d), x.dtype).at[gidx, tok].add(
+        (ys * w_slot[..., None]).astype(x.dtype))
+    # aux load-balancing loss (switch-style), averaged over groups
+    me = probs.mean((0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[slots_e.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, S, d), aux
+
+
+def _moe_local(p_local, x_flat, cfg):
+    """Device-local capacity dispatch + expert FFN on local weight shards.
+
+    x_flat: (T_l, d) local tokens; weights: w_gate/w_up (E, d, f_l),
+    w_down (E, f_l, d), router (d, E). Returns a PARTIAL (T_l, d) output that
+    the caller psums over the model axis, plus local aux-loss stats.
+    """
+    T, d = x_flat.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    logits = (x_flat @ p_local["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    C = int(max(8, -(-k * T * cfg.capacity_factor // E)))
+    slots_e = topi.reshape(-1)
+    order = jnp.argsort(slots_e, stable=True)
+    sorted_e = slots_e[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(T * k) - first
+    keep = rank < C
+    dest = jnp.where(keep, sorted_e * C + rank, E * C)
+    tok = order // k
+
+    xe = jnp.zeros((E * C + 1, d), x_flat.dtype).at[dest].set(x_flat[tok])
+    xe = xe[:-1].reshape(E, C, d)
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", xe, p_local["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p_local["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p_local["w_down"]).reshape(E * C, d)
+    # route weights cast to the activation dtype BEFORE the multiply: an f32
+    # w_slot promotes the whole (T*k, d) slot pipeline to f32 and doubles its
+    # HBM traffic (measured on granite train_4k — EXPERIMENTS.md §Perf).
+    w_slot = topw.reshape(-1)[order].astype(x_flat.dtype)
+    ys = jnp.where(keep[:, None], ye[jnp.clip(dest, 0, E * C - 1)], 0.0)
+    out = jnp.zeros((T, d), x_flat.dtype).at[tok].add(ys * w_slot[:, None])
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[slots_e].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce)
+    return out, aux
+
+
+def apply_moe_shardmap(p, x, cfg, mesh):
+    """Production MoE: shard_map-local dispatch with explicit collectives.
+
+    GSPMD mishandles capacity scatters (it partial-scatters over the model
+    axis and all-reduces multi-GB buffers — see EXPERIMENTS.md §Dry-run). With
+    shard_map the dispatch is device-local by construction; the only
+    communication is (a) the FSDP all-gather of expert weights over 'data' and
+    (b) one psum of the (T_l, d) combined output over 'model' — identical in
+    shape to a dense TP MLP's output reduction.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    B, S, d = x.shape
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def inner(router, wg, wu, wd, xl):
+        router = jax.lax.all_gather(router, "data", axis=0, tiled=True)
+        wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+        wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+        wd = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+        bl, sl, _ = xl.shape
+        p_local = {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}
+        out, aux = _moe_local(p_local, xl.reshape(bl * sl, d), cfg)
+        out = jax.lax.psum(out, "model")          # TP output reduction
+        aux = jax.lax.pmean(aux, ba + ("model",))
+        return out.reshape(bl, sl, d), aux
+
+    fn = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P("data", None), P(None, "data", "model"),
+                  P(None, "data", "model"), P(None, "model", "data"),
+                  P(ba, None, None)),
+        out_specs=(P(ba, None, None), P()),
+        check_vma=False,
+    )
+    return fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)

@@ -1,0 +1,384 @@
+"""Model assembly: embedding -> scan-over-layer-groups -> norm -> unembed.
+
+Layer stacks are homogeneous pattern groups scanned with stacked parameters
+(`jax.lax.scan`), so XLA compiles ONE group body per architecture regardless of
+depth — this keeps the 80-cell dry-run tractable and makes checkpoints
+elastic-friendly. Non-tiling tails (e.g. recurrentgemma's 26 = 8*3 + 2) are
+applied unrolled.
+
+One ``forward`` serves training (no cache), prefill (builds cache) and decode
+(consumes + updates cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import recurrent as R
+from repro.models.params import PSpec, tree_stack_template
+
+# ----------------------------------------------------------- templates ----
+
+
+def block_template(cfg, kind):
+    if kind == "attn":
+        return {"attn": L.attn_template(cfg), "mlp": L.mlp_template(cfg)}
+    if kind == "xattn":
+        return {
+            "attn": L.attn_template(cfg),
+            "xattn": L.attn_template(cfg, cross=True),
+            "mlp": L.mlp_template(cfg),
+        }
+    if kind == "moe":
+        return {"attn": L.attn_template(cfg), "moe": L.moe_template(cfg)}
+    if kind == "mlstm":
+        return {"mlstm": R.mlstm_template(cfg)}
+    if kind == "slstm":
+        return {"slstm": R.slstm_template(cfg)}
+    if kind == "rglru":
+        return {"rglru": R.rglru_template(cfg), "mlp": L.mlp_template(cfg)}
+    raise ValueError(kind)
+
+
+def model_template(cfg):
+    group, n_full, rem = cfg.layer_groups()
+    t = {
+        "embed": PSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), "embed"),
+        "final_norm": L.norm_template(cfg.d_model, cfg.norm),
+        "groups": tree_stack_template(
+            tuple(block_template(cfg, k) for k in group), n_full
+        ),
+        "tail": tuple(block_template(cfg, k) for k in rem),
+    }
+    if not cfg.tie_embeddings:
+        t["unembed"] = PSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    if cfg.is_encoder_decoder:
+        t["encoder"] = tree_stack_template(
+            (block_template(cfg, "attn"),), cfg.n_encoder_layers
+        )
+        t["enc_norm"] = L.norm_template(cfg.d_model, cfg.norm)
+    return t
+
+
+# -------------------------------------------------------------- caches ----
+
+
+def cache_len(cfg, ctx_len: int) -> int:
+    full = ctx_len + 128  # room for generated tokens past the prefilled context
+    if cfg.window > 0:
+        return min(cfg.window, full)
+    return full
+
+
+def init_block_cache(cfg, kind, batch, ctx_len, dtype=jnp.bfloat16):
+    C = cache_len(cfg, ctx_len)
+    kv = lambda: {
+        "k": jnp.zeros((batch, C, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, C, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((batch, C), -1, jnp.int32),
+    }
+    if kind in ("attn", "moe"):
+        return kv()
+    if kind == "xattn":
+        n_cross = cfg.encoder_seq if cfg.is_encoder_decoder else cfg.n_img_tokens
+        c = kv()
+        c["ck"] = jnp.zeros((batch, n_cross, cfg.n_kv_heads, cfg.head_dim), dtype)
+        c["cv"] = jnp.zeros((batch, n_cross, cfg.n_kv_heads, cfg.head_dim), dtype)
+        return c
+    if kind == "mlstm":
+        return R.mlstm_init_state(cfg, batch, dtype)
+    if kind == "slstm":
+        return R.slstm_init_state(cfg, batch, dtype)
+    if kind == "rglru":
+        return R.rglru_init_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch, ctx_len, dtype=jnp.bfloat16):
+    group, n_full, rem = cfg.layer_groups()
+    gc = tuple(init_block_cache(cfg, k, batch, ctx_len, dtype) for k in group)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_full,) + x.shape), gc
+    )
+    tail = tuple(init_block_cache(cfg, k, batch, ctx_len, dtype) for k in rem)
+    return {"groups": stacked, "tail": tail}
+
+
+# -------------------------------------------------------------- blocks ----
+
+
+def _self_attention(p, x, cache, cfg, ctx):
+    """Pre-norm self-attention sub-block with unified train/prefill/decode."""
+    B, S, _ = x.shape
+    h = L.apply_norm(p["norm"], x, cfg.norm, cfg.norm_eps)
+    q, k, v = L._proj_qkv(p, h, cfg)
+    q_pos = ctx["positions"]  # (B,S)
+    q = L.rope(q, q_pos, cfg.rope_theta)
+    k = L.rope(k, q_pos, cfg.rope_theta)
+    opt = ctx.get("opt", ())
+    cons = ctx.get("cons")
+    mixed = "attn_bf16" in opt
+    if "attn_head_shard" in opt and cons is not None:
+        # Megatron-style: q heads sharded over TP (GSPMD-padded when not
+        # divisible), kv heads replicated -> no collectives inside the
+        # attention loop; the wo contraction psums once per layer.
+        q = cons(q, ("batch", "seq", "heads_act", "head_dim"))
+        k = cons(k, ("batch", "seq", "kv_act", "head_dim"))
+        v = cons(v, ("batch", "seq", "kv_act", "head_dim"))
+
+    new_cache = None
+    if ctx["mode"] == "train":
+        o = L.attention(
+            q, k, v, q_pos=q_pos, k_pos=q_pos, causal=True,
+            window=cfg.window, impl=ctx.get("attn_impl", "auto"), mixed=mixed,
+        )
+    elif ctx["mode"] == "prefill":
+        o = L.attention(
+            q, k, v, q_pos=q_pos, k_pos=q_pos, causal=True,
+            window=cfg.window, impl=ctx.get("attn_impl", "auto"), mixed=mixed,
+        )
+        C = cache_len(cfg, ctx["ctx_len"])
+        if C >= S:  # keep everything (padded at the back)
+            pad = [(0, 0), (0, C - S)]
+            new_cache = {
+                "k": jnp.pad(k, pad + [(0, 0), (0, 0)]).astype(ctx["cache_dtype"]),
+                "v": jnp.pad(v, pad + [(0, 0), (0, 0)]).astype(ctx["cache_dtype"]),
+                "pos": jnp.pad(q_pos, pad, constant_values=-1),
+            }
+        else:  # sliding window: keep the last C entries, ring-indexed
+            kk, vv, pp = k[:, S - C :], v[:, S - C :], q_pos[:, S - C :]
+            shift = (S - C) % C  # place entry with position p at slot p % C
+            kk = jnp.roll(kk, shift, axis=1)
+            vv = jnp.roll(vv, shift, axis=1)
+            pp = jnp.roll(pp, shift, axis=1)
+            new_cache = {
+                "k": kk.astype(ctx["cache_dtype"]),
+                "v": vv.astype(ctx["cache_dtype"]),
+                "pos": pp,
+            }
+    else:  # decode: S == 1
+        C = cache["k"].shape[1]
+        slot = (q_pos[:, 0] % C).astype(jnp.int32)  # (B,)
+        bidx = jnp.arange(B)
+        kk = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+        vv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        pp = cache["pos"].at[bidx, slot].set(q_pos[:, 0])
+        new_cache = {"k": kk, "v": vv, "pos": pp}
+        o = L.attention(
+            q, kk.astype(v.dtype), vv.astype(v.dtype),
+            q_pos=q_pos, k_pos=pp, causal=True, window=cfg.window,
+            impl="direct", mixed=mixed,
+        )
+
+    if "attn_head_shard" in opt and cons is not None:
+        o = cons(o, ("batch", "seq", "heads_act", "head_dim"))
+    o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    y = o @ p["wo"]
+    if "ar_bf16" in opt:
+        # pin the bf16 rounding BEFORE the TP all-reduce: XLA's excess
+        # precision otherwise hoists the convert past the psum and reduces
+        # in f32 (2x wire) — §Perf lever.
+        y = jax.lax.optimization_barrier(y.astype(jnp.bfloat16))
+    return x + y, new_cache
+
+
+def _cross_attention(p, x, cache, cfg, ctx):
+    B, S, _ = x.shape
+    h = L.apply_norm(p["norm"], x, cfg.norm, cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    if ctx["mode"] == "decode":
+        ck, cv = cache["ck"].astype(x.dtype), cache["cv"].astype(x.dtype)
+        new = {"ck": cache["ck"], "cv": cache["cv"]}
+    else:
+        src = ctx["cross_src"]
+        T = src.shape[1]
+        ck = (src @ p["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        cv = (src @ p["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        new = {
+            "ck": ck.astype(ctx["cache_dtype"]),
+            "cv": cv.astype(ctx["cache_dtype"]),
+        }
+    T = ck.shape[1]
+    kpos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    o = L.attention(
+        q, ck, cv, q_pos=ctx["positions"], k_pos=kpos, causal=False, window=0,
+        impl="direct" if S == 1 else "auto",
+    )
+    o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return x + o @ p["wo"], new
+
+
+def apply_block(p, kind, x, cache, cfg, ctx):
+    """Returns (x, new_block_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    c = cache or {}
+    if kind in ("attn", "moe", "xattn"):
+        x, kv_new = _self_attention(p["attn"], x, c, cfg, ctx)
+        new = kv_new or {}
+        if kind == "xattn":
+            x2, cross_new = _cross_attention(p["xattn"], x, c, cfg, ctx)
+            x = x2
+            if kv_new is not None or ctx["mode"] != "train":
+                new = {**(kv_new or {}), **cross_new}
+        if kind == "moe":
+            h = L.apply_norm(p["moe"]["norm"], x, cfg.norm, cfg.norm_eps)
+            mesh = ctx.get("mesh")
+            dp = ctx.get("moe_groups", 1)
+            if mesh is not None and x.shape[0] % max(dp, 1) == 0:
+                y, aux = L.apply_moe_shardmap(p["moe"], h, cfg, mesh)
+            else:
+                y, aux = L.apply_moe(p["moe"], h, cfg, cons=ctx.get("cons"),
+                                     groups=1)
+            x = x + y
+        else:
+            h = L.apply_norm(p["mlp"]["norm"], x, cfg.norm, cfg.norm_eps)
+            y = L.apply_mlp(p["mlp"], h, cfg)
+            if "ar_bf16" in ctx.get("opt", ()):
+                y = jax.lax.optimization_barrier(y.astype(jnp.bfloat16))
+            x = x + y
+        return x, (new if new else None), aux
+    if kind == "mlstm":
+        st = c if c else R.mlstm_init_state(cfg, x.shape[0])
+        h = L.apply_norm(p["mlstm"]["norm"], x, cfg.norm, cfg.norm_eps)
+        y, st = R.apply_mlstm(p["mlstm"], h, st, cfg, impl=ctx.get("mlstm_impl", "chunked"))
+        return x + y, st, aux
+    if kind == "slstm":
+        st = c if c else R.slstm_init_state(cfg, x.shape[0])
+        h = L.apply_norm(p["slstm"]["norm"], x, cfg.norm, cfg.norm_eps)
+        y, st = R.apply_slstm(p["slstm"], h, st, cfg, cons=ctx.get("cons"),
+                              local="rnn_local" in ctx.get("opt", ()))
+        return x + y, st, aux
+    if kind == "rglru":
+        st = c if c else R.rglru_init_state(cfg, x.shape[0])
+        h = L.apply_norm(p["rglru"]["norm"], x, cfg.norm, cfg.norm_eps)
+        y, st = R.apply_rglru(p["rglru"], h, st, cfg)
+        x = x + y
+        h = L.apply_norm(p["mlp"]["norm"], x, cfg.norm, cfg.norm_eps)
+        return x + L.apply_mlp(p["mlp"], h, cfg), st, aux
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------- forward ----
+
+
+def _encode(params, cfg, frames, ctx):
+    """Whisper-style encoder over precomputed frame embeddings (conv stub)."""
+    B, T, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    def enc_block(x, gp):
+        p = gp[0]
+        h = L.apply_norm(p["attn"]["norm"], x, cfg.norm, cfg.norm_eps)
+        q, k, v = L._proj_qkv(p["attn"], h, cfg)
+        o = L.attention(q, k, v, q_pos=pos, k_pos=pos, causal=False, window=0)
+        x = x + o.reshape(B, T, cfg.n_heads * cfg.head_dim) @ p["attn"]["wo"]
+        h = L.apply_norm(p["mlp"]["norm"], x, cfg.norm, cfg.norm_eps)
+        return x + L.apply_mlp(p["mlp"], h, cfg), None
+
+    x, _ = jax.lax.scan(enc_block, frames, params["encoder"])
+    return L.apply_norm(params["enc_norm"], x, cfg.norm, cfg.norm_eps)
+
+
+def forward(
+    params,
+    cfg,
+    tokens,
+    *,
+    mode: str = "train",          # train | prefill | decode
+    positions=None,               # decode: (B,) current position
+    cache=None,
+    cross_src=None,               # (B, T, d) frame/patch embeddings (stub input)
+    logits_mode: str = "all",     # all | last
+    remat: bool = False,
+    attn_impl: str = "auto",
+    mlstm_impl: str = "chunked",
+    constrain: Optional[Callable] = None,
+    compute_dtype=jnp.bfloat16,
+    moe_groups: int = 1,
+    mesh=None,
+    opt: tuple = (),
+):
+    """Returns (logits, new_cache, aux_loss)."""
+    B, S = tokens.shape
+    group, n_full, rem = cfg.layer_groups()
+    cons = constrain or (lambda x, axes: x)
+
+    # mixed precision: f32 master params are cast to bf16 at use; norms,
+    # softmax and recurrences internally compute in f32.
+    if compute_dtype is not None:
+        params = jax.tree_util.tree_map(
+            lambda p: p.astype(compute_dtype)
+            if p.dtype == jnp.float32 else p, params)
+
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    elif positions.ndim == 1:
+        positions = positions[:, None]  # decode (B,1)
+
+    ctx: dict = {
+        "mode": mode,
+        "positions": positions,
+        "cross_src": cross_src,
+        "ctx_len": S if mode == "prefill" else None,
+        "cache_dtype": jnp.bfloat16,
+        "attn_impl": attn_impl,
+        "mlstm_impl": mlstm_impl,
+        "cons": constrain,
+        "moe_groups": moe_groups,
+        "mesh": mesh,
+        "opt": tuple(opt),
+    }
+
+    if cfg.is_encoder_decoder and mode != "decode":
+        ctx["cross_src"] = _encode(params, cfg, cross_src, ctx)
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    x = cons(x, ("batch", "seq", "embed_act"))
+
+    has_cache = cache is not None
+    group_caches = cache["groups"] if has_cache else None
+
+    def group_body(carry, xs):
+        x, aux = carry
+        gp, gc = xs if has_cache else (xs, None)
+        new_caches = []
+        for i, kind in enumerate(group):
+            bc = None if gc is None else gc[i]
+            x, nc, a = apply_block(gp[i], kind, x, bc, cfg, ctx)
+            x = cons(x, ("batch", "seq", "embed_act"))
+            aux = aux + a
+            new_caches.append(nc)
+        return (x, aux), tuple(new_caches)
+
+    body = group_body
+    if remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    xs = (params["groups"], group_caches) if has_cache else params["groups"]
+    (x, aux), new_group_caches = jax.lax.scan(body, (x, aux0), xs)
+
+    new_tail = []
+    for i, kind in enumerate(rem):
+        bc = cache["tail"][i] if has_cache else None
+        x, nc, a = apply_block(params["tail"][i], kind, x, bc, cfg, ctx)
+        aux = aux + a
+        new_tail.append(nc)
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    logits = (x @ unembed.astype(x.dtype)).astype(jnp.float32)
+    logits = cons(logits, ("batch", "seq", "vocab_act"))
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"groups": new_group_caches, "tail": tuple(new_tail)}
+    return logits, new_cache, aux

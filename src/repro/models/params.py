@@ -1,0 +1,72 @@
+"""Parameter templates: one source of truth for shapes, init and sharding.
+
+A model is described as a pytree of ``PSpec`` leaves. ``init_params`` maps the
+template to concrete arrays; ``logical_axes`` maps it to logical-axis tuples
+consumed by ``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PSpec(NamedTuple):
+    shape: tuple
+    axes: tuple          # logical axis names, len(axes) == len(shape)
+    init: str = "fan_in"  # fan_in | embed | zeros | ones | lru_lambda | conv
+
+    def stacked(self, n: int):
+        """Add a leading 'layers' axis (scan-over-layers stacking)."""
+        return PSpec((n,) + self.shape, ("layers",) + self.axes, self.init)
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def tree_stack_template(template, n: int):
+    return jax.tree_util.tree_map(lambda p: p.stacked(n), template, is_leaf=is_pspec)
+
+
+def logical_axes(template):
+    return jax.tree_util.tree_map(lambda p: p.axes, template, is_leaf=is_pspec)
+
+
+def _init_leaf(p: PSpec, key, dtype):
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "lru_lambda":
+        # RG-LRU Lambda parameterization: a in [0.9, 0.999] at init
+        u = jax.random.uniform(key, p.shape, jnp.float32, 0.9**2, 0.999**2)
+        lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * 8.0)))  # softplus^-1
+        return lam.astype(dtype)
+    if p.init == "embed":
+        return (jax.random.normal(key, p.shape, jnp.float32) * 0.02).astype(dtype)
+    # fan_in (also used for conv): truncated-normal-ish scaled by 1/sqrt(fan_in)
+    fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+    std = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(template, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(template, is_leaf=is_pspec)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_leaf(p, k, dtype) for p, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def abstract_params(template, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), template, is_leaf=is_pspec
+    )
+
+
+def count_params(template) -> int:
+    leaves = jax.tree_util.tree_leaves(template, is_leaf=is_pspec)
+    return int(sum(np.prod(p.shape) for p in leaves))

@@ -1,0 +1,301 @@
+"""Recurrent sequence-mixing blocks: RG-LRU (RecurrentGemma), mLSTM and sLSTM
+(xLSTM). All blocks expose a uniform interface:
+
+    template(cfg) -> PSpec tree
+    init_state(cfg, batch) -> state pytree (zeros)
+    apply(params, x, state, cfg) -> (y, new_state)
+
+``apply`` handles any sequence length S >= 1, so the same code path serves
+training, prefill and single-token decode. The RG-LRU diagonal recurrence is a
+``jax.lax.associative_scan`` (log-depth, parallel); the Pallas
+``kernels/linear_scan`` kernel is its TPU replacement. mLSTM supports both a
+sequential scan (oracle) and a chunkwise-parallel form (MXU-friendly; used for
+training/prefill — see EXPERIMENTS.md §Perf for the roofline delta).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import PSpec
+from repro.models.layers import norm_template, apply_norm
+
+# ----------------------------------------------------------------- RG-LRU ----
+
+_LRU_C = 8.0
+
+
+def rglru_template(cfg):
+    d, dl, cw = cfg.d_model, cfg.d_lru, cfg.conv_width
+    return {
+        "w_x": PSpec((d, dl), ("embed", "lru")),
+        "w_gate": PSpec((d, dl), ("embed", "lru")),
+        "conv_w": PSpec((cw, dl), ("conv", "lru"), "conv"),
+        "conv_b": PSpec((dl,), ("lru",), "zeros"),
+        "w_i": PSpec((dl, dl), ("lru", "lru_out")),
+        "b_i": PSpec((dl,), ("lru",), "zeros"),
+        "w_r": PSpec((dl, dl), ("lru", "lru_out")),
+        "b_r": PSpec((dl,), ("lru",), "zeros"),
+        "lam": PSpec((dl,), ("lru",), "lru_lambda"),
+        "w_out": PSpec((dl, d), ("lru", "embed")),
+        "norm": norm_template(d, cfg.norm),
+    }
+
+
+def rglru_init_state(cfg, batch, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.d_lru), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_lru), dtype),
+    }
+
+
+def _causal_conv(u, w, b, prev):
+    """Depthwise causal conv. u: (B,S,dl), prev: (B,cw-1,dl)."""
+    cw = w.shape[0]
+    upad = jnp.concatenate([prev.astype(u.dtype), u], axis=1)
+    out = sum(
+        upad[:, i : i + u.shape[1]] * w[cw - 1 - i] for i in range(cw)
+    ) + b
+    return out, upad[:, -(cw - 1) :] if cw > 1 else prev
+
+
+def linear_scan_ref(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t via associative scan. a,b: (B,S,D), h0: (B,D)."""
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def comb(l, r):
+        return (l[0] * r[0], l[1] * r[0] + r[1])
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h
+
+
+def apply_rglru(p, x, state, cfg):
+    u = x @ p["w_x"]
+    g = jax.nn.gelu(x @ p["w_gate"])
+    uc, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], state["conv"])
+    uf = uc.astype(jnp.float32)
+    gate_i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    gate_r = jax.nn.sigmoid(uf @ p["w_r"].astype(jnp.float32) + p["b_r"])
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * gate_r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (gate_i * uf)
+    if x.shape[1] == 1:  # decode fast path
+        h = (a[:, 0] * state["h"] + b[:, 0])[:, None]
+    else:
+        h = linear_scan_ref(a, b, state["h"])
+    y = (h.astype(x.dtype) * g) @ p["w_out"]
+    return y, {"h": h[:, -1], "conv": conv_state}
+
+
+# ------------------------------------------------------------------ mLSTM ----
+
+
+def _mlstm_dims(cfg):
+    d = cfg.d_model
+    d_inner = 2 * d
+    H = cfg.n_heads
+    dv = d_inner // H
+    dqk = cfg.head_dim
+    return d, d_inner, H, dv, dqk
+
+
+def mlstm_template(cfg):
+    d, d_inner, H, dv, dqk = _mlstm_dims(cfg)
+    return {
+        "w_up": PSpec((d, d_inner), ("embed", "ffn")),
+        "w_z": PSpec((d, d_inner), ("embed", "ffn")),
+        "w_q": PSpec((d_inner, H * dqk), ("ffn", "heads")),
+        "w_k": PSpec((d_inner, H * dqk), ("ffn", "heads")),
+        "w_if": PSpec((d, 2 * H), ("embed", "gates")),
+        "b_if": PSpec((2 * H,), ("gates",), "zeros"),
+        "hnorm": {"scale": PSpec((d_inner,), ("ffn",), "ones")},
+        "w_down": PSpec((d_inner, d), ("ffn", "embed")),
+        "norm": norm_template(d, cfg.norm),
+    }
+
+
+def mlstm_init_state(cfg, batch, dtype=jnp.float32):
+    _, _, H, dv, dqk = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dqk, dv), jnp.float32),
+        "n": jnp.zeros((batch, H, dqk), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_gates(p, x, cfg):
+    d, d_inner, H, dv, dqk = _mlstm_dims(cfg)
+    B, S, _ = x.shape
+    u = x @ p["w_up"]
+    z = jax.nn.sigmoid(x @ p["w_z"])
+    q = (u @ p["w_q"]).reshape(B, S, H, dqk).astype(jnp.float32)
+    k = (u @ p["w_k"]).reshape(B, S, H, dqk).astype(jnp.float32) * (dqk**-0.5)
+    v = u.reshape(B, S, H, dv).astype(jnp.float32)
+    gf = (x @ p["w_if"] + p["b_if"]).astype(jnp.float32).reshape(B, S, H, 2)
+    log_i = gf[..., 0]
+    log_f = jax.nn.log_sigmoid(gf[..., 1])
+    return u, z, q, k, v, log_i, log_f
+
+
+def _mlstm_seq(q, k, v, log_i, log_f, state):
+    """Sequential oracle. q,k: (B,S,H,dqk) f32; v: (B,S,H,dv)."""
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, li, lf = xs  # (B,H,dqk),(B,H,dqk),(B,H,dv),(B,H),(B,H)
+        m_new = jnp.maximum(lf + m, li)
+        fp = jnp.exp(lf + m - m_new)[..., None]
+        ip = jnp.exp(li - m_new)[..., None]
+        C = fp[..., None] * C + (ip * kt)[..., None] * vt[..., None, :]
+        n = fp * n + ip * kt
+        num = jnp.einsum("bhkv,bhk->bhv", C, qt)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), jnp.exp(-m_new)
+        )[..., None]
+        return (C, n, m_new), num / den
+
+    sw = lambda t: jnp.moveaxis(t, 1, 0)
+    (C, n, m), h = jax.lax.scan(
+        step, (state["C"], state["n"], state["m"]),
+        (sw(q), sw(k), sw(v), sw(log_i), sw(log_f)),
+    )
+    return jnp.moveaxis(h, 0, 1), {"C": C, "n": n, "m": m}
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, state, chunk=256):
+    """Chunkwise-parallel mLSTM: intra-chunk attention-form on the MXU +
+    inter-chunk state recurrence. Equivalent to the sequential form (tested).
+    """
+    B, S, H, dqk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0
+    N = S // L
+    rs = lambda t: jnp.moveaxis(t.reshape(B, N, L, *t.shape[2:]), 1, 0)
+    qs, ks, vs, lis, lfs = rs(q), rs(k), rs(v), rs(log_i), rs(log_f)
+
+    def step(carry, xs):
+        C, n, m = carry  # (B,H,dqk,dv),(B,H,dqk),(B,H)
+        qt, kt, vt, li, lf = xs  # (B,L,H,...)
+        F = jnp.cumsum(lf, axis=1)                            # (B,L,H) inclusive
+        g = li - F                                            # g_j = li_j - F_j
+        G = jax.lax.cummax(g, axis=1)                         # running max_j<=i g_j
+        M = jnp.maximum(m[:, None], G)                        # row stabilizer - F_i
+        # (sequential m_i = F_i + M_i; verified against _mlstm_seq in tests)
+        dec_q = jnp.exp(m[:, None] - M)                       # (B,L,H)
+        w_k = jnp.exp(g - M[:, -1:])                          # chunk-final key decay
+        # intra-chunk weights: w_ij = exp(g_j - M_i), j <= i.
+        # For the taken (j<=i) branch g_j - M_i <= 0 by construction, so the
+        # clamp is exact — it only tames the j>i garbage that would otherwise
+        # overflow to inf and poison the backward of the where() (0 * inf).
+        s = jnp.einsum("bihk,bjhk->bhij", qt, kt)
+        wij = jnp.exp(jnp.minimum(g[:, None, :] - M[:, :, None], 0.0)
+                      ).transpose(0, 3, 1, 2)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        sw_ = s * jnp.where(mask[None, None], wij, 0.0)
+        num = jnp.einsum("blh,blhk,bhkv->blhv", dec_q, qt, C)
+        num = num + jnp.einsum("bhij,bjhv->bihv", sw_, vt)
+        den = jnp.einsum("blh,blhk,bhk->blh", dec_q, qt, n)
+        den = den + sw_.sum(-1).transpose(0, 2, 1)  # sw_ already holds q_i.k_j
+        m_row = F + M                                          # absolute stabilizer
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_row))[..., None]
+        # state update to chunk end (row L)
+        m_new = F[:, -1] + M[:, -1]
+        decC = jnp.exp(m - M[:, -1])
+        C = decC[..., None, None] * C + jnp.einsum(
+            "bjh,bjhk,bjhv->bhkv", w_k, kt, vt
+        )
+        n = decC[..., None] * n + jnp.einsum("bjh,bjhk->bhk", w_k, kt)
+        return (C, n, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(step, (state["C"], state["n"], state["m"]),
+                                 (qs, ks, vs, lis, lfs))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, dv)
+    return h, {"C": C, "n": n, "m": m}
+
+
+def apply_mlstm(p, x, state, cfg, impl="seq"):
+    d, d_inner, H, dv, dqk = _mlstm_dims(cfg)
+    B, S, _ = x.shape
+    u, z, q, k, v, log_i, log_f = _mlstm_gates(p, x, cfg)
+    if S == 1:
+        h, new_state = _mlstm_seq(q, k, v, log_i, log_f, state)
+    elif impl == "chunked":
+        h, new_state = _mlstm_chunked(q, k, v, log_i, log_f, state)
+    else:
+        h, new_state = _mlstm_seq(q, k, v, log_i, log_f, state)
+    h = h.reshape(B, S, d_inner).astype(x.dtype)
+    hn = apply_norm({"scale": p["hnorm"]["scale"]}, h, "rmsnorm", cfg.norm_eps)
+    y = (hn * z) @ p["w_down"]
+    return y, new_state
+
+
+# ------------------------------------------------------------------ sLSTM ----
+
+
+def slstm_template(cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    fi = cfg._ff_inner()
+    return {
+        "w_gates": PSpec((d, 4 * d), ("embed", "gates")),
+        "r_gates": PSpec((H, dh, 4 * dh), ("heads_dim", "embed", "gates")),
+        "b_gates": PSpec((4 * d,), ("gates",), "zeros"),
+        "gnorm": {"scale": PSpec((d,), ("embed",), "ones")},
+        "w_up": PSpec((d, 2 * fi), ("embed", "ffn")),
+        "w_down": PSpec((fi, d), ("ffn", "embed")),
+        "norm": norm_template(d, cfg.norm),
+    }
+
+
+def slstm_init_state(cfg, batch, dtype=jnp.float32):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def apply_slstm(p, x, state, cfg, cons=None, local=False):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    B, S, _ = x.shape
+    gx = x @ p["w_gates"] + p["b_gates"]                         # (B,S,4d)
+    if local and cons is not None:
+        # §Perf "rnn_local": gather the TP-sharded gate pre-activations ONCE
+        # per layer so the 4096-step recurrence below runs with zero
+        # per-timestep collectives (the baseline all-reduces ~150KB per step,
+        # hopelessly latency-bound on real ICI).
+        gx = cons(gx, ("batch", "seq", None))
+    gx = gx.astype(jnp.float32)
+
+    def step(carry, gxt):
+        c, n, h, m = carry
+        hh = h.reshape(B, H, dh)
+        gr = jnp.einsum("bhd,hdg->bhg", hh, p["r_gates"].astype(jnp.float32))
+        g = gxt + gr.reshape(B, 4 * d)
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        log_f = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(log_f + m, gi)
+        ip = jnp.exp(gi - m_new)
+        fp = jnp.exp(log_f + m - m_new)
+        c = fp * c + ip * jnp.tanh(gz)
+        n = fp * n + ip
+        h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    (c, n, h, m), hs = jax.lax.scan(
+        step, (state["c"], state["n"], state["h"], state["m"]),
+        jnp.moveaxis(gx, 1, 0),
+    )
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    y = apply_norm({"scale": p["gnorm"]["scale"]}, y, "rmsnorm", cfg.norm_eps)
+    up = y @ p["w_up"]
+    a, b = jnp.split(up, 2, axis=-1)
+    y = (jax.nn.gelu(a) * b) @ p["w_down"]
+    return y, {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,118 @@
+"""Step functions: train_step (grad-accum scan + remat), serve_prefill,
+serve_decode. These are the functions the launcher jits/lowers — everything
+below them is pure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import forward, init_cache
+
+
+def softmax_xent(logits, targets, ignore_id=-1):
+    """Mean token cross-entropy. logits f32 (B,S,V), targets (B,S) int32."""
+    mask = (targets != ignore_id).astype(jnp.float32)
+    t = jnp.maximum(targets, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+    per_tok = (lse - ll) * mask
+    return per_tok.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_loss_fn(cfg, *, remat=True, attn_impl="auto", constrain=None,
+                 aux_weight=0.01, moe_groups=1, mesh=None, opt=()):
+    def loss_fn(params, batch):
+        logits, _, aux = forward(
+            params, cfg, batch["tokens"], mode="train",
+            cross_src=batch.get("cross_src"), remat=remat,
+            attn_impl=attn_impl, constrain=constrain, moe_groups=moe_groups,
+            mesh=mesh, opt=opt,
+        )
+        loss = softmax_xent(logits, batch["targets"])
+        return loss + aux_weight * aux, {"loss": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg, optimizer, *, microbatches=1, remat=True,
+                    attn_impl="auto", constrain=None, moe_groups=1, mesh=None,
+                    opt=(), grad_transform: Optional[Callable] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt_state", "step"}; batch leaves are (B, ...) and are
+    split into ``microbatches`` accumulation steps scanned sequentially (the
+    standard way to fit large global batches in HBM).
+    ``grad_transform`` hooks gradient compression (distributed/compression.py).
+    """
+    loss_fn = make_loss_fn(cfg, remat=remat, attn_impl=attn_impl,
+                           constrain=constrain, moe_groups=moe_groups, mesh=mesh, opt=opt)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches > 1:
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]),
+                batch,
+            )
+
+            def body(acc, b):
+                (l, m), g = grad_fn(params, b)
+                acc = jax.tree_util.tree_map(jnp.add, acc, (g, m))
+                return acc, None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"loss": jnp.zeros((), jnp.float32),
+                  "aux": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(body, (g0, m0), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m / microbatches, metrics)
+        else:
+            (l, metrics), grads = grad_fn(params, batch)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+
+        updates, opt_state = optimizer.update(grads, state["opt_state"], params)
+        params = jax.tree_util.tree_map(jnp.add, params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = optimizer.global_norm(grads)
+        return {"params": params, "opt_state": opt_state,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, *, attn_impl="auto", constrain=None, moe_groups=1,
+                      mesh=None, opt=()):
+    """prefill(params, batch) -> (last_logits, cache)."""
+
+    def prefill(params, batch):
+        logits, cache, _ = forward(
+            params, cfg, batch["tokens"], mode="prefill",
+            cross_src=batch.get("cross_src"), logits_mode="last",
+            attn_impl=attn_impl, constrain=constrain, moe_groups=moe_groups,
+            mesh=mesh, opt=opt,
+        )
+        return logits[:, 0], cache
+
+    return prefill
+
+
+def make_decode_step(cfg, *, constrain=None, opt=()):
+    """decode(params, cache, tokens (B,1), positions (B,)) -> (logits, cache)."""
+
+    def decode(params, cache, tokens, positions):
+        logits, cache, _ = forward(
+            params, cfg, tokens, mode="decode", positions=positions,
+            cache=cache, logits_mode="last", constrain=constrain, opt=opt,
+        )
+        return logits[:, 0], cache
+
+    return decode

