@@ -27,9 +27,22 @@ def _time(fn, *args, n=5):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def run():
+def run(validate_only: bool = False):
+    """validate_only: tiny shapes, interpret-mode correctness only (CI smoke)."""
     key = jax.random.key(0)
     ks = jax.random.split(key, 4)
+
+    if validate_only:
+        x = jax.random.normal(ks[2], (32, 512), jnp.float32)
+        err = float(jnp.abs(entropy_scores(x, interpret=True)
+                            - ref.entropy_ref(x)).max())
+        emit("kernel_entropy_pallas_interp_smoke", 0.0,
+             f"allclose_err={err:.2e}")
+        t = jax.random.randint(ks[3], (32,), 0, 512)
+        err = float(jnp.abs(streaming_xent(x, t, interpret=True)
+                            - ref.xent_ref(x, t)).max())
+        emit("kernel_xent_pallas_interp_smoke", 0.0, f"allclose_err={err:.2e}")
+        return
 
     B, Hq, Hkv, S, D = 1, 8, 2, 1024, 64
     q = jax.random.normal(ks[0], (B, Hq, S, D), jnp.float32)

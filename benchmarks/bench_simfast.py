@@ -1,0 +1,90 @@
+"""Vectorized engine vs the scalar event loop: replications/sec.
+
+The headline row reproduces the ISSUE acceptance measurement: on a
+throughput-mode sweep point (whole task set submitted as one batch — the
+regime where the event loop's per-event queue scans go quadratic), the
+vmapped+pmapped simfast engine must deliver >= 20x the event loop's
+replications/sec at >= 256 parallel replications on CPU.
+
+Run standalone (`PYTHONPATH=src python -m benchmarks.bench_simfast`) this
+module forces one XLA host device per core *before* jax initializes, so the
+replication batch is sharded across cores; under `benchmarks.run` the flag
+is set by the orchestrator entry point.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def _force_host_devices():
+    """Expose each CPU core as an XLA device (must run before jax init)."""
+    if "jax" in sys.modules:
+        return  # too late; run with vmap on a single device
+    n = min(os.cpu_count() or 1, 8)
+    if n > 1:
+        flag = f"--xla_force_host_platform_device_count={n}"
+        if flag not in os.environ.get("XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
+
+
+_force_host_devices()
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import emit  # noqa: E402
+
+
+def _event_loop_rps(cs_kwargs, n_tasks, n_reps):
+    from repro.core.clamshell import ClamShell, CSConfig
+    t0 = time.perf_counter()
+    for seed in range(n_reps):
+        ClamShell(CSConfig(seed=seed, **cs_kwargs)).run_labeling(
+            n_tasks, max_time=1e9)
+    return n_reps / (time.perf_counter() - t0)
+
+
+def _simfast_rps(cfg, n_reps):
+    from repro.core.simfast import simulate
+    jax.block_until_ready(simulate(cfg, n_reps, seed=0))      # compile
+    t0 = time.perf_counter()
+    out = simulate(cfg, n_reps, seed=1)
+    jax.block_until_ready(out)
+    return n_reps / (time.perf_counter() - t0), out
+
+
+def run(smoke: bool = False):
+    from repro.core.simfast import FastConfig
+    from repro.core.simfast_stats import summarize
+
+    n_reps = 64 if smoke else 256
+    cases = [
+        # (name, event-loop CSConfig kwargs, FastConfig, el_reps)
+        ("smallR1",
+         dict(pool_size=10),
+         FastConfig(pool_size=10, n_tasks=40),
+         40, 8 if smoke else 24),
+        ("throughput_v3_pm",
+         dict(pool_size=15, votes_needed=3, pm_l=150.0, batch_ratio=15 / 400),
+         FastConfig(pool_size=15, n_tasks=400, batch_size=400,
+                    votes_needed=3, pm_l=150.0, max_batch_time=2e5),
+         400, 2 if smoke else 6),
+    ]
+    if smoke:
+        cases = cases[:1]
+
+    for name, cs_kw, cfg, n_tasks, el_reps in cases:
+        el = _event_loop_rps(cs_kw, n_tasks, el_reps)
+        sf, out = _simfast_rps(cfg, n_reps)
+        s = summarize(out)
+        emit(f"simfast_{name}", 1e6 / sf,
+             f"simfast_rps={sf:.1f};eventloop_rps={el:.2f};"
+             f"speedup_x={sf / el:.1f};reps={n_reps};"
+             f"devices={jax.local_device_count()};{s.as_row()}")
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

@@ -1,11 +1,18 @@
-"""Inject the roofline + perf tables into EXPERIMENTS.md from artifacts.
+"""Inject the roofline + perf tables into EXPERIMENTS.md from artifacts,
+and run the paper's config sweeps on the vectorized simfast engine.
 
-    PYTHONPATH=src:. python -m benchmarks.fill_experiments
+    PYTHONPATH=src python -m benchmarks.fill_experiments            # tables
+    PYTHONPATH=src python -m benchmarks.fill_experiments --sweep    # sweeps
+
+The sweeps used to drive the scalar event loop one replication at a time
+(minutes per grid point); they now vmap hundreds of replications per point
+through repro.core.simfast and emit a markdown table.
 """
 from __future__ import annotations
 
 import glob
 import json
+import sys
 
 from benchmarks.roofline import load, markdown
 
@@ -36,6 +43,45 @@ def perf_table():
     return "\n".join(rows)
 
 
+def sweep(n_reps: int = 256, out_path: str = "artifacts/simfast_sweep.md"):
+    """Paper §6 grids (batch ratio x straggler, PM_l, votes) on the
+    vectorized engine: hundreds of replications per point in one vmap."""
+    import os
+    import time
+
+    from repro.core.simfast import FastConfig, simulate
+    from repro.core.simfast_stats import summarize
+
+    rows = ["| config | mean_s | p50_s | p95_s | total_s | acc | cost | "
+            "reps/s |", "|---|---|---|---|---|---|---|---|"]
+    grid = []
+    for R in (0.5, 1.0, 2.0):
+        for sm in (False, True):
+            grid.append((f"R={R} {'SM' if sm else 'NoSM'}",
+                         FastConfig(pool_size=12, n_tasks=96, batch_ratio=R,
+                                    straggler=sm)))
+    for pm in (float("inf"), 150.0):
+        grid.append((f"PM_l={pm}",
+                     FastConfig(pool_size=15, n_tasks=120, straggler=False,
+                                pm_l=pm)))
+    for v in (1, 3):
+        grid.append((f"votes={v}",
+                     FastConfig(pool_size=12, n_tasks=96, votes_needed=v)))
+
+    for name, cfg in grid:
+        t0 = time.perf_counter()
+        s = summarize(simulate(cfg, n_reps, seed=0))
+        rps = n_reps / (time.perf_counter() - t0)
+        rows.append(f"| {name} | {s.mean_latency:.1f} | {s.p50_latency:.1f} "
+                    f"| {s.p95_latency:.1f} | {s.mean_total_time:.1f} | "
+                    f"{s.accuracy:.3f} | {s.cost:.2f} | {rps:.0f} |")
+        print(rows[-1], flush=True)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write("\n".join(rows) + "\n")
+    print(f"wrote {out_path} ({len(grid)} points x {n_reps} replications)")
+
+
 def main():
     recs = load()
     with open("EXPERIMENTS.md") as f:
@@ -53,4 +99,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    if "--sweep" in sys.argv:
+        sweep(n_reps=64 if "--smoke" in sys.argv else 256)
+    else:
+        main()

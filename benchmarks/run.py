@@ -1,5 +1,9 @@
 """Benchmark orchestrator. One section per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py)."""
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py).
+
+``--smoke`` runs a CI-sized subset: every bench module must import, and the
+vectorized engine + kernels execute one tiny config each.
+"""
 from __future__ import annotations
 
 import sys
@@ -7,17 +11,31 @@ import time
 
 
 def main() -> None:
+    smoke = "--smoke" in sys.argv
+    # bench_simfast forces one XLA host device per core; import it before
+    # anything initializes jax so the flag takes effect
+    from benchmarks import bench_simfast
     from benchmarks import (bench_workers, bench_straggler, bench_pool,
                             bench_combined, bench_hybrid, bench_e2e,
                             bench_kernels, roofline)
     print("name,us_per_call,derived")
     t0 = time.time()
+    if smoke:
+        print("# --- smoke: vectorized engine ---", flush=True)
+        bench_simfast.run(smoke=True)
+        print("# --- smoke: event-loop engine ---", flush=True)
+        bench_straggler.run(n_tasks=20, seeds=(3,))
+        print("# --- smoke: pallas kernels (interpret) ---", flush=True)
+        bench_kernels.run(validate_only=True)
+        print(f"# total {time.time()-t0:.1f}s", flush=True)
+        return
     for mod, tag in ((bench_workers, "worker latency CDFs (Fig 2)"),
                      (bench_straggler, "straggler (Fig 9-11, s4.1)"),
                      (bench_pool, "pool maintenance (Fig 3-8)"),
                      (bench_combined, "combined + TermEst (Fig 12-14)"),
                      (bench_hybrid, "hybrid learning (Fig 15-16)"),
                      (bench_e2e, "end-to-end (Fig 17-18, s6.6)"),
+                     (bench_simfast, "vectorized engine vs event loop"),
                      (bench_kernels, "pallas kernels"),
                      (roofline, "roofline (dry-run artifacts)")):
         print(f"# --- {tag} ---", flush=True)

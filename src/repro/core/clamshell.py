@@ -35,7 +35,7 @@ class CSConfig:
     routing: str = "random"
     pm_l: float = float("inf")      # latency threshold (inf = off)
     use_termest: bool = True
-    quality_threshold: float = None  # EM-accuracy eviction (paper §7 ext.)
+    quality_threshold: Optional[float] = None  # EM-accuracy eviction (§7 ext.)
     learner: str = "HL"             # AL | PL | HL | NL
     al_fraction: float = 0.5        # r = k/p for hybrid
     al_batch: int = 10              # batch-mode AL size for pure AL

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from typing import Callable
+from typing import Callable, Optional
 
 
 class EventLoop:
@@ -26,7 +26,7 @@ class EventLoop:
         self.at(self.now + dt, fn, *args)
 
     def run_until(self, t_end: float = float("inf"),
-                  stop: Callable[[], bool] = None):
+                  stop: Optional[Callable[[], bool]] = None):
         while self._heap:
             t, _, fn, args = self._heap[0]
             if t > t_end:

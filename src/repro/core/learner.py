@@ -70,8 +70,8 @@ class LogisticLearner:
     n_classes: int
     seed: int = 0
     steps: int = 120
-    W: jnp.ndarray = field(default=None, repr=False)
-    b: jnp.ndarray = field(default=None, repr=False)
+    W: Optional[jnp.ndarray] = field(default=None, repr=False)
+    b: Optional[jnp.ndarray] = field(default=None, repr=False)
     version: int = 0
 
     def __post_init__(self):

@@ -16,6 +16,7 @@ terminations, N = tasks started, N_c completed, N_t terminated.
 from __future__ import annotations
 
 import math
+from typing import Optional
 
 from repro.core.crowd import RetainerPool
 from repro.core.workers import Worker
@@ -40,7 +41,7 @@ class Maintainer:
     def __init__(self, pool: RetainerPool, pm_l: float = float("inf"), *,
                  use_termest: bool = True, min_obs: int = 3,
                  z: float = 1.0, alpha: float = 1.0,
-                 quality_threshold: float = None, lifeguard=None):
+                 quality_threshold: Optional[float] = None, lifeguard=None):
         self.pool = pool
         self.pm_l = pm_l
         self.use_termest = use_termest

@@ -1,0 +1,653 @@
+"""Vectorized Monte-Carlo crowd simulator (the `simfast` engine).
+
+The event-loop simulator (events.py / clamshell.py) executes one replication
+at a time in scalar Python — faithful but minutes-per-point for config
+sweeps. This module is a batched JAX reimplementation of the same labeling
+process: worker state (busy-until, session-end, speed, accuracy) and task
+state (vote counts, done flags) are dense arrays advanced with an inner
+``jax.lax.while_loop`` over event ticks, an outer ``jax.lax.scan`` over task
+batches, ``jax.vmap`` over replications, and optionally ``jax.pmap`` over
+devices, so hundreds of replications advance in lock-step per device.
+
+Semantics mirrored from the event loop (paper §4):
+  * straggler mitigation  -> masked priority matching: once every open task
+    has an active assignment, free workers duplicate onto active tasks
+    (at most one extra per missing vote, bounded by ``max_dup``); the first
+    completion wins and the losers are terminated, paid, and freed after the
+    dialog-click switch delay;
+  * pool maintenance      -> a vectorized evict/recruit update using the
+    TermEst censoring-corrected latency estimate with the same one-sided
+    significance test as maintenance.Maintainer;
+  * majority-vote QC      -> per-task vote-count accumulation as a padded
+    P-update scatter-add over the workers completing this tick (a segment
+    sum) with argmax resolve;
+  * retainer pool churn   -> exponential session ends; idle leavers are
+    replaced through an exponential recruitment delay (cold recruitment for
+    the Base-NR baseline is the same machinery with a longer mean).
+
+Performance notes (CPU, where CI runs): the tick does O(P + B) work — no
+sort, no (P, B) matrices, no threefry. Task-indexed segment ops are padded
+P-update scatters; priority matching is cumsum ranks + searchsorted; all
+per-tick randomness is one fused uniform block from a counter-based
+lowbias32 hash (exponentials by inverse-CDF, latency normals by Box-Muller);
+fresh workers come from a pre-drawn bank because beta/gamma sampling inside
+the hot loop is pathologically slow; and the clock advances by *event
+jumping* — every state change happens at a completion, arrival, or session
+end, so the loop hops straight to the next such time instead of grinding
+fixed ticks through quiet stretches. While unassigned tasks remain, jumps
+widen to ``bundle_s`` and each assignment is backdated to its worker's free
+moment (the event loop never idles a worker while the queue is non-empty),
+so per-worker timelines stay exact through the whole queue-rich phase.
+
+Discretization: completions are recorded at the earliest vote in their tick
+bundle (exact for single-vote QC; early by at most the bundle window when
+several votes of one task land in the same bundle), and assignment-start
+times in the mitigation/tail phase are coarsened to the ``mitig_bundle_s``
+window. Worker latencies are hundreds of seconds, so the bias is far inside
+the parity tolerances asserted by tests/test_simfast.py.
+
+The hybrid learner step (``make_learner_step`` / ``simulate_learning``) runs
+point selection through the fused Pallas entropy kernel
+(kernels/uncertainty.py; interpret mode on CPU, Mosaic on TPU) inside the
+jitted per-round loop, so decision latency scales with the accelerator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.crowd import SWITCH_DELAY_S, WAIT_PAY_PER_S, WORK_PAY_PER_RECORD
+
+INF = jnp.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class FastConfig:
+    """Static (hashable) configuration for the vectorized engine.
+
+    Mirrors the CSConfig fields the event loop uses for labeling runs; the
+    population parameters are inlined (the event loop draws them from
+    workers.Population with identical distributions).
+    """
+    pool_size: int = 15
+    n_tasks: int = 60
+    batch_ratio: float = 1.0          # R = pool/batch -> batch = pool/R
+    batch_size: Optional[int] = None  # explicit override (else pool/R)
+    n_records: int = 1
+    votes_needed: int = 1
+    n_classes: int = 2
+    straggler: bool = True
+    max_dup: int = 2
+    pm_l: float = float("inf")        # maintenance latency threshold
+    use_termest: bool = True
+    min_obs: int = 3
+    z: float = 1.0
+    alpha: float = 1.0
+    retainer: bool = True             # False = Base-NR cold start
+    recruit_mean_s: float = 45.0
+    cold_recruit_mean_s: float = 200.0
+    session_mean_s: float = 1800.0
+    # population W (workers.Population defaults)
+    median_mu: float = 150.0
+    sigma_ln: float = 1.0
+    cv_lo: float = 0.3
+    cv_hi: float = 1.2
+    acc_a: float = 18.0
+    acc_b: float = 2.0
+    # discretization
+    dt: float = 2.0
+    bundle_s: float = 64.0            # event-bundling window while unassigned
+                                      # tasks remain (assignments are
+                                      # backdated to the worker's free time,
+                                      # so per-worker timelines stay exact)
+    mitig_bundle_s: float = 12.0      # bundling window in the straggler/tail
+                                      # phase (completions stay exact; only
+                                      # duplicate-assignment starts coarsen)
+    max_batch_time: float = 3600.0    # per-batch tick budget
+    latency_floor: float = 2.0
+    # pre-drawn replacement workers per slot (churn/eviction backfill);
+    # beta/gamma sampling inside the hot loop is pathologically slow on CPU
+    bank: int = 16
+
+    @property
+    def eff_batch(self) -> int:
+        if self.batch_size is not None:
+            return max(1, int(self.batch_size))
+        return max(1, int(round(self.pool_size / self.batch_ratio)))
+
+    @property
+    def n_batches(self) -> int:
+        return -(-self.n_tasks // self.eff_batch)
+
+    @property
+    def batch_steps(self) -> int:
+        # tick budget: worst case is one completion per worker per tick
+        # during backlog draining plus fine-grained mitigation-phase ticks
+        return int(math.ceil(self.max_batch_time / self.dt))
+
+
+# --------------------------------------------------------------------------
+# population draws (match workers.Population.draw distributions)
+# --------------------------------------------------------------------------
+
+def _draw_workers(cfg: FastConfig, key, shape):
+    k_mu, k_cv, k_acc = jax.random.split(key, 3)
+    mu = cfg.median_mu * jnp.exp(cfg.sigma_ln * jax.random.normal(k_mu, shape))
+    mu = jnp.maximum(15.0, mu)
+    sigma = mu * jax.random.uniform(k_cv, shape, minval=cfg.cv_lo,
+                                    maxval=cfg.cv_hi)
+    acc = jnp.clip(jax.random.beta(k_acc, cfg.acc_a, cfg.acc_b, shape),
+                   0.55, 0.995)
+    return mu, sigma, acc
+
+
+def _init_workers(cfg: FastConfig, key):
+    """Dense worker-pool state; everything is a fixed-shape array."""
+    P = cfg.pool_size
+    k_pop, k_sess, k_cold = jax.random.split(key, 3)
+    # column 0 of the bank seeds the initial pool; later columns are the
+    # fresh workers consumed by churn/eviction backfill
+    mu_b, sigma_b, acc_b = _draw_workers(cfg, k_pop, (P, cfg.bank))
+    session = jax.random.exponential(k_sess, (P,)) * cfg.session_mean_s
+    if cfg.retainer:
+        blocked = jnp.zeros((P,))           # synchronous fill (paper §6.1)
+    else:                                    # Base-NR: workers trickle in
+        blocked = (jax.random.exponential(k_cold, (P,))
+                   * cfg.cold_recruit_mean_s)
+    banks = dict(mu=mu_b, sigma=sigma_b, acc=acc_b)
+    return dict(
+        mu=mu_b[:, 0], sigma=sigma_b[:, 0], acc=acc_b[:, 0],
+        repl_idx=jnp.zeros((P,), jnp.int32),
+        busy_until=jnp.full((P,), INF),
+        assigned=jnp.full((P,), -1, jnp.int32),
+        start_t=jnp.zeros((P,)),
+        blocked_until=blocked,
+        session_end=blocked + session,
+        n_started=jnp.zeros((P,), jnp.int32),
+        n_completed=jnp.zeros((P,), jnp.int32),
+        n_terminated=jnp.zeros((P,), jnp.int32),
+        comp_sum=jnp.zeros((P,)),
+        comp_sqsum=jnp.zeros((P,)),
+        term_sum=jnp.zeros((P,)),
+        cost_wait=jnp.zeros(()),
+        cost_work=jnp.zeros(()),
+        n_evicted=jnp.zeros((), jnp.int32),
+        n_churned=jnp.zeros((), jnp.int32),
+    ), banks
+
+
+def _termest(cfg: FastConfig, ws):
+    """Vectorized TermEst (maintenance.termest_latency) over all slots."""
+    n = ws["n_started"].astype(jnp.float32)
+    nc = ws["n_completed"].astype(jnp.float32)
+    nt = ws["n_terminated"].astype(jnp.float32)
+    l_tc = ws["comp_sum"] / jnp.maximum(nc, 1.0)
+    l_f = ws["term_sum"] / jnp.maximum(nt, 1.0)
+    l_tt = l_f * (n + cfg.alpha) / (nc + cfg.alpha)
+    est = jnp.where(nt == 0, l_tc,
+                    (nt / jnp.maximum(n, 1.0)) * l_tt
+                    + (nc / jnp.maximum(n, 1.0)) * l_tc)
+    return jnp.where(n > 0, est, jnp.nan)
+
+
+def _emp_std(ws):
+    nc = ws["n_completed"].astype(jnp.float32)
+    var = (ws["comp_sqsum"] - ws["comp_sum"] ** 2 / jnp.maximum(nc, 1.0)) \
+        / jnp.maximum(nc - 1.0, 1.0)
+    return jnp.where(nc >= 2, jnp.sqrt(jnp.maximum(var, 0.0)), jnp.nan)
+
+
+def _exp(u, mean):
+    """Inverse-CDF exponential from a uniform [0,1) draw."""
+    return -jnp.log1p(-u) * mean
+
+
+def _lowbias32(x):
+    """Strong-avalanche 32-bit integer hash (lowbias32). Statistical-quality
+    counter-based randomness for the hot loop at ~1/10 the cost of threefry;
+    the parity tests against the event-loop engine (true PRNG) are the
+    empirical quality check."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _uniform_block(seed_u32, step, n: int):
+    """(n,) uniforms in [0, 1) from (seed, step) counters — one fused hash."""
+    base = _lowbias32(seed_u32 ^ (step.astype(jnp.uint32)
+                                  * jnp.uint32(0x9E3779B9)))
+    h = _lowbias32(base + jnp.arange(n, dtype=jnp.uint32)
+                   * jnp.uint32(0x85EBCA6B))
+    return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def _replace_slots(cfg: FastConfig, ws, banks, leave, t, u_delay, u_sess,
+                   recruit_mean):
+    """Slots in `leave` exit the pool; fresh workers (from the pre-drawn
+    bank) arrive after an exponential recruitment delay (the event loop's
+    pipelined-reserve amortization collapses to the delay distribution)."""
+    idx = jnp.minimum(ws["repl_idx"] + 1, cfg.bank - 1)
+    rows = jnp.arange(cfg.pool_size)
+    sel = lambda new, old: jnp.where(leave, new, old)
+    ws = dict(ws)
+    ws["mu"] = sel(banks["mu"][rows, idx], ws["mu"])
+    ws["sigma"] = sel(banks["sigma"][rows, idx], ws["sigma"])
+    ws["acc"] = sel(banks["acc"][rows, idx], ws["acc"])
+    ws["repl_idx"] = sel(idx, ws["repl_idx"])
+    arrive = t + _exp(u_delay, recruit_mean)
+    ws["blocked_until"] = sel(arrive, ws["blocked_until"])
+    ws["session_end"] = sel(arrive + _exp(u_sess, cfg.session_mean_s),
+                            ws["session_end"])
+    zi = jnp.zeros_like(ws["n_started"])
+    zf = jnp.zeros_like(ws["comp_sum"])
+    for f in ("n_started", "n_completed", "n_terminated"):
+        ws[f] = sel(zi, ws[f])
+    for f in ("comp_sum", "comp_sqsum", "term_sum"):
+        ws[f] = sel(zf, ws[f])
+    return ws
+
+
+# --------------------------------------------------------------------------
+# one tick over the current batch
+# --------------------------------------------------------------------------
+
+def _tick(cfg: FastConfig, ws, ts, banks, true_label, t0, t, seed_u32, step):
+    """Process all events at/before time t and make new assignments in
+    O(P + B) work (padded scatters + cumsum/searchsorted matching, one
+    hashed uniform block). ``banks`` and ``true_label`` are loop-invariant
+    and deliberately kept OUT of the while carry: under vmap every carried
+    array is select-masked each iteration, and the banks are the largest
+    state. Returns (ws, ts, t_next) with t_next the next event time."""
+    P, B, C = cfg.pool_size, cfg.eff_batch, cfg.n_classes
+    up = _uniform_block(seed_u32, step, 8 * P).reshape(8, P)
+    active = ws["assigned"] >= 0
+
+    # ---- completions ---------------------------------------------------
+    # all task-indexed segment ops are P-update scatters into a padded
+    # (B+1)-row table (row B is the discard row for idle workers): at pool
+    # scale a dense (P, B) one-hot contraction is ~5x more memory traffic
+    comp = active & (ws["busy_until"] <= t)
+    tid = jnp.where(comp, ws["assigned"], B)
+    lat = jnp.where(comp, ws["busy_until"] - ws["start_t"], 0.0)
+    a_idx = jnp.maximum(ws["assigned"], 0)     # masked gather index
+    tl_w = jnp.where(comp, true_label[a_idx], 0)
+    correct = up[0] < ws["acc"]
+    wrong = jnp.floor(up[1] * max(C - 1, 1)).astype(jnp.int32)
+    label = jnp.where(correct, tl_w, jnp.where(wrong >= tl_w, wrong + 1,
+                                               wrong))
+    votes = jnp.concatenate(
+        [ts["votes"], jnp.zeros((1, C), jnp.float32)]
+    ).at[tid, label].add(comp.astype(jnp.float32))[:B]
+
+    # ---- task completion (majority-vote QC) ----------------------------
+    win_lat = jnp.zeros((B + 1,)).at[tid].max(lat)[:B]
+    # completion instant: the earliest vote bundled into this tick. Exact
+    # when the threshold-crossing vote is the tick's first for the task
+    # (always, for votes_needed=1); when several votes land in one bundle
+    # it is early by at most the bundle window
+    win_t = jnp.full((B + 1,), INF).at[tid].min(
+        jnp.where(comp, ws["busy_until"], INF))[:B]
+    win_t = jnp.where(jnp.isfinite(win_t), win_t, 0.0)
+    nv = votes.sum(-1)
+    newly = ~ts["done"] & (nv >= cfg.votes_needed)
+    done = ts["done"] | newly
+    ts["votes"] = votes
+    ts["done"] = done
+    ts["completed"] = jnp.where(newly, win_t, ts["completed"])
+    ts["last_lat"] = jnp.where(newly, win_lat, ts["last_lat"])
+
+    # ---- straggler losers of a newly done task, merged worker writes ---
+    lose = active & ~comp & done[a_idx]
+    winner = jnp.where(lose, ts["last_lat"][a_idx], 0.0)
+    freed = comp | lose
+    ws["n_completed"] = ws["n_completed"] + comp
+    ws["n_terminated"] = ws["n_terminated"] + lose
+    ws["comp_sum"] = ws["comp_sum"] + lat * comp
+    ws["comp_sqsum"] = ws["comp_sqsum"] + lat * lat * comp
+    ws["term_sum"] = ws["term_sum"] + winner * lose
+    ws["cost_work"] = ws["cost_work"] + (
+        freed.sum() * cfg.n_records * WORK_PAY_PER_RECORD)
+    # blocked_until doubles as "available since": completers free at their
+    # exact completion instant, losers at the winning vote + switch delay —
+    # both may be earlier than the (bundled) tick time t
+    ws["blocked_until"] = jnp.where(
+        comp, ws["busy_until"],
+        jnp.where(lose, ts["completed"][a_idx] + SWITCH_DELAY_S,
+                  ws["blocked_until"]))
+    ws["assigned"] = jnp.where(freed, -1, ws["assigned"])
+    ws["busy_until"] = jnp.where(freed, INF, ws["busy_until"])
+
+    # ---- churn + pool maintenance (single backfill update) -------------
+    idle = ws["assigned"] < 0
+    arrived = ws["blocked_until"] <= t
+    churned = idle & arrived & (ws["session_end"] <= t)
+    ws["n_churned"] = ws["n_churned"] + churned.sum()
+    leave = churned
+    if math.isfinite(cfg.pm_l):
+        live = arrived & (ws["session_end"] > t)
+        est = _termest(cfg, ws) if cfg.use_termest else \
+            jnp.where(ws["n_completed"] > 0,
+                      ws["comp_sum"] / jnp.maximum(
+                          ws["n_completed"].astype(jnp.float32), 1.0),
+                      jnp.nan)
+        s = _emp_std(ws)
+        s = jnp.where(jnp.isfinite(s) & (s > 0), s, 0.5 * est)
+        n_eff = jnp.maximum(ws["n_completed"] + ws["n_terminated"], 1
+                            ).astype(jnp.float32)
+        signif = (est - cfg.pm_l) >= cfg.z * s / jnp.sqrt(n_eff)
+        evict = (idle & live & (ws["n_started"] >= cfg.min_obs)
+                 & jnp.isfinite(est) & (est > cfg.pm_l) & signif)
+        ws["n_evicted"] = ws["n_evicted"] + evict.sum()
+        leave = churned | evict
+    # churn backfill uses the cold mean for Base-NR (as does eviction,
+    # matching RetainerPool._recruit_async drawing from pool.recruit_mean)
+    ws = _replace_slots(cfg, ws, banks, leave, t, up[2], up[3],
+                        cfg.recruit_mean_s if cfg.retainer
+                        else cfg.cold_recruit_mean_s)
+
+    # ---- assignment (priority routing + straggler duplication) ---------
+    avail = (ws["assigned"] < 0) & (ws["blocked_until"] <= t) \
+        & (ws["session_end"] > t)
+    n_active = jnp.zeros((B + 1,), jnp.int32).at[
+        jnp.where(ws["assigned"] >= 0, ws["assigned"], B)].add(1)[:B]
+    open_t = ~done
+    unass = open_t & (n_active == 0)
+    if cfg.straggler:
+        missing = cfg.votes_needed - nv
+        mitig = open_t & (n_active >= 1) & (n_active < missing + 1) \
+            & (n_active <= cfg.max_dup)
+    else:
+        mitig = jnp.zeros((B,), bool)
+    # rank eligible tasks without a sort: unassigned first, then
+    # mitigation-eligible, in index order rotated by a per-tick random
+    # shift (the event loop picks uniformly; with iid workers only the
+    # mitigation choice is distribution-relevant, and the paper's §4.1
+    # result is that random routing matches oracle anyway)
+    shift = (_uniform_block(seed_u32 ^ jnp.uint32(0xA5A5A5A5), step, 1)[0]
+             * B).astype(jnp.int32)
+    un_r = jnp.roll(unass, -shift)
+    mi_r = jnp.roll(mitig, -shift)
+    c_un = jnp.cumsum(un_r.astype(jnp.int32))
+    c_mi = jnp.cumsum(mi_r.astype(jnp.int32))
+    n_un = c_un[-1]
+    n_elig = n_un + c_mi[-1]
+    # rank->task lookup without a (P, B) match matrix: the r-th eligible
+    # task is the first index where the running count reaches r+1
+    wrank = (jnp.cumsum(avail) - 1).astype(jnp.int32)
+    q_un = jnp.searchsorted(c_un, wrank + 1)
+    q_mi = jnp.searchsorted(c_mi, wrank - n_un + 1)
+    take = avail & (wrank < n_elig)
+    task_rot = jnp.where(wrank < n_un, q_un, q_mi).astype(jnp.int32)
+    task_for_w = (jnp.clip(task_rot, 0, B - 1) + shift) % B
+    # a worker drawing from the unassigned queue starts at its exact free
+    # moment (the event loop never leaves a worker idle while unassigned
+    # tasks remain) — a mitigation duplicate only starts once the tick
+    # observes the slot, so it is not backdated
+    took_unass = take & (wrank < n_un)
+    start = jnp.where(took_unass,
+                      jnp.maximum(ws["blocked_until"], t0), t)
+    # latency draw: Box-Muller from the fused uniform block
+    nrm = jnp.sqrt(-2.0 * jnp.log1p(-up[6])) * jnp.cos(
+        2.0 * jnp.pi * up[7])
+    lat_new = jnp.maximum(cfg.latency_floor,
+                          ws["mu"] + ws["sigma"] * nrm) \
+        * max(1, cfg.n_records) ** 0.9
+    ws["assigned"] = jnp.where(take, task_for_w, ws["assigned"])
+    ws["busy_until"] = jnp.where(take, start + lat_new, ws["busy_until"])
+    ws["start_t"] = jnp.where(take, start, ws["start_t"])
+    ws["n_started"] = ws["n_started"] + take
+
+    # ---- event jump: hop to the next completion/arrival/session end ----
+    busy_min = ws["busy_until"].min()
+    arr_min = jnp.where(ws["blocked_until"] > t, ws["blocked_until"],
+                        INF).min()
+    sess_min = jnp.where(ws["assigned"] < 0, ws["session_end"], INF).min()
+    next_evt = jnp.minimum(jnp.minimum(busy_min, arr_min), sess_min)
+    # while unassigned work remains, bundle aggressively (assignments are
+    # backdated, so only bookkeeping is coarsened); in the mitigation/tail
+    # phase fall back to dt granularity. Backdated completions already in
+    # the past drain one per worker per tick without advancing the clock.
+    more_unass = n_un > took_unass.sum()
+    dt_eff = jnp.where(more_unass, cfg.bundle_s, cfg.mitig_bundle_s)
+    t_next = jnp.where(busy_min <= t, t,
+                       jnp.maximum(t + dt_eff, next_evt))
+    # pay idle live workers for the upcoming quiet interval [t, t_next)
+    waiting = avail & ~take
+    ws["cost_wait"] = ws["cost_wait"] + \
+        waiting.sum() * (t_next - t) * WAIT_PAY_PER_S
+    return ws, ts, t_next
+
+
+# --------------------------------------------------------------------------
+# drivers
+# --------------------------------------------------------------------------
+
+def _run_batch(cfg: FastConfig, ws, banks, t0, seed_u32, true_labels, valid):
+    """Label one batch to completion (event-jumping while_loop)."""
+    B = cfg.eff_batch
+    true_labels = true_labels.astype(jnp.int32)
+    ts = dict(
+        votes=jnp.zeros((B, cfg.n_classes), jnp.float32),
+        done=~valid,                       # padding rows are born done
+        completed=jnp.zeros((B,)),
+        last_lat=jnp.zeros((B,)),
+    )
+
+    def cond(carry):
+        step, _, ts, t = carry
+        return (~ts["done"].all()) & (step < cfg.batch_steps) \
+            & (t <= t0 + cfg.max_batch_time)
+
+    def body(carry):
+        step, ws, ts, t = carry
+        ws, ts, t_next = _tick(cfg, ws, ts, banks, true_labels, t0, t,
+                               seed_u32, step)
+        return step + 1, ws, ts, t_next
+
+    _, ws, ts, _ = jax.lax.while_loop(
+        cond, body, (jnp.zeros((), jnp.int32), ws, ts, t0 + cfg.dt))
+    t_end = jnp.maximum(ts["completed"].max(), t0)
+    # a batch that hit its time/step budget can leave workers mid-task;
+    # terminate those assignments so they cannot scatter votes into the
+    # next batch's identically-indexed tasks
+    still = ws["assigned"] >= 0
+    ws["assigned"] = jnp.where(still, -1, ws["assigned"])
+    ws["busy_until"] = jnp.where(still, INF, ws["busy_until"])
+    return ws, ts, t_end
+
+
+def _simulate_one(cfg: FastConfig, key, true_labels):
+    k_init, k_run = jax.random.split(key)
+    ws, banks = _init_workers(cfg, k_init)
+    seed = jax.random.bits(k_run, (), jnp.uint32)
+    B, T = cfg.eff_batch, cfg.n_tasks
+    pad = cfg.n_batches * B - T
+    labels = jnp.concatenate(
+        [true_labels.astype(jnp.int32), jnp.zeros((pad,), jnp.int32)])
+    valid = jnp.concatenate([jnp.ones((T,), bool), jnp.zeros((pad,), bool)])
+    labels = labels.reshape(cfg.n_batches, B)
+    valid = valid.reshape(cfg.n_batches, B)
+
+    def batch_body(carry, xs):
+        ws, t, i = carry
+        lab, val = xs
+        seed_b = _lowbias32(seed ^ (i.astype(jnp.uint32) + 1)
+                            * jnp.uint32(0x9E3779B9))
+        ws, ts, t_end = _run_batch(cfg, ws, banks, t, seed_b, lab, val)
+        fin = ts["done"] & val
+        out = dict(latency=jnp.where(fin, ts["completed"] - t, 0.0),
+                   done=fin,
+                   result=ts["votes"].argmax(-1))
+        return (ws, t_end, i + 1), out
+
+    (ws, t_end, _), outs = jax.lax.scan(
+        batch_body, (ws, jnp.zeros(()), jnp.zeros((), jnp.int32)),
+        (labels, valid))
+    done = outs["done"].reshape(-1)
+    result = outs["result"].reshape(-1)
+    lab_f = labels.reshape(-1)
+    return dict(
+        latency=outs["latency"].reshape(-1)[:T],
+        result=result[:T],
+        done=done[:T],
+        total_time=t_end,
+        # undone tasks count against accuracy (event loop divides by all
+        # created tasks too)
+        accuracy=((result == lab_f) & done).sum() / max(T, 1),
+        cost=ws["cost_wait"] + ws["cost_work"],
+        cost_wait=ws["cost_wait"],
+        cost_work=ws["cost_work"],
+        n_evicted=ws["n_evicted"],
+        n_churned=ws["n_churned"],
+        mean_pool_mu=ws["mu"].mean(),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _simulate_batch(cfg: FastConfig, keys, true_labels):
+    return jax.vmap(lambda k: _simulate_one(cfg, k, true_labels))(keys)
+
+
+@functools.partial(jax.pmap, static_broadcasted_argnums=0,
+                   in_axes=(None, 0, None))
+def _simulate_sharded(cfg: FastConfig, keys, true_labels):
+    return jax.vmap(lambda k: _simulate_one(cfg, k, true_labels))(keys)
+
+
+def simulate(cfg: FastConfig, n_reps: int, *, seed: int = 0,
+             true_labels=None, shard: bool = True):
+    """Run ``n_reps`` independent replications of the labeling simulation.
+
+    Replications are vmapped on one device; with multiple local devices
+    (e.g. ``--xla_force_host_platform_device_count=N`` on a multi-core CPU
+    host, or a TPU pod slice) and ``shard=True`` they are additionally
+    pmapped across devices.
+
+    Returns a dict of stacked device arrays with leading dim ``n_reps``:
+    latency (n_reps, n_tasks), done, result, total_time, accuracy, cost and
+    pool counters.
+    """
+    if true_labels is None:
+        true_labels = np.zeros(cfg.n_tasks, dtype=np.int32)
+    true_labels = jnp.asarray(true_labels, jnp.int32)
+    D = jax.local_device_count()
+    if shard and D > 1 and n_reps >= D:
+        # pad the key batch to a device multiple so sharding never silently
+        # degrades to one device, then drop the padded replications
+        pad = (-n_reps) % D
+        keys = jax.random.split(jax.random.key(seed), n_reps + pad)
+        out = _simulate_sharded(cfg, keys.reshape(D, -1), true_labels)
+        return {k: v.reshape(n_reps + pad, *v.shape[2:])[:n_reps]
+                for k, v in out.items()}
+    keys = jax.random.split(jax.random.key(seed), n_reps)
+    return _simulate_batch(cfg, keys, true_labels)
+
+
+# --------------------------------------------------------------------------
+# hybrid / active learner step (Pallas entropy kernel inside the loop)
+# --------------------------------------------------------------------------
+
+def _entropy_scores(logits, use_kernel: bool):
+    if use_kernel:
+        from repro.kernels.uncertainty import entropy_scores
+        return entropy_scores(logits, interpret=jax.default_backend() != "tpu")
+    from repro.kernels import ref
+    return ref.entropy_ref(logits)
+
+
+def make_learner_step(n_passive: int, k_active: int, fit_steps: int = 60,
+                      use_kernel: bool = True):
+    """Jitted batched hybrid-learning step (paper §5.1 point selection).
+
+    Selection scores every candidate's predictive entropy through the fused
+    Pallas kernel (streaming softmax, no HBM materialization; interpret mode
+    on CPU, Mosaic on TPU) and picks the top-``k_active`` unlabeled points
+    plus ``n_passive`` random ones; the fit is masked full-batch Adam over
+    the labeled set (learner._fit with zero weights on unlabeled rows), so
+    the whole step is one fixed-shape jitted function usable inside lax.scan.
+    """
+    from repro.core.learner import _fit
+
+    @jax.jit
+    def step(W, b, X, labeled, y_obs, key):
+        n = X.shape[0]
+        logits = X @ W + b
+        ent = _entropy_scores(logits, use_kernel)
+        ent = jnp.where(labeled, -INF, ent)
+        _, act = jax.lax.top_k(ent, max(k_active, 1))
+        act = act[:k_active]
+        act_mask = jnp.zeros((n,), bool).at[act].set(k_active > 0)
+        u = jax.random.uniform(key, (n,))
+        u = jnp.where(labeled | act_mask, -INF, u)
+        _, pas = jax.lax.top_k(u, max(n_passive, 1))
+        pas = pas[:n_passive]
+        chosen = jnp.concatenate([act, pas]).astype(jnp.int32)
+        sw = labeled.astype(jnp.float32)
+        W2, b2 = _fit(W, b, X, y_obs, sw, steps=fit_steps)
+        has = labeled.any()
+        W2 = jnp.where(has, W2, W)
+        b2 = jnp.where(has, b2, b)
+        return W2, b2, chosen, act_mask
+
+    return step
+
+
+def simulate_learning(cfg: FastConfig, X, y, X_test, y_test, *,
+                      rounds: int = 10, k_active: Optional[int] = None,
+                      seed: int = 0, fit_steps: int = 60,
+                      decision_latency_s: float = 15.0,
+                      use_kernel: bool = True):
+    """Hybrid learning loop on the vectorized engine (single replication).
+
+    Each round: the jitted learner step selects pool_size points (top-k
+    uncertain via the Pallas entropy kernel + random passive fill), the
+    vectorized sim labels them as one batch, and the learner refits on all
+    labels so far. Returns (curve, info) where curve = [(sim_time, n_labeled,
+    test_acc)] like ClamShell.run_learning.
+    """
+    X = jnp.asarray(X, jnp.float32)
+    X_test = jnp.asarray(X_test, jnp.float32)
+    y_test = np.asarray(y_test)
+    y = np.asarray(y)
+    n, d = X.shape
+    n_classes = int(y.max()) + 1
+    p = cfg.pool_size
+    if k_active is None:
+        k_active = p // 2
+    n_passive = p - k_active
+    step = make_learner_step(n_passive, k_active, fit_steps, use_kernel)
+    bcfg = dataclasses.replace(cfg, n_tasks=p, batch_size=p,
+                               n_classes=n_classes)
+
+    W = jnp.zeros((d, n_classes), jnp.float32)
+    b = jnp.zeros((n_classes,), jnp.float32)
+    labeled = jnp.zeros((n,), bool)
+    y_obs = jnp.zeros((n,), jnp.int32)
+    key = jax.random.key(seed)
+    t_sim = 0.0
+
+    def test_acc(W, b):
+        return float((np.asarray((X_test @ W + b).argmax(-1))
+                      == y_test).mean())
+
+    curve = [(0.0, 0, test_acc(W, b))]
+    for _ in range(rounds):
+        key, k_sel, k_sim = jax.random.split(key, 3)
+        W, b, chosen, _ = step(W, b, X, labeled, y_obs, k_sel)
+        chosen_np = np.asarray(chosen)
+        out = _simulate_batch(bcfg, jax.random.split(k_sim, 1),
+                              jnp.asarray(y[chosen_np], jnp.int32))
+        y_obs = y_obs.at[chosen].set(out["result"][0].astype(jnp.int32))
+        labeled = labeled.at[chosen].set(out["done"][0])
+        t_sim += float(out["total_time"][0]) + decision_latency_s
+        curve.append((t_sim, int(labeled.sum()), test_acc(W, b)))
+    return curve, dict(W=W, b=b, labeled=labeled, y_obs=y_obs)

@@ -9,6 +9,7 @@ exactly the paper's simulator model; labels are correct w.p. lambda_i.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 import numpy as np
 
@@ -70,7 +71,7 @@ class Population:
     acc_a: float = 18.0            # Beta prior for accuracy (~0.9 mean)
     acc_b: float = 2.0
     seed: int = 0
-    _rng: np.random.Generator = field(default=None, repr=False)
+    _rng: Optional[np.random.Generator] = field(default=None, repr=False)
     _next_id: int = 0
 
     def __post_init__(self):

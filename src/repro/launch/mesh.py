@@ -6,17 +6,20 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _mesh_kwargs(n):
+    # jax.sharding.AxisType landed after 0.4.37; older jax defaults to Auto
+    at = getattr(jax.sharding, "AxisType", None)
+    return {"axis_types": (at.Auto,) * n} if at is not None else {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; multi-pod adds a leading 2-pod axis (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def make_local_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh for tests (requires the host-device XLA flag set by caller)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"), axis_types=_auto(2))
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         **_mesh_kwargs(2))

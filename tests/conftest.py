@@ -1,0 +1,26 @@
+"""Shared test fixtures/markers.
+
+Kernel tests run Pallas in interpret mode everywhere (CPU CI included);
+anything that needs real Mosaic lowering must be marked ``@pytest.mark.tpu``
+and is auto-skipped unless jax reports a TPU backend.
+"""
+import pytest
+
+
+def _backend() -> str:
+    import jax
+    try:
+        return jax.default_backend()
+    except Exception:
+        return "cpu"
+
+
+def pytest_collection_modifyitems(config, items):
+    if _backend() == "tpu":
+        return
+    skip_tpu = pytest.mark.skip(
+        reason="requires TPU backend (Pallas Mosaic path); CPU runners "
+               "exercise the same kernels via interpret mode")
+    for item in items:
+        if "tpu" in item.keywords:
+            item.add_marker(skip_tpu)

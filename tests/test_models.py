@@ -54,7 +54,14 @@ def test_smoke_forward_and_train_step(arch):
 
 @pytest.mark.parametrize("arch", sorted(ARCHS))
 def test_decode_matches_full_forward(arch):
+    import dataclasses
     cfg = reduced(ARCHS[arch])
+    if cfg.n_experts:
+        # expert-capacity token dropping depends on how many tokens compete
+        # for a slot, which differs between the full forward (S+1 tokens)
+        # and prefill/decode — raise capacity so no token is ever dropped
+        # and the test checks KV-cache consistency, not routing pressure
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
     params = init_params(model_template(cfg), jax.random.key(0))
     B, S = 2, 16
     tokens, cs = _inputs(cfg, B, S + 1, jax.random.key(1))

@@ -5,6 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dep: property tests need hypothesis (pip install "
+           "hypothesis); the rest of the tier-1 suite runs without it")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.maintenance import termest_latency
@@ -106,3 +111,39 @@ def test_simulator_determinism(seed):
     r2 = ClamShell(CSConfig(pool_size=6, seed=seed)).run_labeling(12)
     assert r1.total_time == r2.total_time
     assert r1.task_latencies == r2.task_latencies
+
+
+# --------------------------------------------------- simfast properties ----
+# Configs are drawn from a small fixed set so the jit cache is reused across
+# hypothesis examples (every distinct static config recompiles the engine).
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_simfast_percentiles_monotone_in_pool_size(seed):
+    """Adding workers to a fixed batch never worsens latency percentiles."""
+    from repro.core.simfast import FastConfig, simulate
+    from repro.core.simfast_stats import summarize
+    stats = []
+    for p in (8, 24):
+        cfg = FastConfig(pool_size=p, n_tasks=24, batch_size=8)
+        stats.append(summarize(simulate(cfg, 96, seed=seed)))
+    # tolerances sized to Monte-Carlo noise at 96 replications: the mean
+    # and median improve strictly; the p95 tail is the noisiest statistic
+    assert stats[1].mean_latency <= stats[0].mean_latency * 1.12
+    assert stats[1].p50_latency <= stats[0].p50_latency * 1.15
+    assert stats[1].p95_latency <= stats[0].p95_latency * 1.30
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_simfast_straggler_never_increases_mean_latency(seed):
+    """Straggler mitigation can only shed slow assignments; with the same
+    seed (shared worker draws) the mitigated pool is never slower."""
+    from repro.core.simfast import FastConfig, simulate
+    from repro.core.simfast_stats import summarize
+    on = summarize(simulate(
+        FastConfig(pool_size=10, n_tasks=30, straggler=True), 96, seed=seed))
+    off = summarize(simulate(
+        FastConfig(pool_size=10, n_tasks=30, straggler=False), 96, seed=seed))
+    assert on.mean_latency <= off.mean_latency * 1.05
+    assert on.mean_total_time <= off.mean_total_time * 1.05

@@ -1,0 +1,153 @@
+"""Vectorized-engine validation: distributional parity against the scalar
+event-loop simulator, determinism, behavioural invariants, and the jitted
+hybrid-learner step (Pallas entropy kernel in interpret mode on CPU)."""
+import numpy as np
+import pytest
+
+from repro.core.simfast import (
+    FastConfig, make_learner_step, simulate, simulate_learning,
+)
+from repro.core.simfast_stats import (
+    event_loop_summary, parity_report, summarize,
+)
+
+# one shared small config so the jit cache is warm across tests
+CFG = FastConfig(pool_size=10, n_tasks=40)
+
+
+# ---------------------------------------------------------------- parity ----
+
+def test_parity_straggler_mitigation():
+    """Mean/p50/p95 task latency and total time agree with the event loop
+    on the default straggler-mitigation config."""
+    fast = summarize(simulate(CFG, 192, seed=0))
+    slow = event_loop_summary(CFG, 15, seed=0)
+    rep = parity_report(fast, slow)
+    assert fast.frac_done > 0.995
+    assert rep["mean_latency_rel"] < 0.20, rep
+    assert rep["p50_latency_rel"] < 0.20, rep
+    assert rep["p95_latency_rel"] < 0.30, rep
+    assert rep["total_time_rel"] < 0.25, rep
+    assert rep["accuracy_abs"] < 0.08, rep
+
+
+def test_parity_no_straggler():
+    cfg = FastConfig(pool_size=10, n_tasks=40, straggler=False)
+    fast = summarize(simulate(cfg, 192, seed=0))
+    slow = event_loop_summary(cfg, 15, seed=0)
+    rep = parity_report(fast, slow)
+    assert rep["mean_latency_rel"] < 0.20, rep
+    assert rep["p95_latency_rel"] < 0.30, rep
+
+
+def test_parity_multi_vote_qc():
+    cfg = FastConfig(pool_size=12, n_tasks=48, votes_needed=3)
+    fast = summarize(simulate(cfg, 192, seed=0))
+    slow = event_loop_summary(cfg, 12, seed=0)
+    rep = parity_report(fast, slow)
+    assert rep["mean_latency_rel"] < 0.20, rep
+    assert rep["p95_latency_rel"] < 0.30, rep
+    # 3-vote majority over ~90%-accurate workers is very accurate
+    assert fast.accuracy > 0.93
+
+
+def test_determinism():
+    a = simulate(CFG, 32, seed=7)
+    b = simulate(CFG, 32, seed=7)
+    np.testing.assert_array_equal(np.asarray(a["latency"]),
+                                  np.asarray(b["latency"]))
+    np.testing.assert_array_equal(np.asarray(a["result"]),
+                                  np.asarray(b["result"]))
+
+
+# ----------------------------------------------------------- invariants ----
+
+def test_straggler_mitigation_reduces_latency_and_variance():
+    """Paper Fig 9/10: SM cuts mean latency and batch variance."""
+    on = summarize(simulate(CFG, 192, seed=3))
+    off = summarize(simulate(
+        FastConfig(pool_size=10, n_tasks=40, straggler=False), 192, seed=3))
+    assert on.mean_latency < 0.6 * off.mean_latency
+    assert on.std_latency < 0.6 * off.std_latency
+    assert on.mean_total_time < off.mean_total_time
+
+
+def test_latency_monotone_in_pool_size():
+    """More workers on a fixed batch never hurts latency percentiles."""
+    p95 = []
+    mean = []
+    for p in (8, 16, 32):
+        cfg = FastConfig(pool_size=p, n_tasks=32, batch_size=8)
+        s = summarize(simulate(cfg, 128, seed=1))
+        p95.append(s.p95_latency)
+        mean.append(s.mean_latency)
+    assert mean[1] <= mean[0] * 1.05 and mean[2] <= mean[1] * 1.05
+    assert p95[1] <= p95[0] * 1.10 and p95[2] <= p95[1] * 1.10
+
+
+def test_pool_maintenance_evicts_and_speeds_up():
+    """PM_l eviction replaces slow workers; mean pool mu drops and the run
+    gets faster than the unmaintained pool."""
+    base_cfg = FastConfig(pool_size=15, n_tasks=120, straggler=False)
+    main_cfg = FastConfig(pool_size=15, n_tasks=120, straggler=False,
+                          pm_l=150.0, session_mean_s=7200.0)
+    base = simulate(base_cfg, 96, seed=2)
+    maint = simulate(main_cfg, 96, seed=2)
+    assert float(np.asarray(maint["n_evicted"]).mean()) > 1.0
+    assert float(np.asarray(maint["mean_pool_mu"]).mean()) < \
+        float(np.asarray(base["mean_pool_mu"]).mean())
+
+
+def test_retainer_beats_cold_recruitment():
+    """Base-NR (cold pool) pays the recruitment latency (paper §6.6)."""
+    warm = summarize(simulate(
+        FastConfig(pool_size=10, n_tasks=30), 128, seed=4))
+    cold = summarize(simulate(
+        FastConfig(pool_size=10, n_tasks=30, retainer=False), 128, seed=4))
+    assert warm.mean_total_time < cold.mean_total_time
+
+
+def test_accuracy_tracks_worker_population():
+    truth = np.random.default_rng(0).integers(0, 2, CFG.n_tasks)
+    out = simulate(CFG, 128, seed=5, true_labels=truth)
+    acc = float(np.asarray(out["accuracy"]).mean())
+    assert 0.82 < acc < 0.99    # ~90% single-vote worker accuracy
+
+
+# ------------------------------------------------------- hybrid learner ----
+
+def test_learner_step_selects_uncertain_points():
+    import jax
+    import jax.numpy as jnp
+
+    step = make_learner_step(n_passive=2, k_active=2, fit_steps=10)
+    n, d, c = 64, 4, 2
+    key = jax.random.key(0)
+    X = jax.random.normal(key, (n, d))
+    W = jnp.zeros((d, c)).at[0, 0].set(8.0)    # rows with large |x0| certain
+    b = jnp.zeros((c,))
+    labeled = jnp.zeros((n,), bool)
+    y_obs = jnp.zeros((n,), jnp.int32)
+    W2, b2, chosen, act_mask = step(W, b, X, labeled, y_obs, key)
+    ent = -np.abs(np.asarray(X[:, 0]))          # high when |x0| small
+    chosen_act = np.asarray(chosen[:2])
+    assert len(set(chosen_act.tolist())) == 2
+    # the two active picks are among the most uncertain quartile
+    thresh = np.quantile(ent, 0.75)
+    assert all(ent[i] >= thresh for i in chosen_act)
+
+
+def test_hybrid_learning_curve_improves():
+    rng = np.random.default_rng(0)
+    N, d = 600, 8
+    W0 = rng.normal(size=(d, 2))
+    X = rng.normal(size=(N, d)).astype(np.float32)
+    y = (X @ W0).argmax(-1)
+    Xt = rng.normal(size=(200, d)).astype(np.float32)
+    yt = (Xt @ W0).argmax(-1)
+    cfg = FastConfig(pool_size=10)
+    curve, info = simulate_learning(cfg, X, y, Xt, yt, rounds=6, seed=0,
+                                    fit_steps=40)
+    assert curve[-1][1] >= 40                  # labels acquired
+    assert curve[-1][2] > curve[0][2] + 0.15   # test accuracy improved
+    assert all(b[0] >= a[0] for a, b in zip(curve, curve[1:]))  # time monotone
