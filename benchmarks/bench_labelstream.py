@@ -1,0 +1,133 @@
+"""labelstream service under sustained load: steady-state throughput and
+p50/p95/p99 time-in-system vs offered load.
+
+Three sections:
+
+  1. load sweep — the full streaming service (ring-buffer window, straggler
+     mitigation, pool maintenance, adaptive redundancy) across offered
+     loads; one compilation, the load is a traced rate_scale;
+  2. the ISSUE acceptance headline — the largest offered load each
+     architecture sustains (completion ratio >= 95% of the finalizable
+     arrivals, p95 time-in-system <= budget): the streaming service must
+     carry >= 5x the naive fixed-batch replay (same machinery with
+     ``batch_replay=True``, no straggler mitigation, fixed redundancy —
+     drain the window, then refill);
+  3. adaptive redundancy — on a skewed-difficulty workload, posterior-
+     confidence stopping must cut total votes >= 20% at matched accuracy
+     vs fixed ``votes_needed``.
+
+``--smoke`` runs one small config per architecture in seconds.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import emit, timed
+
+P95_BUDGET_S = 2400.0
+
+
+def _cfgs(smoke: bool):
+    from repro.labelstream import ArrivalConfig, PolicyConfig, StreamConfig
+    dims = dict(n_shards=2, pool_size=8, window=32, dt=5.0, tis_bin_s=16.0,
+                arrivals=ArrivalConfig(kind="poisson", rate=0.01))
+    if smoke:
+        dims.update(pool_size=6, window=16)
+    stream = StreamConfig(
+        **dims, pm_l=240.0,
+        policy=PolicyConfig(adaptive=True, votes_cap=3, conf_threshold=0.95,
+                            min_votes=1, max_outstanding=1))
+    naive = StreamConfig(
+        **dims, batch_replay=True, straggler=False,
+        policy=PolicyConfig(adaptive=False, votes_cap=3))
+    return stream, naive
+
+
+def _sweep(name, cfg, scales, horizon, reps, budget=P95_BUDGET_S):
+    """Emit one row per load; return the best sustained load within budget."""
+    import jax
+
+    from repro.labelstream import run_stream, stream_summary
+    # untimed warm-up call so every emitted row times warm execution
+    # (the first jit of a (cfg, horizon) pair is compile-dominated)
+    jax.block_until_ready(run_stream(cfg, horizon, n_reps=reps, seed=17,
+                                     rate_scale=scales[0]))
+    best = 0.0
+    for i, sc in enumerate(scales):
+        # block inside the timed region: run_stream returns unrealized
+        # device arrays and an un-blocked timing would only measure dispatch
+        (out, us) = timed(
+            lambda: jax.block_until_ready(
+                run_stream(cfg, horizon, n_reps=reps, seed=17 + i,
+                           rate_scale=sc)))
+        s = stream_summary(cfg, out)
+        stable = s["completion_ratio"] >= 0.95
+        ok = stable and s["p95_tis"] <= budget
+        emit(f"labelstream_{name}_load{sc:g}", us / max(horizon, 1),
+             f"offered_tps={s['offered_rate']:.4f};"
+             f"sustained_tps={s['sustained_rate']:.4f};"
+             f"p50_s={s['p50_tis']:.0f};p95_s={s['p95_tis']:.0f};"
+             f"p99_s={s['p99_tis']:.0f};acc={s['accuracy']:.3f};"
+             f"votes={s['votes_per_task']:.2f};"
+             f"ok_at_p95_budget={int(ok)}")
+        if ok:
+            best = max(best, s["sustained_rate"])
+    return best
+
+
+def run(smoke: bool = False):
+    from repro.labelstream import run_stream, stream_summary
+    from repro.labelstream.policy import PolicyConfig
+    import dataclasses
+
+    horizon = 700 if smoke else 2500
+    reps = 2 if smoke else 4
+    stream, naive = _cfgs(smoke)
+
+    # -- 1 + 2: load sweeps, then the equal-p95 capacity ratio ------------
+    if smoke:
+        # one compilation only: the streaming service at two loads (the
+        # rate_scale is traced, so the second point is a warm re-run)
+        _sweep("stream", stream, (2.0, 3.0), horizon, reps)
+        return
+    best_stream = _sweep("stream", stream, (2.0, 3.0, 4.0, 4.5, 5.0),
+                         horizon, reps)
+    best_naive = _sweep("batchreplay", naive, (0.25, 0.5, 0.75, 1.0),
+                        horizon, reps)
+    if best_stream > 0 and best_naive > 0:
+        ratio = f"{best_stream / best_naive:.1f}"
+    else:
+        # a sweep with no stable point is a failed comparison, not a win
+        ratio = "nan_no_stable_point"
+    emit("labelstream_capacity_ratio", 0.0,
+         f"stream_tps={best_stream:.4f};batchreplay_tps={best_naive:.4f};"
+         f"ratio_x={ratio};p95_budget_s={P95_BUDGET_S:.0f};"
+         f"target_x=5")
+
+    # -- 3: adaptive redundancy on a skewed-difficulty workload -----------
+    fixed5 = dataclasses.replace(
+        stream, p_hard=0.25, hard_scale=0.3,
+        policy=PolicyConfig(adaptive=False, votes_cap=5))
+    adapt5 = dataclasses.replace(
+        stream, p_hard=0.25, hard_scale=0.3,
+        policy=PolicyConfig(adaptive=True, votes_cap=5, conf_threshold=0.98,
+                            min_votes=2, max_outstanding=2))
+    rows = {}
+    for name, cfg in (("fixed5", fixed5), ("adaptive5", adapt5)):
+        out = run_stream(cfg, horizon, n_reps=reps, seed=5, rate_scale=1.0)
+        s = stream_summary(cfg, out)
+        rows[name] = s
+        emit(f"labelstream_{name}_skewed", 0.0,
+             f"sustained_tps={s['sustained_rate']:.4f};"
+             f"p95_s={s['p95_tis']:.0f};acc={s['accuracy']:.3f};"
+             f"votes_per_task={s['votes_per_task']:.2f}")
+    saved = 1.0 - rows["adaptive5"]["votes_per_task"] \
+        / max(rows["fixed5"]["votes_per_task"], 1e-9)
+    emit("labelstream_adaptive_savings", 0.0,
+         f"votes_saved_pct={100 * saved:.1f};"
+         f"acc_fixed={rows['fixed5']['accuracy']:.3f};"
+         f"acc_adaptive={rows['adaptive5']['accuracy']:.3f};target_pct=20")
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

@@ -17,7 +17,7 @@ def main() -> None:
     from benchmarks import bench_simfast
     from benchmarks import (bench_workers, bench_straggler, bench_pool,
                             bench_combined, bench_hybrid, bench_e2e,
-                            bench_kernels, roofline)
+                            bench_kernels, bench_labelstream, roofline)
     print("name,us_per_call,derived")
     t0 = time.time()
     if smoke:
@@ -27,6 +27,8 @@ def main() -> None:
         bench_straggler.run(n_tasks=20, seeds=(3,))
         print("# --- smoke: pallas kernels (interpret) ---", flush=True)
         bench_kernels.run(validate_only=True)
+        print("# --- smoke: labelstream service ---", flush=True)
+        bench_labelstream.run(smoke=True)
         print(f"# total {time.time()-t0:.1f}s", flush=True)
         return
     for mod, tag in ((bench_workers, "worker latency CDFs (Fig 2)"),
@@ -37,6 +39,7 @@ def main() -> None:
                      (bench_e2e, "end-to-end (Fig 17-18, s6.6)"),
                      (bench_simfast, "vectorized engine vs event loop"),
                      (bench_kernels, "pallas kernels"),
+                     (bench_labelstream, "labelstream streaming service"),
                      (roofline, "roofline (dry-run artifacts)")):
         print(f"# --- {tag} ---", flush=True)
         mod.run()

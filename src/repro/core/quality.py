@@ -1,11 +1,19 @@
-"""Quality control: redundancy voting and EM worker-accuracy estimation.
+"""Quality control: redundancy voting and Dawid-Skene worker-accuracy EM.
 
 CLAMShell's latency techniques are explicitly compatible with standard QC
 (paper §4.1 "Working with Quality Control"): a task needing v votes stays
 `active` until it has v answers, and straggler mitigation adds at most one
 duplicate per missing vote (implemented in core/lifeguard.py). This module
-provides the vote aggregation + a Dawid-Skene-style EM accuracy estimator
-used to weight votes and to drive quality-based pool maintenance.
+provides the vote aggregation + the EM accuracy estimator used to weight
+votes and to drive quality-based pool maintenance.
+
+The EM engine is the batched JAX Dawid-Skene in
+``labelstream/aggregate.py`` (vmap over replications, scan over EM
+iterations, fused Pallas E-step on TPU); :func:`em_worker_accuracy` is the
+list-of-votes front door that the event-loop Maintainer keeps calling. The
+original scalar dict-based implementation survives as
+:func:`em_worker_accuracy_ref` — the parity oracle for
+tests/test_labelstream.py, not a production path.
 """
 from __future__ import annotations
 
@@ -13,15 +21,22 @@ import numpy as np
 
 
 def majority_vote(votes, n_classes: int) -> int:
-    counts = np.zeros(n_classes)
+    counts = np.zeros(max(n_classes, 1))
     for label, *_ in votes:
         counts[label] += 1
     return int(counts.argmax())
 
 
 def weighted_vote(votes, n_classes: int, acc_by_worker: dict) -> int:
-    """Log-odds weighted vote using estimated worker accuracies."""
-    scores = np.zeros(n_classes)
+    """Log-odds weighted vote using estimated worker accuracies.
+
+    Estimated accuracies are clipped away from {0, 1} before the log-odds
+    transform: a unanimous vote window can drive a worker's EM estimate to
+    the boundary, and an unclipped ``log(a / (1 - a))`` would hand that one
+    worker an infinite weight (and NaNs once two such workers disagree).
+    An empty vote list returns class 0 rather than crashing.
+    """
+    scores = np.zeros(max(n_classes, 1))
     for label, wid, *_ in votes:
         a = np.clip(acc_by_worker.get(wid, 0.7), 0.51, 0.999)
         w = np.log(a / (1 - a))
@@ -30,12 +45,33 @@ def weighted_vote(votes, n_classes: int, acc_by_worker: dict) -> int:
 
 
 def em_worker_accuracy(task_votes, n_classes: int, *, iters: int = 20):
-    """One-coin Dawid-Skene EM.
+    """One-coin Dawid-Skene EM (vectorized engine).
 
-    task_votes: list of [(label, worker_id), ...] per task.
-    Returns (posterior_labels, acc_by_worker).
+    task_votes: list of [(label, worker_id), ...] per task (empty vote
+    lists are fine — those tasks get a uniform posterior). Returns
+    ``(posterior_labels, acc_by_worker)`` exactly like the scalar
+    reference; shapes are bucket-padded inside ``labelstream.aggregate``
+    so the Maintainer's rolling-window calls reuse a few jit entries.
+    """
+    from repro.labelstream.aggregate import aggregate_votes
+    labels, acc, _ = aggregate_votes(task_votes, n_classes, iters=iters,
+                                     one_coin=True)
+    return labels, acc
+
+
+def em_worker_accuracy_ref(task_votes, n_classes: int, *, iters: int = 20):
+    """Scalar one-coin Dawid-Skene EM — the readable reference the
+    vectorized engine is parity-tested against.
+
+    Edge cases handled (shared with the vectorized path): tasks with empty
+    vote lists keep a uniform posterior; estimated accuracies are clipped
+    away from 0/1 before entering ``log``; degenerate inputs (no votes at
+    all, or fewer than two classes) return uniform labels instead of
+    dividing by ``n_classes - 1 == 0``.
     """
     workers = sorted({w for votes in task_votes for _, w in votes})
+    if not workers or n_classes < 2:
+        return [0] * len(task_votes), {w: 0.8 for w in workers}
     acc = {w: 0.8 for w in workers}
     post = [np.ones(n_classes) / n_classes for _ in task_votes]
     for _ in range(iters):

@@ -230,6 +230,42 @@ def _uniform_block(seed_u32, step, n: int):
     return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
 
 
+def priority_match(avail, tier1, tier2, shift):
+    """Rank-based two-tier matching of available workers onto eligible task
+    slots without a sort and without a (P, B) match matrix.
+
+    The r-th available worker (by slot index) takes the r-th eligible task,
+    draining ``tier1`` tasks first and then ``tier2``; task order inside a
+    tier is slot order rotated by the random ``shift`` (the event loop picks
+    uniformly; with iid workers only the tier-2 choice is distribution-
+    relevant, and the paper's §4.1 result is that random routing matches
+    oracle anyway). Each eligible task receives at most one worker per tier
+    per call. Shared by the simfast batch engine and the labelstream
+    streaming router.
+
+    Returns ``(take, task_for_w, took_tier1, n_tier1)``: per-worker
+    assignment mask, matched task index, tier-1 membership, and the number
+    of tier-1-eligible tasks.
+    """
+    B = tier1.shape[0]
+    t1_r = jnp.roll(tier1, -shift)
+    t2_r = jnp.roll(tier2, -shift)
+    c1 = jnp.cumsum(t1_r.astype(jnp.int32))
+    c2 = jnp.cumsum(t2_r.astype(jnp.int32))
+    n1 = c1[-1]
+    n_elig = n1 + c2[-1]
+    # rank->task lookup without a (P, B) match matrix: the r-th eligible
+    # task is the first index where the running count reaches r+1
+    wrank = (jnp.cumsum(avail) - 1).astype(jnp.int32)
+    q1 = jnp.searchsorted(c1, wrank + 1)
+    q2 = jnp.searchsorted(c2, wrank - n1 + 1)
+    take = avail & (wrank < n_elig)
+    task_rot = jnp.where(wrank < n1, q1, q2).astype(jnp.int32)
+    task_for_w = (jnp.clip(task_rot, 0, B - 1) + shift) % B
+    took_tier1 = take & (wrank < n1)
+    return take, task_for_w, took_tier1, n1
+
+
 def _replace_slots(cfg: FastConfig, ws, banks, leave, t, u_delay, u_sess,
                    recruit_mean):
     """Slots in `leave` exit the pool; fresh workers (from the pre-drawn
@@ -254,6 +290,53 @@ def _replace_slots(cfg: FastConfig, ws, banks, leave, t, u_delay, u_sess,
     for f in ("comp_sum", "comp_sqsum", "term_sum"):
         ws[f] = sel(zf, ws[f])
     return ws
+
+
+def draw_latency(cfg: FastConfig, mu, sigma, u1, u2):
+    """Floored Box-Muller worker-latency draw from two uniform blocks.
+    Shared by the simfast batch tick and the labelstream streaming tick so
+    the two engines cannot silently diverge on the latency model."""
+    nrm = jnp.sqrt(-2.0 * jnp.log1p(-u1)) * jnp.cos(2.0 * jnp.pi * u2)
+    return jnp.maximum(cfg.latency_floor, mu + sigma * nrm)
+
+
+def churn_and_maintain(cfg: FastConfig, ws, banks, t, u_delay, u_sess,
+                       recruit_mean):
+    """Session churn + PM_l latency eviction + bank backfill, vectorized.
+
+    Idle workers whose session ended leave; when maintenance is enabled
+    (finite ``pm_l``) idle live workers whose TermEst-corrected latency
+    estimate significantly exceeds the threshold (one-sided test, same
+    semantics as maintenance.Maintainer) are evicted too. Departing slots
+    are refilled from the pre-drawn banks after an exponential recruitment
+    delay. Returns ``(ws, leave)``. Shared by the simfast batch tick and
+    the labelstream streaming tick.
+    """
+    ws = dict(ws)
+    idle = ws["assigned"] < 0
+    arrived = ws["blocked_until"] <= t
+    churned = idle & arrived & (ws["session_end"] <= t)
+    ws["n_churned"] = ws["n_churned"] + churned.sum()
+    leave = churned
+    if math.isfinite(cfg.pm_l):
+        live = arrived & (ws["session_end"] > t)
+        est = _termest(cfg, ws) if cfg.use_termest else \
+            jnp.where(ws["n_completed"] > 0,
+                      ws["comp_sum"] / jnp.maximum(
+                          ws["n_completed"].astype(jnp.float32), 1.0),
+                      jnp.nan)
+        s = _emp_std(ws)
+        s = jnp.where(jnp.isfinite(s) & (s > 0), s, 0.5 * est)
+        n_eff = jnp.maximum(ws["n_completed"] + ws["n_terminated"], 1
+                            ).astype(jnp.float32)
+        signif = (est - cfg.pm_l) >= cfg.z * s / jnp.sqrt(n_eff)
+        evict = (idle & live & (ws["n_started"] >= cfg.min_obs)
+                 & jnp.isfinite(est) & (est > cfg.pm_l) & signif)
+        ws["n_evicted"] = ws["n_evicted"] + evict.sum()
+        leave = churned | evict
+    ws = _replace_slots(cfg, ws, banks, leave, t, u_delay, u_sess,
+                        recruit_mean)
+    return ws, leave
 
 
 # --------------------------------------------------------------------------
@@ -327,32 +410,11 @@ def _tick(cfg: FastConfig, ws, ts, banks, true_label, t0, t, seed_u32, step):
     ws["busy_until"] = jnp.where(freed, INF, ws["busy_until"])
 
     # ---- churn + pool maintenance (single backfill update) -------------
-    idle = ws["assigned"] < 0
-    arrived = ws["blocked_until"] <= t
-    churned = idle & arrived & (ws["session_end"] <= t)
-    ws["n_churned"] = ws["n_churned"] + churned.sum()
-    leave = churned
-    if math.isfinite(cfg.pm_l):
-        live = arrived & (ws["session_end"] > t)
-        est = _termest(cfg, ws) if cfg.use_termest else \
-            jnp.where(ws["n_completed"] > 0,
-                      ws["comp_sum"] / jnp.maximum(
-                          ws["n_completed"].astype(jnp.float32), 1.0),
-                      jnp.nan)
-        s = _emp_std(ws)
-        s = jnp.where(jnp.isfinite(s) & (s > 0), s, 0.5 * est)
-        n_eff = jnp.maximum(ws["n_completed"] + ws["n_terminated"], 1
-                            ).astype(jnp.float32)
-        signif = (est - cfg.pm_l) >= cfg.z * s / jnp.sqrt(n_eff)
-        evict = (idle & live & (ws["n_started"] >= cfg.min_obs)
-                 & jnp.isfinite(est) & (est > cfg.pm_l) & signif)
-        ws["n_evicted"] = ws["n_evicted"] + evict.sum()
-        leave = churned | evict
     # churn backfill uses the cold mean for Base-NR (as does eviction,
     # matching RetainerPool._recruit_async drawing from pool.recruit_mean)
-    ws = _replace_slots(cfg, ws, banks, leave, t, up[2], up[3],
-                        cfg.recruit_mean_s if cfg.retainer
-                        else cfg.cold_recruit_mean_s)
+    ws, _ = churn_and_maintain(cfg, ws, banks, t, up[2], up[3],
+                               cfg.recruit_mean_s if cfg.retainer
+                               else cfg.cold_recruit_mean_s)
 
     # ---- assignment (priority routing + straggler duplication) ---------
     avail = (ws["assigned"] < 0) & (ws["blocked_until"] <= t) \
@@ -368,38 +430,19 @@ def _tick(cfg: FastConfig, ws, ts, banks, true_label, t0, t, seed_u32, step):
     else:
         mitig = jnp.zeros((B,), bool)
     # rank eligible tasks without a sort: unassigned first, then
-    # mitigation-eligible, in index order rotated by a per-tick random
-    # shift (the event loop picks uniformly; with iid workers only the
-    # mitigation choice is distribution-relevant, and the paper's §4.1
-    # result is that random routing matches oracle anyway)
+    # mitigation-eligible (priority_match docstring has the details)
     shift = (_uniform_block(seed_u32 ^ jnp.uint32(0xA5A5A5A5), step, 1)[0]
              * B).astype(jnp.int32)
-    un_r = jnp.roll(unass, -shift)
-    mi_r = jnp.roll(mitig, -shift)
-    c_un = jnp.cumsum(un_r.astype(jnp.int32))
-    c_mi = jnp.cumsum(mi_r.astype(jnp.int32))
-    n_un = c_un[-1]
-    n_elig = n_un + c_mi[-1]
-    # rank->task lookup without a (P, B) match matrix: the r-th eligible
-    # task is the first index where the running count reaches r+1
-    wrank = (jnp.cumsum(avail) - 1).astype(jnp.int32)
-    q_un = jnp.searchsorted(c_un, wrank + 1)
-    q_mi = jnp.searchsorted(c_mi, wrank - n_un + 1)
-    take = avail & (wrank < n_elig)
-    task_rot = jnp.where(wrank < n_un, q_un, q_mi).astype(jnp.int32)
-    task_for_w = (jnp.clip(task_rot, 0, B - 1) + shift) % B
+    take, task_for_w, took_unass, n_un = priority_match(
+        avail, unass, mitig, shift)
     # a worker drawing from the unassigned queue starts at its exact free
     # moment (the event loop never leaves a worker idle while unassigned
     # tasks remain) — a mitigation duplicate only starts once the tick
     # observes the slot, so it is not backdated
-    took_unass = take & (wrank < n_un)
     start = jnp.where(took_unass,
                       jnp.maximum(ws["blocked_until"], t0), t)
     # latency draw: Box-Muller from the fused uniform block
-    nrm = jnp.sqrt(-2.0 * jnp.log1p(-up[6])) * jnp.cos(
-        2.0 * jnp.pi * up[7])
-    lat_new = jnp.maximum(cfg.latency_floor,
-                          ws["mu"] + ws["sigma"] * nrm) \
+    lat_new = draw_latency(cfg, ws["mu"], ws["sigma"], up[6], up[7]) \
         * max(1, cfg.n_records) ** 0.9
     ws["assigned"] = jnp.where(take, task_for_w, ws["assigned"])
     ws["busy_until"] = jnp.where(take, start + lat_new, ws["busy_until"])

@@ -54,6 +54,16 @@ def margin_ref(logits):
     return top2[..., 0] - top2[..., 1]
 
 
+def ds_estep_ref(rows, idx):
+    """Dawid-Skene E-step oracle. rows: (R, C) log-confusion row table with a
+    trailing all-zero null row; idx: (T, V) per-vote row indices (null row
+    for padded votes). Returns (logp, post), both (T, C), with the uniform
+    -log C prior included in logp."""
+    C = rows.shape[1]
+    logp = rows[idx].sum(axis=1) - math.log(C)
+    return logp, jax.nn.softmax(logp, axis=-1)
+
+
 def xent_ref(logits, targets):
     """Per-row cross entropy. logits: (N, V), targets: (N,) -> (N,)."""
     lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)

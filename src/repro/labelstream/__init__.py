@@ -1,0 +1,39 @@
+"""labelstream: online streaming labeling service.
+
+Open-world counterpart to the fixed-batch simulators in ``core/``: tasks
+arrive continuously (``arrivals``), a jitted router admits them into a
+ring-buffer task window over sharded retainer pools (``router``), votes are
+aggregated by a batched full-confusion Dawid-Skene EM (``aggregate``, with a
+fused Pallas E-step kernel), and posterior-confidence adaptive redundancy
+(``policy``) stops requesting votes once a task's posterior is confident.
+
+Exports resolve lazily (PEP 562) so lower layers that only need one piece
+— e.g. ``core/quality.py`` fronting ``aggregate.dawid_skene`` — do not pay
+for importing the whole router machinery, and the core -> labelstream ->
+core.simfast import chain cannot go circular at package-import time.
+"""
+import importlib
+
+_EXPORTS = {
+    "dawid_skene": "aggregate",
+    "dawid_skene_batch": "aggregate",
+    "pack_votes": "aggregate",
+    "aggregate_votes": "aggregate",
+    "ArrivalConfig": "arrivals",
+    "sample_arrivals": "arrivals",
+    "PolicyConfig": "policy",
+    "StreamConfig": "router",
+    "run_stream": "router",
+    "stream_summary": "router",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        mod = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        value = getattr(mod, name)
+        globals()[name] = value          # cache for subsequent lookups
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

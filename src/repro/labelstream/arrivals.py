@@ -1,0 +1,70 @@
+"""Jitted task-arrival processes — the open-world side of labelstream.
+
+The batch engines replay a fixed finite task set; a streaming service must
+hold latency under *sustained* load, so offered load is itself a stochastic
+process. Three generators, all returning per-tick arrival counts from a
+fixed-shape jitted sampler (FROG, arXiv:1610.08411, models crowdsourcing
+arrivals the same way: Poisson base load with bursty and diurnal
+modulation):
+
+  * ``poisson``  — homogeneous Poisson(rate * dt) per tick;
+  * ``mmpp``     — 2-state Markov-modulated Poisson (bursty): exponential
+    dwell in a calm state at ``rate`` and a burst state at ``rate_hi``;
+  * ``diurnal``  — inhomogeneous Poisson with a sinusoidal day curve:
+    ``rate * (1 + amplitude * sin(2*pi*t/period))``.
+
+State is a dict of scalars carried through ``lax.scan``; configs are frozen
+dataclasses (hashable, static under jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalConfig:
+    kind: str = "poisson"        # poisson | mmpp | diurnal
+    rate: float = 0.05           # tasks/s (poisson; mmpp calm state;
+                                 # diurnal mean)
+    rate_hi: float = 0.2         # mmpp burst-state rate
+    dwell_mean_s: float = 600.0  # mmpp mean dwell time per state
+    period_s: float = 86400.0    # diurnal period
+    amplitude: float = 0.8       # diurnal modulation depth in [0, 1)
+
+
+def init_arrival_state(cfg: ArrivalConfig):
+    return dict(mode=jnp.zeros((), jnp.int32))   # mmpp state; unused otherwise
+
+
+def rate_at(cfg: ArrivalConfig, state, t):
+    """Instantaneous offered rate (tasks/s) at time t."""
+    if cfg.kind == "poisson":
+        return jnp.full((), cfg.rate)
+    if cfg.kind == "mmpp":
+        return jnp.where(state["mode"] == 0, cfg.rate, cfg.rate_hi)
+    if cfg.kind == "diurnal":
+        return cfg.rate * (1.0 + cfg.amplitude
+                           * jnp.sin(2.0 * jnp.pi * t / cfg.period_s))
+    raise ValueError(f"unknown arrival kind: {cfg.kind}")
+
+
+def sample_arrivals(cfg: ArrivalConfig, state, key, t, dt, scale=1.0):
+    """Draw the number of arrivals in [t, t+dt).
+
+    Returns ``(n, state, rate)``; jit-safe (``cfg.kind`` is static). The
+    mmpp mode flips with probability ``1 - exp(-dt/dwell)`` per tick — the
+    discretized 2-state chain. ``scale`` multiplies the offered rate and may
+    be a traced scalar, so load sweeps share one compilation of the
+    streaming tick instead of recompiling per sweep point.
+    """
+    k_n, k_sw = jax.random.split(key)
+    rate = rate_at(cfg, state, t) * scale
+    n = jax.random.poisson(k_n, jnp.maximum(rate, 0.0) * dt).astype(jnp.int32)
+    if cfg.kind == "mmpp":
+        p_switch = 1.0 - jnp.exp(-dt / cfg.dwell_mean_s)
+        flip = jax.random.uniform(k_sw) < p_switch
+        state = dict(mode=jnp.where(flip, 1 - state["mode"], state["mode"]))
+    return n, state, rate

@@ -1,0 +1,63 @@
+"""Posterior-confidence adaptive redundancy (vote-budget policy).
+
+Fixed redundancy ("Embracing Error to Enable Rapid Crowdsourcing",
+arXiv:1602.04506, inverted: they add error to save time, we trade votes
+against confidence) spends ``votes_cap`` votes on every task no matter how
+easy it is. The adaptive policy requests votes incrementally — at most
+``max_outstanding`` concurrent assignments per task — and finalizes a task
+as soon as its Dawid-Skene posterior clears ``conf_threshold`` (with at
+least ``min_votes`` votes), falling back to finalize-at-cap for tasks the
+crowd cannot agree on. Easy tasks stop after 1-2 agreeing votes; the saved
+votes buy redundancy on the hard ones.
+
+All functions are pure jnp on (window,)-shaped arrays so the router can
+call them inside the jitted streaming tick, and small enough to
+property-test directly (tests/test_properties.py):
+
+  * a task never collects more than ``votes_cap`` votes;
+  * a task never finalizes below ``conf_threshold`` with fewer than
+    ``votes_cap`` votes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    adaptive: bool = True
+    votes_cap: int = 5           # hard per-task budget (== fixed votes_needed)
+    conf_threshold: float = 0.92 # finalize early above this posterior mass
+    min_votes: int = 1           # never finalize early with fewer votes
+    max_outstanding: int = 1     # adaptive: concurrent vote requests per task
+
+
+def confidence(log_posterior):
+    """Max posterior mass per task from unnormalized log-posteriors."""
+    return jnp.max(jax.nn.softmax(log_posterior, axis=-1), axis=-1)
+
+
+def target_outstanding(n_votes, pol: PolicyConfig):
+    """How many assignments a task WANTS concurrently active right now.
+
+    Fixed policy floods the full remaining budget (the batch engines'
+    semantics: ``votes_needed`` parallel votes); adaptive drips
+    ``max_outstanding`` at a time so the posterior is consulted between
+    votes. Never exceeds the remaining budget, so total votes stay <= cap.
+    """
+    remaining = jnp.maximum(pol.votes_cap - n_votes, 0)
+    if not pol.adaptive:
+        return remaining
+    return jnp.minimum(remaining, pol.max_outstanding)
+
+
+def should_finalize(log_posterior, n_votes, pol: PolicyConfig):
+    """(finalize, conf): early-stop when confident, hard-stop at the cap."""
+    conf = confidence(log_posterior)
+    early = pol.adaptive & (conf >= pol.conf_threshold) \
+        & (n_votes >= pol.min_votes)
+    at_cap = n_votes >= pol.votes_cap
+    return (n_votes > 0) & (early | at_cap), conf

@@ -1,0 +1,485 @@
+"""Streaming router: ring-buffer task window over sharded retainer pools.
+
+The batch engines (events.py, simfast.py) drain a finite task list; this
+module is the open-world service: tasks arrive continuously (arrivals.py),
+are queued in a per-shard backlog FIFO, admitted into a fixed-size
+*ring-buffer task window* of ``window`` slots per shard, labeled by that
+shard's retainer pool, and finalized by the adaptive-redundancy policy
+(policy.py) on their running Dawid-Skene posterior. Per-tick cost is
+O(shards * (pool + window)) — independent of how many tasks have flowed
+through the system, which is the ROADMAP "task-windowing" follow-up: the
+batch engines' per-tick scatters grow with the total task count, the
+streaming tick never does.
+
+Reused from simfast: ``priority_match`` (two-tier cumsum/searchsorted
+worker->task matching: understaffed tasks first, then straggler
+duplicates), ``churn_and_maintain`` (session churn + TermEst
+censoring-corrected latency eviction with the one-sided significance test,
+backfilled from the pre-drawn worker banks), ``_init_workers``, and the
+counter-based ``_uniform_block`` randomness. Shards advance in lock-step
+under ``jax.vmap``; replications vmap once more on top.
+
+Aggregation in the loop is *online* one-coin Dawid-Skene: each vote adds
+the voter's estimated log-odds to the task's log-posterior (the E-step
+under current accuracy estimates), and every finalized task credits its
+voters by agreement with the final label (an incremental hard-EM M-step).
+The exact batched full-confusion EM (aggregate.py) is the offline engine
+for re-aggregation and QC audits; benchmarks compare the two.
+
+The ``batch_replay`` flag turns the SAME machinery into the naive
+fixed-batch baseline — a shard admits work only when its window is
+completely drained — so streaming-vs-batch comparisons share every other
+code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.crowd import SWITCH_DELAY_S, WAIT_PAY_PER_S, WORK_PAY_PER_RECORD
+from repro.core.simfast import (
+    FastConfig, INF, _init_workers, _uniform_block, churn_and_maintain,
+    draw_latency, priority_match,
+)
+from repro.labelstream.arrivals import (
+    ArrivalConfig, init_arrival_state, sample_arrivals,
+)
+from repro.labelstream.policy import PolicyConfig, should_finalize, \
+    target_outstanding
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Static configuration for the streaming service (hashable)."""
+    n_shards: int = 2
+    pool_size: int = 8            # workers per shard
+    window: int = 32              # ring-buffer task slots per shard
+    backlog: int = 1024           # backlog FIFO capacity per shard
+    n_classes: int = 2
+    dt: float = 5.0               # tick length (s)
+    max_arrivals_per_tick: int = 64   # per shard; excess is counted dropped
+    arrivals: ArrivalConfig = ArrivalConfig()
+    policy: PolicyConfig = PolicyConfig()
+    batch_replay: bool = False    # naive baseline: drain window, then refill
+    # task difficulty mixture: a fraction of tasks where worker accuracy is
+    # scaled toward chance (p_correct = 1/C + (acc - 1/C) * difficulty)
+    p_hard: float = 0.0
+    hard_scale: float = 0.35
+    # straggler mitigation + pool maintenance (simfast semantics)
+    straggler: bool = True
+    max_dup: int = 2
+    pm_l: float = float("inf")
+    use_termest: bool = True
+    min_obs: int = 3
+    z: float = 1.0
+    alpha: float = 1.0
+    # retainer pool / population (simfast defaults)
+    recruit_mean_s: float = 45.0
+    session_mean_s: float = 1800.0
+    median_mu: float = 150.0
+    sigma_ln: float = 1.0
+    cv_lo: float = 0.3
+    cv_hi: float = 1.2
+    acc_a: float = 18.0
+    acc_b: float = 2.0
+    latency_floor: float = 2.0
+    # pre-drawn replacement workers per slot. The bank is FINITE: once a
+    # slot has churned/evicted through all columns it re-installs its last
+    # draw forever, so horizons are effectively bounded by
+    # ~bank * session_mean_s per slot (64 * 1800 s = 32 h with defaults) —
+    # size it up for longer soaks
+    bank: int = 64
+    # online worker-accuracy prior (Beta pseudo-counts)
+    est_prior_acc: float = 0.85
+    est_prior_n: float = 8.0
+    # time-in-system histogram (steady-state percentiles)
+    tis_bins: int = 512
+    tis_bin_s: float = 4.0
+
+    @property
+    def fast(self) -> FastConfig:
+        """simfast config slice used by the reused pool machinery."""
+        return FastConfig(
+            pool_size=self.pool_size, retainer=True,
+            recruit_mean_s=self.recruit_mean_s,
+            session_mean_s=self.session_mean_s,
+            median_mu=self.median_mu, sigma_ln=self.sigma_ln,
+            cv_lo=self.cv_lo, cv_hi=self.cv_hi,
+            acc_a=self.acc_a, acc_b=self.acc_b,
+            pm_l=self.pm_l, use_termest=self.use_termest,
+            min_obs=self.min_obs, z=self.z, alpha=self.alpha,
+            latency_floor=self.latency_floor, bank=self.bank,
+        )
+
+
+# --------------------------------------------------------------------------
+# state init
+# --------------------------------------------------------------------------
+
+def _init_window(cfg: StreamConfig):
+    Ws, C, cap = cfg.window, cfg.n_classes, cfg.policy.votes_cap
+    return dict(
+        active=jnp.zeros((Ws,), bool),
+        arrival_t=jnp.zeros((Ws,)),
+        difficulty=jnp.ones((Ws,)),
+        true_label=jnp.zeros((Ws,), jnp.int32),
+        n_votes=jnp.zeros((Ws,), jnp.int32),
+        logpost=jnp.zeros((Ws, C)),
+        # per-slot vote store (worker slot + label) for finalize-time credit
+        vote_wid=jnp.zeros((Ws + 1, cap), jnp.int32),
+        vote_lab=jnp.zeros((Ws + 1, cap), jnp.int32),
+    )
+
+
+def _init_shard(cfg: StreamConfig, key):
+    ws, banks = _init_workers(cfg.fast, key)
+    P = cfg.pool_size
+    ws["est_correct"] = jnp.zeros((P,))
+    ws["est_n"] = jnp.zeros((P,))
+    bl = dict(times=jnp.zeros((cfg.backlog + 1,)),
+              head=jnp.zeros((), jnp.int32),
+              count=jnp.zeros((), jnp.int32))
+    return ws, banks, _init_window(cfg), bl
+
+
+# --------------------------------------------------------------------------
+# one shard, one tick
+# --------------------------------------------------------------------------
+
+def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
+                warmup_t):
+    P, Ws, C = cfg.pool_size, cfg.window, cfg.n_classes
+    Q, M, cap = cfg.backlog, cfg.max_arrivals_per_tick, cfg.policy.votes_cap
+    pol, fast = cfg.policy, cfg.fast
+    up = _uniform_block(seed, step, 8 * P).reshape(8, P)
+
+    # ---- backlog push (this tick's arrivals, FIFO ring of arrival times) --
+    space = Q - bl["count"]
+    n_push = jnp.minimum(n_arr, space)
+    dropped = (n_arr - n_push).astype(jnp.int32)
+    slot = jnp.arange(M, dtype=jnp.int32)
+    pos = (bl["head"] + bl["count"] + slot) % Q
+    bl_times = bl["times"].at[jnp.where(slot < n_push, pos, Q)].set(t)
+    bl_count = bl["count"] + n_push
+
+    # ---- admission into free window slots -------------------------------
+    free = ~win["active"]
+    if cfg.batch_replay:
+        # naive fixed-batch replay: refill only once the window is drained
+        gate = free.all()
+    else:
+        gate = jnp.ones((), bool)
+    n_adm = jnp.where(gate, jnp.minimum(bl_count, free.sum()), 0
+                      ).astype(jnp.int32)
+    frank = (jnp.cumsum(free) - 1).astype(jnp.int32)
+    admit = free & (frank < n_adm)
+    arr_t = bl_times[jnp.where(admit, (bl["head"] + frank) % Q, Q)]
+    bl_head = (bl["head"] + n_adm) % Q
+    bl_count = bl_count - n_adm
+    # fresh-task draws (difficulty mixture + true label)
+    uw = _uniform_block(seed ^ jnp.uint32(0x33CC33CC), step, 2 * Ws
+                        ).reshape(2, Ws)
+    diff = jnp.where(uw[0] < cfg.p_hard, cfg.hard_scale, 1.0)
+    tl = jnp.floor(uw[1] * C).astype(jnp.int32).clip(0, C - 1)
+    win = dict(win)
+    win["active"] = win["active"] | admit
+    win["arrival_t"] = jnp.where(admit, arr_t, win["arrival_t"])
+    win["difficulty"] = jnp.where(admit, diff, win["difficulty"])
+    win["true_label"] = jnp.where(admit, tl, win["true_label"])
+    win["n_votes"] = jnp.where(admit, 0, win["n_votes"])
+    win["logpost"] = jnp.where(admit[:, None], 0.0, win["logpost"])
+
+    # ---- completions -> votes -> online posterior -----------------------
+    ws = dict(ws)
+    active_w = ws["assigned"] >= 0
+    comp = active_w & (ws["busy_until"] <= t)
+    a_idx = jnp.maximum(ws["assigned"], 0)
+    tid = jnp.where(comp, ws["assigned"], Ws)
+    lat = jnp.where(comp, ws["busy_until"] - ws["start_t"], 0.0)
+    d_w = win["difficulty"][a_idx]
+    p_corr = jnp.clip(1.0 / C + (ws["acc"] - 1.0 / C) * d_w, 1.0 / C, 0.995)
+    tl_w = win["true_label"][a_idx]
+    correct = up[0] < p_corr
+    wrong = jnp.floor(up[1] * max(C - 1, 1)).astype(jnp.int32)
+    label = jnp.where(correct, tl_w,
+                      jnp.where(wrong >= tl_w, wrong + 1, wrong))
+    # vote slot position: n_votes before this tick + rank among this tick's
+    # completions of the same task; votes landing past the cap are dropped
+    # (paid straggler duplicates that lost the race to the budget)
+    pr = jnp.arange(P)
+    prior_ct = ((tid[None, :] == tid[:, None]) & comp[None, :]
+                & (pr[None, :] < pr[:, None])).sum(-1).astype(jnp.int32)
+    vpos = win["n_votes"][a_idx] + prior_ct
+    keep = comp & (vpos < cap)
+    tid_k = jnp.where(keep, tid, Ws)
+    vpos_k = jnp.where(keep, vpos, 0).clip(0, cap - 1)
+    win["vote_wid"] = win["vote_wid"].at[tid_k, vpos_k].set(
+        jnp.where(keep, pr, win["vote_wid"][tid_k, vpos_k]))
+    win["vote_lab"] = win["vote_lab"].at[tid_k, vpos_k].set(
+        jnp.where(keep, label, win["vote_lab"][tid_k, vpos_k]))
+    # online DS E-step: add the voter's estimated log-odds to the voted class
+    a_e = jnp.clip((cfg.est_prior_acc * cfg.est_prior_n + ws["est_correct"])
+                   / (cfg.est_prior_n + ws["est_n"]), 0.52, 0.995)
+    delta = jnp.log(a_e * max(C - 1, 1) / (1.0 - a_e))
+    win["logpost"] = (jnp.concatenate(
+        [win["logpost"], jnp.zeros((1, C))])
+        .at[tid_k, label].add(jnp.where(keep, delta, 0.0)))[:Ws]
+    win["n_votes"] = (jnp.concatenate([win["n_votes"], jnp.zeros((1,),
+                                                                 jnp.int32)])
+                      .at[tid_k].add(keep.astype(jnp.int32)))[:Ws]
+
+    # ---- finalization (adaptive redundancy) -----------------------------
+    fin, conf = should_finalize(win["logpost"], win["n_votes"], pol)
+    fin = fin & win["active"]
+    result = win["logpost"].argmax(-1)
+    tis = jnp.where(fin, t - win["arrival_t"], 0.0)
+    # steady-state metrics count tasks by ARRIVAL-time warmth (matching the
+    # offered-rate gate), so warmup queueing cannot leak into the histogram
+    # and sustained throughput is measured against the same task population
+    wfin = fin & (win["arrival_t"] >= warmup_t)
+    nbin = cfg.tis_bins
+    hbin = jnp.clip((tis / cfg.tis_bin_s).astype(jnp.int32), 0, nbin - 1)
+    hist_d = jnp.zeros((nbin + 1,), jnp.int32).at[
+        jnp.where(wfin, hbin, nbin)].add(1)[:nbin]
+    done_d = wfin.sum()
+    corr_d = (wfin & (result == win["true_label"])).sum()
+    tis_d = (tis * wfin).sum()
+    votesfin_d = (win["n_votes"] * wfin).sum()
+    # credit voters of finalized tasks by agreement with the final label
+    # (incremental hard-EM M-step for the online accuracy estimates)
+    vmask = (jnp.arange(cap)[None, :] < win["n_votes"][:Ws, None]) \
+        & fin[:, None]
+    vw = jnp.where(vmask, win["vote_wid"][:Ws], P)
+    agree = (win["vote_lab"][:Ws] == result[:, None]) & vmask
+    ws["est_correct"] = ws["est_correct"] + jnp.zeros((P + 1,)).at[
+        vw.reshape(-1)].add(agree.reshape(-1).astype(jnp.float32))[:P]
+    ws["est_n"] = ws["est_n"] + jnp.zeros((P + 1,)).at[
+        vw.reshape(-1)].add(vmask.reshape(-1).astype(jnp.float32))[:P]
+    win["active"] = win["active"] & ~fin
+
+    # ---- worker bookkeeping: completers + straggler losers --------------
+    lose = active_w & ~comp & fin[a_idx]
+    win_lat = jnp.zeros((Ws + 1,)).at[tid].max(lat)[:Ws]
+    winner = jnp.where(lose, win_lat[a_idx], 0.0)
+    freed = comp | lose
+    ws["n_completed"] = ws["n_completed"] + comp
+    ws["n_terminated"] = ws["n_terminated"] + lose
+    ws["comp_sum"] = ws["comp_sum"] + lat * comp
+    ws["comp_sqsum"] = ws["comp_sqsum"] + lat * lat * comp
+    ws["term_sum"] = ws["term_sum"] + winner * lose
+    ws["cost_work"] = ws["cost_work"] + freed.sum() * WORK_PAY_PER_RECORD
+    ws["blocked_until"] = jnp.where(
+        comp, ws["busy_until"],
+        jnp.where(lose, t + SWITCH_DELAY_S, ws["blocked_until"]))
+    ws["assigned"] = jnp.where(freed, -1, ws["assigned"])
+    ws["busy_until"] = jnp.where(freed, INF, ws["busy_until"])
+
+    # ---- churn + latency maintenance (shared simfast machinery) ---------
+    ws, leave = churn_and_maintain(fast, ws, banks, t, up[2], up[3],
+                                   cfg.recruit_mean_s)
+    ws["est_correct"] = jnp.where(leave, 0.0, ws["est_correct"])
+    ws["est_n"] = jnp.where(leave, 0.0, ws["est_n"])
+    # stored votes key on the pool slot: remap votes cast by departing
+    # workers to the dump slot P so finalize-time crediting cannot charge
+    # the replacement worker for its predecessor's answers
+    leave_pad = jnp.concatenate([leave, jnp.zeros((1,), bool)])
+    win["vote_wid"] = jnp.where(leave_pad[win["vote_wid"]], P,
+                                win["vote_wid"])
+
+    # ---- assignment: understaffed tasks first, then duplicates ----------
+    avail = (ws["assigned"] < 0) & (ws["blocked_until"] <= t) \
+        & (ws["session_end"] > t)
+    n_asg = jnp.zeros((Ws + 1,), jnp.int32).at[
+        jnp.where(ws["assigned"] >= 0, ws["assigned"], Ws)].add(1)[:Ws]
+    want = target_outstanding(win["n_votes"], pol)
+    tier1 = win["active"] & (n_asg < want)
+    if cfg.straggler:
+        extra = jnp.minimum(want, cfg.max_dup)
+        tier2 = win["active"] & (want > 0) & (n_asg >= want) \
+            & (n_asg < want + extra)
+    else:
+        tier2 = jnp.zeros((Ws,), bool)
+    shift = (_uniform_block(seed ^ jnp.uint32(0xA5A5A5A5), step, 1)[0]
+             * Ws).astype(jnp.int32)
+    take, task_for_w, _, _ = priority_match(avail, tier1, tier2, shift)
+    lat_new = draw_latency(fast, ws["mu"], ws["sigma"], up[6], up[7])
+    ws["assigned"] = jnp.where(take, task_for_w, ws["assigned"])
+    ws["busy_until"] = jnp.where(take, t + lat_new, ws["busy_until"])
+    ws["start_t"] = jnp.where(take, t, ws["start_t"])
+    ws["n_started"] = ws["n_started"] + take
+    waiting = avail & ~take
+    ws["cost_wait"] = ws["cost_wait"] + waiting.sum() * cfg.dt * WAIT_PAY_PER_S
+
+    bl = dict(times=bl_times, head=bl_head, count=bl_count)
+    metrics = dict(hist=hist_d, done=done_d, correct=corr_d, sum_tis=tis_d,
+                   votes_fin=votesfin_d,
+                   completions=(comp & (win["arrival_t"][a_idx]
+                                        >= warmup_t)).sum(),
+                   done_all=fin.sum(), dropped=dropped,
+                   backlog=bl_count, in_flight=win["active"].sum())
+    return ws, win, bl, metrics
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
+    S = cfg.n_shards
+    k_init, k_seed, k_run = jax.random.split(key, 3)
+    ws, banks, win, bl = jax.vmap(lambda k: _init_shard(cfg, k))(
+        jax.random.split(k_init, S))
+    seeds = jax.random.bits(k_seed, (S,), jnp.uint32)
+    state = dict(
+        t=jnp.zeros(()), step=jnp.zeros((), jnp.int32), key=k_run,
+        arr=init_arrival_state(cfg.arrivals),
+        ws=ws, banks=banks, win=win, bl=bl,
+        hist=jnp.zeros((cfg.tis_bins,), jnp.int32),
+        done=jnp.zeros((), jnp.int32), correct=jnp.zeros((), jnp.int32),
+        sum_tis=jnp.zeros(()), votes_fin=jnp.zeros((), jnp.int32),
+        completions=jnp.zeros((), jnp.int32),
+        done_all=jnp.zeros((), jnp.int32),
+        dropped=jnp.zeros((), jnp.int32),
+        arrived=jnp.zeros((), jnp.int32),
+        arrived_warm=jnp.zeros((), jnp.int32),
+    )
+    M, cap_total = cfg.max_arrivals_per_tick, cfg.max_arrivals_per_tick * S
+
+    def tick(state, _):
+        t, step = state["t"], state["step"]
+        key, k_arr, k_sid = jax.random.split(state["key"], 3)
+        warm = t >= warmup_t
+        n_new, arr, _rate = sample_arrivals(cfg.arrivals, state["arr"],
+                                            k_arr, t, cfg.dt, rate_scale)
+        n_cap = jnp.minimum(n_new, cap_total)
+        sid = jax.random.randint(k_sid, (cap_total,), 0, S)
+        valid = jnp.arange(cap_total) < n_cap
+        n_arr = jnp.zeros((S + 1,), jnp.int32).at[
+            jnp.where(valid, sid, S)].add(1)[:S]
+        over = (n_arr - M).clip(0).sum() + (n_new - n_cap)
+        n_arr = jnp.minimum(n_arr, M)
+
+        ws, win, bl, m = jax.vmap(
+            functools.partial(_shard_tick, cfg),
+            in_axes=(0, 0, 0, 0, 0, None, None, 0, None),
+        )(state["ws"], state["banks"], state["win"], state["bl"],
+          n_arr, t, step, seeds, warmup_t)
+
+        new = dict(state)
+        new.update(
+            t=t + cfg.dt, step=step + 1, key=key, arr=arr,
+            ws=ws, win=win, bl=bl,
+            hist=state["hist"] + m["hist"].sum(0),
+            done=state["done"] + m["done"].sum(),
+            correct=state["correct"] + m["correct"].sum(),
+            sum_tis=state["sum_tis"] + m["sum_tis"].sum(),
+            votes_fin=state["votes_fin"] + m["votes_fin"].sum(),
+            completions=state["completions"] + m["completions"].sum(),
+            done_all=state["done_all"] + m["done_all"].sum(),
+            dropped=state["dropped"] + m["dropped"].sum() + over,
+            arrived=state["arrived"] + n_new,
+            arrived_warm=state["arrived_warm"] + jnp.where(warm, n_new, 0),
+        )
+        ys = dict(arrivals=n_new, finalized=m["done_all"].sum(),
+                  backlog=m["backlog"].sum(), in_flight=m["in_flight"].sum())
+        return new, ys
+
+    state, ys = jax.lax.scan(tick, state, None, length=horizon)
+    out = {k: state[k] for k in
+           ("hist", "done", "correct", "sum_tis", "votes_fin", "completions",
+            "done_all", "dropped", "arrived", "arrived_warm")}
+    out["cost_wait"] = state["ws"]["cost_wait"].sum()
+    out["cost_work"] = state["ws"]["cost_work"].sum()
+    out["n_churned"] = state["ws"]["n_churned"].sum()
+    out["n_evicted"] = state["ws"]["n_evicted"].sum()
+    out["backlog_end"] = state["bl"]["count"].sum()
+    out["in_flight_end"] = state["win"]["active"].sum()
+    out["series"] = ys
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _run_jit(cfg: StreamConfig, horizon: int, keys, warmup_t, rate_scale):
+    return jax.vmap(
+        lambda k: _run_one(cfg, horizon, k, warmup_t, rate_scale))(keys)
+
+
+def run_stream(cfg: StreamConfig, horizon: int, *, n_reps: int = 1,
+               seed: int = 0, warmup_frac: float = 0.3,
+               rate_scale: float = 1.0):
+    """Run ``n_reps`` replications of the streaming service for ``horizon``
+    ticks. Steady-state metrics (histogram, counters) only accumulate after
+    ``warmup_frac`` of the horizon. ``rate_scale`` multiplies the offered
+    arrival rate WITHOUT recompiling (it is traced), so load sweeps are
+    one compilation. Returns stacked device arrays with leading dim n_reps
+    plus ``warmup_t``/``measured_s`` scalars."""
+    keys = jax.random.split(jax.random.key(seed), n_reps)
+    warmup_t = float(warmup_frac * horizon * cfg.dt)
+    out = _run_jit(cfg, int(horizon), keys, warmup_t,
+                   jnp.float32(rate_scale))
+    out = dict(out)
+    out["warmup_t"] = warmup_t
+    out["measured_s"] = horizon * cfg.dt - warmup_t
+    return out
+
+
+def _hist_percentile(hist, q, bin_s):
+    """Right-edge percentile from the pooled time-in-system histogram.
+
+    The top bin collects every task clipped past the histogram range, so a
+    percentile landing there is unbounded above — report it as ``inf``
+    rather than silently truncating to the ceiling (an overloaded run must
+    not masquerade as one with a bounded tail)."""
+    c = np.cumsum(hist)
+    if c[-1] == 0:
+        return float("nan")
+    idx = int(np.searchsorted(c, q / 100.0 * c[-1]))
+    if idx >= len(hist) - 1:
+        return float("inf")
+    return (idx + 1) * bin_s
+
+
+def stream_summary(cfg: StreamConfig, out) -> dict:
+    """Reduce run_stream output to the service-level quantities the bench
+    reports: offered vs sustained steady-state rate, p50/p95/p99
+    time-in-system, label accuracy, votes per finalized task, drops."""
+    reps = int(np.asarray(out["done"]).shape[0])
+    dur = float(out["measured_s"]) * reps
+    hist = np.asarray(out["hist"]).sum(0)
+    done = float(np.asarray(out["done"]).sum())
+    offered = float(np.asarray(out["arrived_warm"]).sum())
+    # tasks still in the pipe (window/backlog) at horizon end arrived during
+    # the measured interval but had no chance to finalize; excluding them
+    # from the completion denominator keeps the stability criterion honest
+    # at short horizons without inflating sustained_rate itself. The credit
+    # is capped at a couple of windows' worth per replication: a healthy
+    # system holds at most that much in flight, so an overloaded run (whose
+    # backlog grows without bound) cannot drive the denominator to the
+    # clamp and report itself stable
+    pipe_cap = 2.0 * cfg.n_shards * cfg.window * reps
+    holdover = min(float(np.asarray(out["in_flight_end"]).sum()
+                         + np.asarray(out["backlog_end"]).sum()), pipe_cap)
+    return dict(
+        n_reps=reps,
+        offered_rate=offered / max(dur, 1e-9),
+        sustained_rate=done / max(dur, 1e-9),
+        completion_ratio=done / max(offered - holdover, 1.0),
+        p50_tis=_hist_percentile(hist, 50, cfg.tis_bin_s),
+        p95_tis=_hist_percentile(hist, 95, cfg.tis_bin_s),
+        p99_tis=_hist_percentile(hist, 99, cfg.tis_bin_s),
+        mean_tis=float(np.asarray(out["sum_tis"]).sum()) / max(done, 1.0),
+        accuracy=float(np.asarray(out["correct"]).sum()) / max(done, 1.0),
+        votes_per_task=float(np.asarray(out["votes_fin"]).sum())
+        / max(done, 1.0),
+        completions_per_task=float(np.asarray(out["completions"]).sum())
+        / max(done, 1.0),
+        dropped=float(np.asarray(out["dropped"]).sum()),
+        backlog_end=float(np.asarray(out["backlog_end"]).sum()) / reps,
+        in_flight_end=float(np.asarray(out["in_flight_end"]).sum()) / reps,
+        cost=float(np.asarray(out["cost_wait"] + out["cost_work"]).sum())
+        / reps,
+    )

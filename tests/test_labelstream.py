@@ -1,0 +1,332 @@
+"""labelstream subsystem validation: Dawid-Skene aggregation parity against
+the scalar reference, the fused Pallas E-step kernel, arrival processes,
+adaptive-redundancy policy, and end-to-end streaming-service invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quality import (
+    em_worker_accuracy, em_worker_accuracy_ref, weighted_vote,
+)
+from repro.labelstream import (
+    ArrivalConfig, PolicyConfig, StreamConfig, dawid_skene,
+    dawid_skene_batch, pack_votes, run_stream, stream_summary,
+)
+from repro.labelstream.arrivals import init_arrival_state, sample_arrivals
+from repro.labelstream.policy import should_finalize, target_outstanding
+
+# shared small config so the jit cache is warm across streaming tests
+SCFG = StreamConfig(n_shards=2, pool_size=6, window=16, dt=5.0,
+                    tis_bin_s=8.0,
+                    arrivals=ArrivalConfig(kind="poisson", rate=0.012),
+                    policy=PolicyConfig(adaptive=True, votes_cap=3,
+                                        conf_threshold=0.95, min_votes=1,
+                                        max_outstanding=1))
+HORIZON = 700
+
+
+def _synthetic_votes(n_tasks=30, accs=(0.95, 0.9, 0.85, 0.8, 0.3), seed=0,
+                     n_classes=2):
+    rng = np.random.default_rng(seed)
+    truth = rng.integers(0, n_classes, n_tasks)
+    tv = []
+    for t in range(n_tasks):
+        votes = []
+        for w, a in enumerate(accs):
+            if rng.random() < a:
+                votes.append((int(truth[t]), w))
+            else:
+                wrong = int(rng.integers(0, n_classes - 1))
+                votes.append((wrong + 1 if wrong >= truth[t] else wrong, w))
+        tv.append(votes)
+    return tv, truth
+
+
+# ------------------------------------------------------ aggregation parity --
+
+def test_one_coin_parity_with_scalar_reference():
+    """Vectorized one-coin DS == the scalar dict EM to float tolerance,
+    including a task with an empty vote list."""
+    tv, truth = _synthetic_votes()
+    tv.append([])                          # empty vote list must not crash
+    l_ref, a_ref = em_worker_accuracy_ref(tv, 2)
+    l_vec, a_vec = em_worker_accuracy(tv, 2)
+    assert l_ref == l_vec
+    for w in a_ref:
+        assert abs(a_ref[w] - a_vec[w]) < 1e-4
+    # the engine also identifies the adversarial worker
+    assert a_vec[4] < 0.6 < a_vec[0]
+    assert np.mean(np.array(l_vec[:-1]) == truth) >= 0.9
+
+
+def test_one_coin_parity_three_classes():
+    tv, _ = _synthetic_votes(n_tasks=24, seed=3, n_classes=3)
+    l_ref, a_ref = em_worker_accuracy_ref(tv, 3)
+    l_vec, a_vec = em_worker_accuracy(tv, 3)
+    assert l_ref == l_vec
+    for w in a_ref:
+        assert abs(a_ref[w] - a_vec[w]) < 1e-4
+
+
+def test_full_confusion_captures_class_bias():
+    """A worker who always answers 0 is useless symmetrically but perfectly
+    informative per-class; the full-confusion model sees the asymmetry."""
+    rng = np.random.default_rng(1)
+    truth = rng.integers(0, 2, 60)
+    tv = []
+    for t in range(60):
+        votes = [(int(truth[t]) if rng.random() < 0.9
+                  else 1 - int(truth[t]), w) for w in range(3)]
+        votes.append((0, 99))              # the always-0 worker
+        tv.append(votes)
+    pack, n_workers = pack_votes(tv)
+    out = dawid_skene(pack.labels, pack.workers, pack.mask,
+                      n_workers=n_workers, n_classes=2, one_coin=False)
+    conf = np.asarray(out["confusion"])
+    bias_idx = pack.worker_ids.index(99)
+    # votes 0 with probability ~1 regardless of the true class
+    assert conf[bias_idx, 0, 0] > 0.9
+    assert conf[bias_idx, 1, 0] > 0.9
+    labels = np.asarray(out["posterior"])[:60].argmax(-1)
+    assert (labels == truth).mean() >= 0.9
+
+
+def test_dawid_skene_batch_matches_single():
+    tv, _ = _synthetic_votes(n_tasks=16, seed=5)
+    pack, n_workers = pack_votes(tv)
+    reps = 3
+    stack = lambda a: np.broadcast_to(a, (reps,) + a.shape)
+    out_b = dawid_skene_batch(stack(pack.labels), stack(pack.workers),
+                              stack(pack.mask), n_workers=n_workers,
+                              n_classes=2)
+    out_1 = dawid_skene(pack.labels, pack.workers, pack.mask,
+                        n_workers=n_workers, n_classes=2)
+    for r in range(reps):
+        np.testing.assert_allclose(np.asarray(out_b["posterior"])[r],
+                                   np.asarray(out_1["posterior"]), atol=1e-6)
+
+
+def test_ds_estep_kernel_matches_ref():
+    from repro.kernels import ref
+    from repro.kernels.ds_estep import ds_estep
+    rng = np.random.default_rng(0)
+    W, C, T, V = 9, 4, 77, 5
+    R = W * C + 1
+    rows = np.log(rng.uniform(0.05, 0.95, (R, C))).astype(np.float32)
+    rows[-1] = 0.0
+    idx = rng.integers(0, R, (T, V)).astype(np.int32)
+    idx[7] = R - 1                         # zero-vote task
+    logp, post = ds_estep(jnp.array(rows), jnp.array(idx), interpret=True)
+    logp_r, post_r = ref.ds_estep_ref(jnp.array(rows), jnp.array(idx))
+    np.testing.assert_allclose(np.asarray(logp), np.asarray(logp_r),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(post), np.asarray(post_r),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(post)[7], 0.25, atol=1e-6)
+
+
+def test_ds_em_with_kernel_estep_matches_jnp_path():
+    tv, _ = _synthetic_votes(n_tasks=20, seed=7)
+    pack, n_workers = pack_votes(tv)
+    kw = dict(n_workers=n_workers, n_classes=2, iters=8, one_coin=True)
+    out_k = dawid_skene(pack.labels, pack.workers, pack.mask,
+                        use_kernel=True, **kw)
+    out_j = dawid_skene(pack.labels, pack.workers, pack.mask,
+                        use_kernel=False, **kw)
+    np.testing.assert_allclose(np.asarray(out_k["posterior"]),
+                               np.asarray(out_j["posterior"]), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out_k["accuracy"]),
+                               np.asarray(out_j["accuracy"]), atol=1e-4)
+
+
+@pytest.mark.tpu
+def test_ds_estep_kernel_mosaic():
+    """Real Mosaic lowering of the fused E-step (auto-skipped off-TPU)."""
+    from repro.kernels import ref
+    from repro.kernels.ds_estep import ds_estep
+    rng = np.random.default_rng(0)
+    W, C, T, V = 16, 8, 512, 5
+    R = W * C + 1
+    rows = np.log(rng.uniform(0.05, 0.95, (R, C))).astype(np.float32)
+    rows[-1] = 0.0
+    idx = rng.integers(0, R, (T, V)).astype(np.int32)
+    logp, post = ds_estep(jnp.array(rows), jnp.array(idx), interpret=False)
+    logp_r, post_r = ref.ds_estep_ref(jnp.array(rows), jnp.array(idx))
+    np.testing.assert_allclose(np.asarray(logp), np.asarray(logp_r),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(post), np.asarray(post_r),
+                               atol=1e-4)
+
+
+def test_weighted_vote_boundary_accuracies():
+    """Unanimous windows can push EM estimates to 0/1; the log-odds weights
+    must stay finite and the vote well-defined."""
+    votes = [(0, 1, 5.0), (0, 2, 5.0), (1, 3, 5.0)]
+    assert weighted_vote(votes, 2, {1: 1.0, 2: 1.0, 3: 0.0}) in (0, 1)
+    assert weighted_vote([], 2, {}) == 0
+
+
+# ------------------------------------------------------------- arrivals ----
+
+def test_poisson_arrival_mean():
+    cfg = ArrivalConfig(kind="poisson", rate=0.5)
+    state = init_arrival_state(cfg)
+    keys = jax.random.split(jax.random.key(0), 400)
+    ns = [int(sample_arrivals(cfg, state, k, 0.0, 10.0)[0]) for k in keys]
+    assert abs(np.mean(ns) - 5.0) < 0.5    # Poisson(5)
+
+
+def test_diurnal_rate_modulates():
+    cfg = ArrivalConfig(kind="diurnal", rate=1.0, amplitude=0.8,
+                        period_s=86400.0)
+    state = init_arrival_state(cfg)
+    from repro.labelstream.arrivals import rate_at
+    peak = float(rate_at(cfg, state, 86400.0 / 4))
+    trough = float(rate_at(cfg, state, 3 * 86400.0 / 4))
+    assert peak == pytest.approx(1.8, abs=1e-6)
+    assert trough == pytest.approx(0.2, abs=1e-6)
+
+
+def test_mmpp_visits_both_modes():
+    cfg = ArrivalConfig(kind="mmpp", rate=0.1, rate_hi=2.0,
+                        dwell_mean_s=50.0)
+    state = init_arrival_state(cfg)
+    key = jax.random.key(0)
+    modes = []
+    for i in range(300):
+        key, k = jax.random.split(key)
+        _, state, rate = sample_arrivals(cfg, state, k, i * 10.0, 10.0)
+        modes.append(int(state["mode"]))
+    assert 0.1 < np.mean(modes) < 0.9      # both states visited
+
+
+# --------------------------------------------------------------- policy ----
+
+def test_fixed_policy_finalizes_exactly_at_cap():
+    pol = PolicyConfig(adaptive=False, votes_cap=3)
+    lp = jnp.zeros((4, 2))
+    nv = jnp.array([0, 1, 2, 3])
+    fin, _ = should_finalize(lp, nv, pol)
+    assert np.asarray(fin).tolist() == [False, False, False, True]
+    assert np.asarray(target_outstanding(nv, pol)).tolist() == [3, 2, 1, 0]
+
+
+def test_adaptive_policy_confident_early_stop():
+    pol = PolicyConfig(adaptive=True, votes_cap=5, conf_threshold=0.9,
+                       min_votes=2, max_outstanding=1)
+    confident = jnp.array([[0.0, 4.0]])
+    uncertain = jnp.array([[0.0, 0.3]])
+    fin_c, conf_c = should_finalize(confident, jnp.array([2]), pol)
+    fin_u, _ = should_finalize(uncertain, jnp.array([2]), pol)
+    fin_few, _ = should_finalize(confident, jnp.array([1]), pol)
+    assert bool(fin_c[0]) and float(conf_c[0]) > 0.9
+    assert not bool(fin_u[0])
+    assert not bool(fin_few[0])            # min_votes gate
+    # the cap always finalizes, confident or not
+    fin_cap, _ = should_finalize(uncertain, jnp.array([5]), pol)
+    assert bool(fin_cap[0])
+    # outstanding never exceeds the remaining budget
+    assert np.asarray(target_outstanding(jnp.array([4, 5]), pol)).tolist() \
+        == [1, 0]
+
+
+# ---------------------------------------------------- streaming service ----
+
+def test_stream_conservation_and_quality():
+    """Every arrival is exactly one of: dropped, backlogged, in flight, or
+    finalized; votes stay under the cap; labels are accurate."""
+    out = run_stream(SCFG, HORIZON, n_reps=2, seed=0)
+    arrived = int(np.asarray(out["arrived"]).sum())
+    done = int(np.asarray(out["done_all"]).sum())
+    backlog = int(np.asarray(out["backlog_end"]).sum())
+    in_flight = int(np.asarray(out["in_flight_end"]).sum())
+    dropped = int(np.asarray(out["dropped"]).sum())
+    assert arrived == done + backlog + in_flight + dropped
+    s = stream_summary(SCFG, out)
+    assert s["sustained_rate"] > 0
+    assert s["accuracy"] > 0.85
+    assert 0 < s["votes_per_task"] <= SCFG.policy.votes_cap + 1e-6
+    assert s["p95_tis"] < 1500.0
+
+
+def test_stream_determinism():
+    a = run_stream(SCFG, HORIZON, n_reps=2, seed=11)
+    b = run_stream(SCFG, HORIZON, n_reps=2, seed=11)
+    np.testing.assert_array_equal(np.asarray(a["hist"]),
+                                  np.asarray(b["hist"]))
+    assert int(np.asarray(a["done"]).sum()) == int(np.asarray(b["done"]).sum())
+
+
+def test_streaming_beats_batch_replay_tail_latency():
+    """Same offered load, same pools: continuous admission holds p95
+    time-in-system far below the drain-then-refill batch baseline."""
+    naive = dataclasses.replace(
+        SCFG, batch_replay=True, straggler=False,
+        policy=PolicyConfig(adaptive=False, votes_cap=3))
+    s_stream = stream_summary(
+        SCFG, run_stream(SCFG, HORIZON, n_reps=2, seed=2))
+    s_naive = stream_summary(
+        naive, run_stream(naive, HORIZON, n_reps=2, seed=2))
+    assert s_stream["p95_tis"] < 0.5 * s_naive["p95_tis"]
+    assert s_stream["p50_tis"] < 0.5 * s_naive["p50_tis"]
+
+
+def test_adaptive_redundancy_saves_votes_at_matched_accuracy():
+    """Skewed-difficulty workload: posterior-confidence stopping spends
+    fewer votes than fixed redundancy without giving up accuracy."""
+    fixed = dataclasses.replace(
+        SCFG, p_hard=0.25, hard_scale=0.3,
+        policy=PolicyConfig(adaptive=False, votes_cap=5))
+    adapt = dataclasses.replace(
+        SCFG, p_hard=0.25, hard_scale=0.3,
+        policy=PolicyConfig(adaptive=True, votes_cap=5, conf_threshold=0.98,
+                            min_votes=2, max_outstanding=2))
+    s_f = stream_summary(fixed, run_stream(fixed, HORIZON, n_reps=2, seed=3,
+                                           rate_scale=0.75))
+    s_a = stream_summary(adapt, run_stream(adapt, HORIZON, n_reps=2, seed=3,
+                                           rate_scale=0.75))
+    assert s_a["votes_per_task"] <= 0.8 * s_f["votes_per_task"]
+    assert s_a["accuracy"] >= s_f["accuracy"] - 0.05
+
+
+def test_online_posterior_consistent_with_offline_em():
+    """The stream's online one-coin posterior (incremental E-step + hard-EM
+    voter crediting) must not LOSE accuracy against the exact offline
+    full-confusion EM given an equivalent vote budget from the same worker
+    population — the online path is an approximation of the offline
+    engine, not a weaker estimator. (It may come out a little higher: the
+    adaptive policy finalizes early only when confident and spends extra
+    votes on the hard tasks, a selection effect the flat offline replay
+    does not have.)"""
+    from repro.labelstream.aggregate import aggregate_votes
+    out = run_stream(SCFG, HORIZON, n_reps=4, seed=6)
+    s = stream_summary(SCFG, out)
+    # offline: same Beta(18,2)-clipped accuracy population, matched votes
+    rng = np.random.default_rng(6)
+    n_tasks, n_votes = 300, max(2, round(s["votes_per_task"]))
+    accs = np.clip(rng.beta(SCFG.acc_a, SCFG.acc_b, 24), 0.55, 0.995)
+    truth = rng.integers(0, 2, n_tasks)
+    tv = []
+    for t in range(n_tasks):
+        ws = rng.choice(len(accs), n_votes, replace=False)
+        tv.append([(int(truth[t] if rng.random() < accs[w]
+                        else 1 - truth[t]), int(w)) for w in ws])
+    labels, _, _ = aggregate_votes(tv, 2, one_coin=False)
+    offline_acc = (np.array(labels) == truth).mean()
+    assert s["accuracy"] >= offline_acc - 0.05, \
+        (s["accuracy"], offline_acc)
+
+
+@pytest.mark.slow
+def test_stream_soak_steady_state():
+    """Long-horizon soak: sustained throughput tracks offered load and the
+    backlog stays bounded (no slow leak) over ~14 simulated hours."""
+    out = run_stream(SCFG, 10_000, n_reps=2, seed=4)
+    s = stream_summary(SCFG, out)
+    assert s["sustained_rate"] >= 0.95 * s["offered_rate"]
+    assert s["backlog_end"] < 3 * SCFG.window
+    assert s["dropped"] == 0
+    assert s["accuracy"] > 0.9

@@ -134,6 +134,63 @@ def test_simfast_percentiles_monotone_in_pool_size(seed):
     assert stats[1].p95_latency <= stats[0].p95_latency * 1.30
 
 
+# ------------------------------------------------ labelstream properties ----
+
+@given(cap=st.integers(1, 6), thresh=st.floats(0.55, 0.99),
+       min_votes=st.integers(0, 6), max_out=st.integers(1, 3),
+       seed=st.integers(0, 2**31 - 1))
+def test_adaptive_redundancy_cap_and_threshold_invariants(cap, thresh,
+                                                          min_votes,
+                                                          max_out, seed):
+    """Drive the adaptive policy with random vote evidence: the vote count
+    can never exceed the cap (target_outstanding never over-allocates), and
+    a task never finalizes below the confidence threshold with fewer than
+    ``votes_cap`` votes."""
+    from repro.labelstream.policy import (
+        PolicyConfig, confidence, should_finalize, target_outstanding,
+    )
+    pol = PolicyConfig(adaptive=True, votes_cap=cap, conf_threshold=thresh,
+                       min_votes=min(min_votes, cap),
+                       max_outstanding=max_out)
+    rng = np.random.default_rng(seed)
+    logpost = jnp.zeros((1, 2))
+    n_votes = jnp.zeros((1,), jnp.int32)
+    for _ in range(3 * cap):
+        fin, conf = should_finalize(logpost, n_votes, pol)
+        if bool(fin[0]):
+            assert int(n_votes[0]) <= pol.votes_cap
+            if int(n_votes[0]) < pol.votes_cap:    # early stop => confident
+                assert float(conf[0]) >= pol.conf_threshold - 1e-6
+                assert int(n_votes[0]) >= pol.min_votes
+            break
+        want = int(target_outstanding(n_votes, pol)[0])
+        assert 0 <= want <= pol.max_outstanding
+        assert int(n_votes[0]) + want <= pol.votes_cap
+        if want == 0:
+            break
+        # receive `want` votes with random log-odds evidence
+        for _ in range(want):
+            cls = int(rng.integers(0, 2))
+            logpost = logpost.at[0, cls].add(float(rng.uniform(0.1, 3.0)))
+        n_votes = n_votes + want
+    assert int(n_votes[0]) <= pol.votes_cap
+    assert float(confidence(logpost)[0]) <= 1.0 + 1e-6
+
+
+@given(rate=st.floats(0.001, 2.0), dt=st.floats(0.5, 30.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_arrival_samples_nonnegative_and_finite(rate, dt, seed):
+    from repro.labelstream.arrivals import (
+        ArrivalConfig, init_arrival_state, sample_arrivals,
+    )
+    for kind in ("poisson", "mmpp", "diurnal"):
+        cfg = ArrivalConfig(kind=kind, rate=rate, rate_hi=2 * rate)
+        n, state, r = sample_arrivals(cfg, init_arrival_state(cfg),
+                                      jax.random.key(seed), 1234.5, dt)
+        assert int(n) >= 0
+        assert math.isfinite(float(r)) and float(r) >= 0
+
+
 @settings(max_examples=5, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1))
 def test_simfast_straggler_never_increases_mean_latency(seed):
