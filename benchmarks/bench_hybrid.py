@@ -1,13 +1,81 @@
 """Paper Fig 15/16: Active vs Passive vs Hybrid across dataset hardness and
-AL-fraction r = k/p; accuracy-over-time with live (simulated) crowds."""
+AL-fraction r = k/p; accuracy-over-time with live (simulated) crowds.
+
+Also the ISSUE-3 acceptance headline (``--smoke`` and full): the fully
+vectorized ``simulate_learning_batch`` (scan over rounds, vmap over
+replications) must deliver >= 10x replications/sec vs the scalar
+per-replication loop at >= 64 parallel replications, with distributional
+parity (final test accuracy within one std). Recorded in
+``BENCH_hybrid.json`` for the cross-PR regression gate.
+"""
 from __future__ import annotations
+
+import sys
+import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.core.clamshell import ClamShell, CSConfig, acc_at_time
 from repro.data.datasets import (
     cifar_like, make_classification, mnist_like, train_test_split)
+
+
+def _learning_problem(seed=0, n=600, d=8, n_test=200):
+    rng = np.random.default_rng(seed)
+    W0 = rng.normal(size=(d, 2))
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    Xt = rng.normal(size=(n_test, d)).astype(np.float32)
+    return X, (X @ W0).argmax(-1), Xt, (Xt @ W0).argmax(-1)
+
+
+def vec_vs_scalar(n_reps=64, scalar_reps=4, rounds=6, fit_steps=40):
+    """Vectorized vs per-replication-loop simulate_learning (BENCH_hybrid)."""
+    import jax
+
+    from repro.core.simfast import (
+        FastConfig, simulate_learning, simulate_learning_batch)
+
+    X, y, Xt, yt = _learning_problem()
+    cfg = FastConfig(pool_size=10)
+    kw = dict(rounds=rounds, fit_steps=fit_steps)
+
+    # vectorized: untimed compile pass, then a warm timed run
+    jax.block_until_ready(simulate_learning_batch(
+        cfg, X, y, Xt, yt, n_reps=n_reps, seed=0, **kw)["curve"]["acc"])
+    t0 = time.perf_counter()
+    out = simulate_learning_batch(cfg, X, y, Xt, yt, n_reps=n_reps, seed=1,
+                                  **kw)
+    jax.block_until_ready(out["curve"]["acc"])
+    vec_rps = n_reps / (time.perf_counter() - t0)
+    acc_v = np.asarray(out["curve"]["acc"])[:, -1]
+
+    # scalar: warm the per-round jits, then time the replication loop
+    simulate_learning(cfg, X, y, Xt, yt, seed=99, **kw)
+    t0 = time.perf_counter()
+    acc_s = [simulate_learning(cfg, X, y, Xt, yt, seed=s, **kw)[0][-1][2]
+             for s in range(scalar_reps)]
+    scalar_rps = scalar_reps / (time.perf_counter() - t0)
+
+    speedup = vec_rps / scalar_rps
+    gap = abs(float(acc_v.mean()) - float(np.mean(acc_s)))
+    parity = gap <= max(float(acc_v.std()), 1e-9)
+    emit("hybrid_vec_vs_scalar", 1e6 / vec_rps,
+         f"vec_rps={vec_rps:.1f};scalar_rps={scalar_rps:.2f};"
+         f"speedup_x={speedup:.1f};reps={n_reps};"
+         f"acc_vec={acc_v.mean():.3f}+-{acc_v.std():.3f};"
+         f"acc_scalar={np.mean(acc_s):.3f};parity_1std={int(parity)};"
+         f"target_x=10")
+    write_bench_json("hybrid", {
+        "speedup_x": (speedup, "higher"),
+        "vec_replications_per_sec": vec_rps,
+        "scalar_replications_per_sec": scalar_rps,
+        "n_reps": n_reps,
+        "final_acc_vec_mean": (float(acc_v.mean()), "higher"),
+        "final_acc_gap": (gap, "lower"),
+        "parity_within_1std": (float(parity), "higher"),
+    }, meta={"rounds": rounds, "fit_steps": fit_steps,
+             "pool_size": cfg.pool_size})
 
 
 def _run(kind, Xtr, ytr, Xte, yte, seed, r=0.5, budget=240, pool=24):
@@ -18,7 +86,11 @@ def _run(kind, Xtr, ytr, Xte, yte, seed, r=0.5, budget=240, pool=24):
     return cs.run_learning(Xtr, ytr, Xte, yte, label_budget=budget)
 
 
-def run(seeds=(0, 1)):
+def run(seeds=(0, 1), smoke: bool = False):
+    # acceptance headline first: vectorized vs scalar learning loop
+    vec_vs_scalar()
+    if smoke:
+        return
     # Fig 15: generated datasets of increasing hardness x r
     for nf, sep, hard in ((8, 2.0, "easy"), (16, 1.0, "medium"),
                           (32, 0.6, "hard")):
@@ -57,4 +129,4 @@ def run(seeds=(0, 1)):
 
 
 if __name__ == "__main__":
-    run()
+    run(smoke="--smoke" in sys.argv)

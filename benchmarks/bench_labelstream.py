@@ -1,12 +1,12 @@
 """labelstream service under sustained load: steady-state throughput and
 p50/p95/p99 time-in-system vs offered load.
 
-Three sections:
+Four sections:
 
   1. load sweep — the full streaming service (ring-buffer window, straggler
      mitigation, pool maintenance, adaptive redundancy) across offered
      loads; one compilation, the load is a traced rate_scale;
-  2. the ISSUE acceptance headline — the largest offered load each
+  2. the PR-2 acceptance headline — the largest offered load each
      architecture sustains (completion ratio >= 95% of the finalizable
      arrivals, p95 time-in-system <= budget): the streaming service must
      carry >= 5x the naive fixed-batch replay (same machinery with
@@ -14,15 +14,21 @@ Three sections:
      drain the window, then refill);
   3. adaptive redundancy — on a skewed-difficulty workload, posterior-
      confidence stopping must cut total votes >= 20% at matched accuracy
-     vs fixed ``votes_needed``.
+     vs fixed ``votes_needed``;
+  4. learner-fused redundancy (ISSUE-3 acceptance) — the streaming hybrid
+     learner (repro.learning fused with DS posteriors, stop-soliciting on
+     model-known tasks) must reach matched accuracy with FEWER votes than
+     DS-only adaptive redundancy on the same skewed workload.
 
-``--smoke`` runs one small config per architecture in seconds.
+Headline metrics land in ``BENCH_labelstream.json`` (simulated-time and
+per-task quantities — machine-independent) for the cross-PR regression
+gate. ``--smoke`` runs one small config per architecture in seconds.
 """
 from __future__ import annotations
 
 import sys
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, timed, write_bench_json
 
 P95_BUDGET_S = 2400.0
 
@@ -75,6 +81,52 @@ def _sweep(name, cfg, scales, horizon, reps, budget=P95_BUDGET_S):
     return best
 
 
+def _learner_vs_ds(stream, horizon, reps, bench):
+    """Section 4: learner-fused adaptive redundancy vs DS-only adaptive."""
+    import dataclasses
+
+    from repro.labelstream import StreamLearnerConfig, run_stream, \
+        stream_summary
+    from repro.labelstream.policy import PolicyConfig
+
+    pol = PolicyConfig(adaptive=True, votes_cap=5, conf_threshold=0.98,
+                       min_votes=2, max_outstanding=2)
+    ds_only = dataclasses.replace(stream, p_hard=0.25, hard_scale=0.3,
+                                  policy=pol)
+    fused = dataclasses.replace(
+        ds_only, learner=StreamLearnerConfig(enabled=True,
+                                             min_votes_known=1))
+    rows = {}
+    for name, cfg in (("ds_adaptive", ds_only), ("learner_fused", fused)):
+        out = run_stream(cfg, horizon, n_reps=reps, seed=5, rate_scale=1.0)
+        s = stream_summary(cfg, out)
+        rows[name] = s
+        emit(f"labelstream_{name}_skewed", 0.0,
+             f"sustained_tps={s['sustained_rate']:.4f};"
+             f"p95_s={s['p95_tis']:.0f};acc={s['accuracy']:.3f};"
+             f"votes_per_task={s['votes_per_task']:.2f};"
+             f"model_known_frac={s['model_known_frac']:.2f}")
+    saved = 1.0 - rows["learner_fused"]["votes_per_task"] \
+        / max(rows["ds_adaptive"]["votes_per_task"], 1e-9)
+    acc_gap = rows["learner_fused"]["accuracy"] \
+        - rows["ds_adaptive"]["accuracy"]
+    emit("labelstream_learner_savings", 0.0,
+         f"votes_saved_pct={100 * saved:.1f};"
+         f"acc_ds={rows['ds_adaptive']['accuracy']:.3f};"
+         f"acc_learner={rows['learner_fused']['accuracy']:.3f};"
+         f"matched_acc={int(acc_gap >= -0.01)};target=fewer_votes")
+    bench.update({
+        "learner_votes_saved_pct": (100 * saved, "higher"),
+        "learner_votes_per_task": (
+            rows["learner_fused"]["votes_per_task"], "lower"),
+        "ds_votes_per_task": rows["ds_adaptive"]["votes_per_task"],
+        "learner_accuracy": (rows["learner_fused"]["accuracy"], "higher"),
+        "ds_accuracy": rows["ds_adaptive"]["accuracy"],
+        "learner_p95_tis_s": (rows["learner_fused"]["p95_tis"], "lower"),
+        "ds_p95_tis_s": rows["ds_adaptive"]["p95_tis"],
+    })
+
+
 def run(smoke: bool = False):
     from repro.labelstream import run_stream, stream_summary
     from repro.labelstream.policy import PolicyConfig
@@ -83,12 +135,18 @@ def run(smoke: bool = False):
     horizon = 700 if smoke else 2500
     reps = 2 if smoke else 4
     stream, naive = _cfgs(smoke)
+    bench = {}
 
     # -- 1 + 2: load sweeps, then the equal-p95 capacity ratio ------------
     if smoke:
         # one compilation only: the streaming service at two loads (the
         # rate_scale is traced, so the second point is a warm re-run)
-        _sweep("stream", stream, (2.0, 3.0), horizon, reps)
+        best = _sweep("stream", stream, (2.0, 3.0), horizon, reps)
+        bench["stream_sustained_tps"] = best
+        _learner_vs_ds(stream, horizon, reps, bench)
+        write_bench_json("labelstream", bench,
+                         meta={"horizon": horizon, "reps": reps,
+                               "smoke": True})
         return
     best_stream = _sweep("stream", stream, (2.0, 3.0, 4.0, 4.5, 5.0),
                          horizon, reps)
@@ -96,6 +154,7 @@ def run(smoke: bool = False):
                         horizon, reps)
     if best_stream > 0 and best_naive > 0:
         ratio = f"{best_stream / best_naive:.1f}"
+        bench["capacity_ratio_x"] = (best_stream / best_naive, "higher")
     else:
         # a sweep with no stable point is a failed comparison, not a win
         ratio = "nan_no_stable_point"
@@ -127,6 +186,12 @@ def run(smoke: bool = False):
          f"votes_saved_pct={100 * saved:.1f};"
          f"acc_fixed={rows['fixed5']['accuracy']:.3f};"
          f"acc_adaptive={rows['adaptive5']['accuracy']:.3f};target_pct=20")
+    bench["adaptive_votes_saved_pct"] = (100 * saved, "higher")
+
+    # -- 4: learner-fused redundancy vs DS-only adaptive ------------------
+    _learner_vs_ds(stream, horizon, reps, bench)
+    write_bench_json("labelstream", bench,
+                     meta={"horizon": horizon, "reps": reps, "smoke": False})
 
 
 if __name__ == "__main__":

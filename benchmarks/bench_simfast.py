@@ -35,7 +35,7 @@ _force_host_devices()
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
-from benchmarks.common import emit  # noqa: E402
+from benchmarks.common import emit, write_bench_json  # noqa: E402
 
 
 def _event_loop_rps(cs_kwargs, n_tasks, n_reps):
@@ -76,6 +76,7 @@ def run(smoke: bool = False):
     if smoke:
         cases = cases[:1]
 
+    bench = {}
     for name, cs_kw, cfg, n_tasks, el_reps in cases:
         el = _event_loop_rps(cs_kw, n_tasks, el_reps)
         sf, out = _simfast_rps(cfg, n_reps)
@@ -84,6 +85,12 @@ def run(smoke: bool = False):
              f"simfast_rps={sf:.1f};eventloop_rps={el:.2f};"
              f"speedup_x={sf / el:.1f};reps={n_reps};"
              f"devices={jax.local_device_count()};{s.as_row()}")
+        bench[f"{name}_speedup_x"] = (sf / el, "higher")
+        bench[f"{name}_simfast_rps"] = sf
+        bench[f"{name}_frac_done"] = (s.frac_done, "higher")
+    write_bench_json("simfast", bench,
+                     meta={"reps": n_reps,
+                           "devices": jax.local_device_count()})
 
 
 if __name__ == "__main__":

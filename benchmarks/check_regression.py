@@ -1,0 +1,109 @@
+"""Perf-regression gate over BENCH_*.json artifacts.
+
+Compares every artifact produced by the benchmark run (``artifacts/``, or
+``$BENCH_DIR``) against the committed baseline in ``benchmarks/baselines/``
+and exits non-zero when any shared metric regresses more than ``--tol``
+(default 30%). Direction comes from the artifact: ``higher`` means the
+value must not drop below ``baseline * (1 - tol)``, ``lower`` means it must
+not rise above ``baseline * (1 + tol)``; ``info`` metrics are reported but
+never gated.
+
+Baselines are committed CONSERVATIVELY — a floor/ceiling the metric clears
+with margin on the slowest expected runner, not the best local measurement
+— so CI hardware variance does not trip the gate while a real collapse
+(vectorization silently falling back to a scalar path, a policy change
+doubling votes/label) still does. Machine-dependent absolute rates belong
+in ``info``; gate on ratios (speedup_x), simulated-time quantities (p95
+time-in-system in simulated seconds), and per-task counts (votes/label).
+
+    PYTHONPATH=src python -m benchmarks.check_regression
+    PYTHONPATH=src python -m benchmarks.check_regression --tol 0.3 \
+        --artifacts artifacts --baseline benchmarks/baselines
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(baseline: dict, artifact: dict, tol: float):
+    """Yield (metric, base, new, regress_frac, gated, ok) rows."""
+    base_m = baseline.get("metrics", {})
+    new_m = artifact.get("metrics", {})
+    for key in sorted(base_m):
+        if key not in new_m:
+            yield key, base_m[key]["value"], None, None, True, False
+            continue
+        base = float(base_m[key]["value"])
+        new = float(new_m[key]["value"])
+        direction = base_m[key].get("direction", "info")
+        if direction == "info" or base == 0:
+            yield key, base, new, None, False, True
+            continue
+        if direction == "higher":
+            regress = (base - new) / abs(base)
+        else:
+            regress = (new - base) / abs(base)
+        yield key, base, new, regress, True, regress <= tol
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default=os.environ.get("BENCH_DIR",
+                                                          "artifacts"))
+    ap.add_argument("--baseline", default="benchmarks/baselines")
+    ap.add_argument("--tol", type=float, default=0.30,
+                    help="allowed fractional regression (default 0.30)")
+    args = ap.parse_args(argv)
+
+    baselines = sorted(glob.glob(os.path.join(args.baseline,
+                                              "BENCH_*.json")))
+    if not baselines:
+        print(f"no baselines under {args.baseline}; nothing to gate")
+        return 0
+    failures = []
+    for bpath in baselines:
+        fname = os.path.basename(bpath)
+        apath = os.path.join(args.artifacts, fname)
+        base = _load(bpath)
+        if not os.path.exists(apath):
+            failures.append(f"{fname}: artifact missing (benchmark did not "
+                            f"write {apath})")
+            print(f"[FAIL] {fname}: missing artifact {apath}")
+            continue
+        art = _load(apath)
+        for key, b, n, reg, gated, ok in compare(base, art, args.tol):
+            tag = "ok" if ok else "FAIL"
+            if not gated:
+                print(f"[info] {fname}:{key} baseline={b:g} new="
+                      f"{'-' if n is None else f'{n:g}'}")
+                continue
+            if n is None:
+                failures.append(f"{fname}:{key} missing from artifact")
+                print(f"[FAIL] {fname}:{key} missing from artifact")
+                continue
+            print(f"[{tag:>4}] {fname}:{key} baseline={b:g} new={n:g} "
+                  f"regress={100 * reg:+.1f}% (tol {100 * args.tol:.0f}%)")
+            if not ok:
+                failures.append(f"{fname}:{key} regressed {100 * reg:.1f}% "
+                                f"(baseline {b:g} -> {n:g})")
+    if failures:
+        print(f"\n{len(failures)} regression(s) beyond "
+              f"{100 * args.tol:.0f}% tolerance:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nall gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,24 @@
 """Benchmark harness helpers: every benchmark emits `name,us_per_call,derived`
 CSV rows (us_per_call = wall-clock microseconds per simulated/numeric call;
-derived = the figure's headline quantity)."""
+derived = the figure's headline quantity).
+
+Headline metrics additionally land in machine-readable ``BENCH_<name>.json``
+artifacts (:func:`write_bench_json`) so the perf trajectory is tracked
+across PRs: CI uploads them and ``benchmarks.check_regression`` fails the
+workflow when any metric regresses more than the tolerance against the
+committed baseline in ``benchmarks/baselines/``.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 
 ROWS = []
+
+#: where BENCH_*.json artifacts are written (CI uploads this directory)
+BENCH_DIR = os.environ.get("BENCH_DIR", "artifacts")
 
 
 def emit(name: str, us_per_call: float, derived: str):
@@ -19,3 +31,31 @@ def timed(fn, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)
     return out, (time.perf_counter() - t0) * 1e6
+
+
+def write_bench_json(name: str, metrics: dict, meta: dict = None) -> str:
+    """Write ``BENCH_<name>.json`` with directioned metrics.
+
+    ``metrics`` values are either ``(value, direction)`` tuples with
+    direction ``"higher"`` / ``"lower"`` (better), or bare numbers recorded
+    as direction ``"info"`` — informational only, never regression-gated
+    (use it for wall-clock rates that vary across runner hardware; gate on
+    ratios and simulated-time quantities, which are machine-independent).
+    """
+    norm = {}
+    for k, v in metrics.items():
+        if isinstance(v, tuple):
+            val, direction = v
+        else:
+            val, direction = v, "info"
+        norm[k] = {"value": float(val), "direction": direction}
+    doc = {"name": name, "metrics": norm}
+    if meta:
+        doc["meta"] = meta
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    path = os.path.join(BENCH_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)
+    return path

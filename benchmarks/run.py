@@ -27,6 +27,8 @@ def main() -> None:
         bench_straggler.run(n_tasks=20, seeds=(3,))
         print("# --- smoke: pallas kernels (interpret) ---", flush=True)
         bench_kernels.run(validate_only=True)
+        print("# --- smoke: hybrid learning (vec vs scalar) ---", flush=True)
+        bench_hybrid.run(smoke=True)
         print("# --- smoke: labelstream service ---", flush=True)
         bench_labelstream.run(smoke=True)
         print(f"# total {time.time()-t0:.1f}s", flush=True)

@@ -9,7 +9,8 @@ of vmapped replications instead of one scalar event-loop run.
 """
 import numpy as np
 
-from repro.core.simfast import FastConfig, simulate, simulate_learning
+from repro.core.simfast import (
+    FastConfig, simulate, simulate_learning, simulate_learning_batch)
 from repro.core.simfast_stats import summarize
 
 
@@ -52,7 +53,27 @@ def hybrid_learning_demo():
         print(f"  t={t:7.0f}s labels={nlab:4d} test_acc={acc:.3f}")
 
 
+def hybrid_learning_batch_demo(n_reps=128):
+    print(f"== vectorized hybrid learning ({n_reps} replications, "
+          "scan over rounds + vmap) ==")
+    rng = np.random.default_rng(0)
+    n, d = 2000, 16
+    W0 = rng.normal(size=(d, 2))
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (X @ W0).argmax(-1)
+    Xt = rng.normal(size=(500, d)).astype(np.float32)
+    yt = (Xt @ W0).argmax(-1)
+    out = simulate_learning_batch(FastConfig(pool_size=15), X, y, Xt, yt,
+                                  rounds=8, n_reps=n_reps, seed=0)
+    acc = np.asarray(out["curve"]["acc"])
+    t = np.asarray(out["curve"]["t"])
+    for r in range(acc.shape[1]):
+        print(f"  round {r}: t={t[:, r].mean():7.0f}s "
+              f"test_acc={acc[:, r].mean():.3f}+-{acc[:, r].std():.3f}")
+
+
 if __name__ == "__main__":
     straggler_sweep()
     maintenance_sweep()
     hybrid_learning_demo()
+    hybrid_learning_batch_demo()

@@ -1,13 +1,16 @@
-"""JAX learners for the labeling loop.
+"""DEPRECATED shim — the learner lives in ``repro.learning`` now.
 
-The paper trains scikit-learn logistic regression; we reimplement multinomial
-logistic regression in JAX so the identical code path scales from 784-feature
-MNIST-like vectors to LM-backbone classification heads, and so uncertainty
-scoring can use the fused Pallas kernel (repro.kernels.uncertainty) on TPU.
+``repro.learning.linear`` holds the pure-pytree :class:`LinearLearner`
+(params + Adam state as arrays, jit/vmap/scan-safe) that both simulation
+engines and the streaming labelstream service share; this module keeps the
+historical object-style :class:`LogisticLearner` API for the scalar
+event-loop driver (``core/clamshell.py``) and existing callers. New code
+should use ``repro.learning`` directly.
 
-Uncertainty = predictive entropy; point selection takes the top-k most
-uncertain of a random subsample (paper §5.3: sampling the unlabeled set has
-little accuracy impact and makes decision latency O(sample), not O(corpus)).
+Behavioral fix over the historical version: ``select_uncertain`` breaks
+equal-entropy ties by ascending point index (stable argsort) instead of
+backend-dependent float argsort order, so the scalar path agrees
+bit-for-bit with the batched ``repro.learning.select`` path.
 """
 from __future__ import annotations
 
@@ -19,37 +22,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.learning import linear as _linear
+
 
 @functools.partial(jax.jit, static_argnames=("steps",))
 def _fit(W, b, X, y, sw, steps: int = 120, lr: float = 0.15, l2: float = 1e-3):
-    """Full-batch Adam on weighted multinomial logistic regression."""
+    """Historical entry point: full-batch Adam from fresh moments.
 
-    def loss_fn(params):
-        W, b = params
-        logits = X @ W + b
-        ll = jax.nn.log_softmax(logits)
-        nll = -jnp.take_along_axis(ll, y[:, None], axis=1)[:, 0]
-        return jnp.sum(nll * sw) / jnp.maximum(sw.sum(), 1e-9) + l2 * jnp.sum(W * W)
-
-    grad = jax.grad(loss_fn)
-
-    def body(carry, _):
-        params, m, v, t = carry
-        g = grad(params)
-        t = t + 1
-        m = jax.tree_util.tree_map(lambda m, g: 0.9 * m + 0.1 * g, m, g)
-        v = jax.tree_util.tree_map(lambda v, g: 0.999 * v + 0.001 * g * g, v, g)
-        def upd(p, m, v):
-            mh = m / (1 - 0.9**t)
-            vh = v / (1 - 0.999**t)
-            return p - lr * mh / (jnp.sqrt(vh) + 1e-8)
-        params = jax.tree_util.tree_map(upd, params, m, v)
-        return (params, m, v, t), None
-
-    z = jax.tree_util.tree_map(jnp.zeros_like, (W, b))
-    (params, _, _, _), _ = jax.lax.scan(
-        body, ((W, b), z, z, jnp.zeros((), jnp.int32)), None, length=steps)
-    return params
+    Kept for backward compatibility; delegates to the pytree learner.
+    """
+    st = _linear.init(W.shape[0], W.shape[1])._replace(W=W, b=b)
+    st = _linear.fit(st, X, y, sw, steps=steps, lr=lr, l2=l2)
+    return st.W, st.b
 
 
 @jax.jit
@@ -60,12 +44,13 @@ def _proba(W, b, X):
 @jax.jit
 def _entropy(W, b, X):
     """Predictive entropy (the pure-jnp oracle of kernels/uncertainty)."""
-    logp = jax.nn.log_softmax(X @ W + b, axis=-1)
-    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+    st = _linear.init(W.shape[0], W.shape[1])._replace(W=W, b=b)
+    return _linear.entropy(st, X, use_kernel=False)
 
 
 @dataclass
 class LogisticLearner:
+    """Object-style wrapper over ``repro.learning.linear`` (deprecated)."""
     n_features: int
     n_classes: int
     seed: int = 0
@@ -75,8 +60,12 @@ class LogisticLearner:
     version: int = 0
 
     def __post_init__(self):
-        self.W = jnp.zeros((self.n_features, self.n_classes), jnp.float32)
-        self.b = jnp.zeros((self.n_classes,), jnp.float32)
+        st = _linear.init(self.n_features, self.n_classes)
+        self.W, self.b = st.W, st.b
+
+    def _state(self) -> "_linear.LinearLearner":
+        return _linear.init(self.n_features, self.n_classes)._replace(
+            W=self.W, b=self.b)
 
     def fit(self, X, y, sample_weight=None):
         if len(y) == 0:
@@ -99,12 +88,17 @@ class LogisticLearner:
         return float((self.predict(X) == np.asarray(y)).mean())
 
     def uncertainty(self, X):
-        return np.asarray(_entropy(self.W, self.b, jnp.asarray(X, jnp.float32)))
+        return np.asarray(_entropy(self.W, self.b,
+                                   jnp.asarray(X, jnp.float32)))
 
     def select_uncertain(self, X_pool, candidates: np.ndarray, k: int):
-        """Top-k most uncertain among `candidates` (row indices into X_pool)."""
+        """Top-k most uncertain among `candidates` (row indices into X_pool).
+
+        Equal-entropy ties break by ascending candidate position (stable
+        sort), matching ``repro.learning.select.al_select`` bit-for-bit.
+        """
         if k <= 0 or len(candidates) == 0:
             return np.array([], dtype=np.int64)
         u = self.uncertainty(X_pool[candidates])
-        order = np.argsort(-u)
+        order = np.argsort(-u, kind="stable")
         return candidates[order[:k]]

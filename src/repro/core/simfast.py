@@ -46,10 +46,14 @@ times in the mitigation/tail phase are coarsened to the ``mitig_bundle_s``
 window. Worker latencies are hundreds of seconds, so the bias is far inside
 the parity tolerances asserted by tests/test_simfast.py.
 
-The hybrid learner step (``make_learner_step`` / ``simulate_learning``) runs
-point selection through the fused Pallas entropy kernel
-(kernels/uncertainty.py; interpret mode on CPU, Mosaic on TPU) inside the
-jitted per-round loop, so decision latency scales with the accelerator.
+Hybrid learning (paper §5-§6) runs on the shared ``repro.learning``
+subsystem: ``_learner_round`` is one pure fit -> select -> crowd-vote ->
+refit round (point selection through the fused Pallas entropy kernel for
+wide class axes — interpret mode on CPU, Mosaic on TPU — with
+deterministic tie-breaking), driven either per-round from Python
+(``simulate_learning``, one replication) or fully fused
+(``simulate_learning_batch``: lax.scan over rounds, vmap over
+replications — the sweep engine).
 """
 from __future__ import annotations
 
@@ -596,50 +600,77 @@ def simulate(cfg: FastConfig, n_reps: int, *, seed: int = 0,
 
 
 # --------------------------------------------------------------------------
-# hybrid / active learner step (Pallas entropy kernel inside the loop)
+# hybrid / active learning on the vectorized engine (repro.learning)
 # --------------------------------------------------------------------------
 
-def _entropy_scores(logits, use_kernel: bool):
-    if use_kernel:
-        from repro.kernels.uncertainty import entropy_scores
-        return entropy_scores(logits, interpret=jax.default_backend() != "tpu")
-    from repro.kernels import ref
-    return ref.entropy_ref(logits)
+def _learner_round(bcfg: FastConfig, X, y, X_test, y_test, k_active: int,
+                   n_passive: int, fit_steps: int, decision_latency_s: float,
+                   use_kernel, W, b, labeled, y_obs, t_sim, key):
+    """One fit -> select -> crowd-vote -> bookkeeping round, pure jnp.
+
+    The single building block behind both drivers: the scalar
+    ``simulate_learning`` jits it per round, ``simulate_learning_batch``
+    scans it over rounds and vmaps it over replications. Selection scores
+    predictive entropy through ``repro.learning`` (fused Pallas kernel for
+    wide class axes, exact jnp oracle for narrow ones) with deterministic
+    index tie-breaking; the crowd votes run through the same `_tick`
+    machinery as ``simulate``.
+    """
+    from repro.learning import linear, select as lsel
+
+    k_sel, k_sim = jax.random.split(key)
+    st = linear.init(X.shape[1], W.shape[1])._replace(W=W, b=b)
+    ent = linear.entropy(st, X, use_kernel=use_kernel)
+    chosen, take, act_mask = lsel.hybrid_select(k_sel, ent, labeled,
+                                                k_active, n_passive)
+    st = linear.fit(st, X, y_obs, labeled.astype(jnp.float32),
+                    steps=fit_steps)
+    out = _simulate_one(bcfg, k_sim, y[chosen])
+    done = out["done"] & take
+    # padding entries of `chosen` (take=False) may duplicate valid indices;
+    # scatter through a dump row so no index receives conflicting updates
+    n = labeled.shape[0]
+    chosen_w = jnp.where(done, chosen, n)
+    y_obs = jnp.concatenate([y_obs, jnp.zeros((1,), jnp.int32)]).at[
+        chosen_w].set(out["result"].astype(jnp.int32))[:n]
+    labeled = jnp.concatenate([labeled, jnp.zeros((1,), bool)]).at[
+        chosen_w].set(True)[:n]
+    t_sim = t_sim + out["total_time"] + decision_latency_s
+    acc = linear.test_accuracy(st, X_test, y_test)
+    return (st.W, st.b, labeled, y_obs, t_sim,
+            dict(acc=acc, act_mask=act_mask, ent=ent, chosen=chosen,
+                 done=done))
 
 
 def make_learner_step(n_passive: int, k_active: int, fit_steps: int = 60,
-                      use_kernel: bool = True):
+                      use_kernel=True):
     """Jitted batched hybrid-learning step (paper §5.1 point selection).
 
-    Selection scores every candidate's predictive entropy through the fused
-    Pallas kernel (streaming softmax, no HBM materialization; interpret mode
-    on CPU, Mosaic on TPU) and picks the top-``k_active`` unlabeled points
-    plus ``n_passive`` random ones; the fit is masked full-batch Adam over
-    the labeled set (learner._fit with zero weights on unlabeled rows), so
-    the whole step is one fixed-shape jitted function usable inside lax.scan.
+    Selection scores every candidate's predictive entropy via
+    ``repro.learning`` — the fused Pallas streaming-softmax kernel when the
+    class axis is wide enough to tile (interpret mode on CPU, Mosaic on
+    TPU), the exact jnp oracle otherwise — and picks the top-``k_active``
+    unlabeled points (ties broken by index, so batched and scalar paths
+    agree bit-for-bit) plus ``n_passive`` random ones; the fit is masked
+    full-batch Adam over the labeled set, so the whole step is one
+    fixed-shape jitted function usable inside lax.scan.
+
+    ``use_kernel``: True enables the Pallas entropy path (auto-selected by
+    class width), False forces the jnp oracle.
     """
-    from repro.core.learner import _fit
+    from repro.learning import linear, select as lsel
+
+    uk = None if use_kernel else False
 
     @jax.jit
     def step(W, b, X, labeled, y_obs, key):
-        n = X.shape[0]
-        logits = X @ W + b
-        ent = _entropy_scores(logits, use_kernel)
-        ent = jnp.where(labeled, -INF, ent)
-        _, act = jax.lax.top_k(ent, max(k_active, 1))
-        act = act[:k_active]
-        act_mask = jnp.zeros((n,), bool).at[act].set(k_active > 0)
-        u = jax.random.uniform(key, (n,))
-        u = jnp.where(labeled | act_mask, -INF, u)
-        _, pas = jax.lax.top_k(u, max(n_passive, 1))
-        pas = pas[:n_passive]
-        chosen = jnp.concatenate([act, pas]).astype(jnp.int32)
-        sw = labeled.astype(jnp.float32)
-        W2, b2 = _fit(W, b, X, y_obs, sw, steps=fit_steps)
-        has = labeled.any()
-        W2 = jnp.where(has, W2, W)
-        b2 = jnp.where(has, b2, b)
-        return W2, b2, chosen, act_mask
+        st = linear.init(X.shape[1], W.shape[1])._replace(W=W, b=b)
+        ent = linear.entropy(st, X, use_kernel=uk)
+        chosen, _take, act_mask = lsel.hybrid_select(key, ent, labeled,
+                                                     k_active, n_passive)
+        st = linear.fit(st, X, y_obs, labeled.astype(jnp.float32),
+                        steps=fit_steps)
+        return st.W, st.b, chosen, act_mask
 
     return step
 
@@ -648,15 +679,28 @@ def simulate_learning(cfg: FastConfig, X, y, X_test, y_test, *,
                       rounds: int = 10, k_active: Optional[int] = None,
                       seed: int = 0, fit_steps: int = 60,
                       decision_latency_s: float = 15.0,
-                      use_kernel: bool = True):
-    """Hybrid learning loop on the vectorized engine (single replication).
+                      use_kernel: bool = True, accest=None):
+    """Hybrid learning loop, one replication per call (the scalar path).
 
-    Each round: the jitted learner step selects pool_size points (top-k
-    uncertain via the Pallas entropy kernel + random passive fill), the
+    Each round runs at the Python level: the jitted learner step selects
+    pool_size points (top-k uncertain + random passive fill), the
     vectorized sim labels them as one batch, and the learner refits on all
-    labels so far. Returns (curve, info) where curve = [(sim_time, n_labeled,
-    test_acc)] like ClamShell.run_learning.
+    labels so far. Returns (curve, info) where curve = [(sim_time,
+    n_labeled, test_acc)] like ClamShell.run_learning.
+
+    Pass an ``repro.learning.AccEst`` as ``accest`` to re-split the
+    active/passive budget between rounds from leave-one-arm-out
+    counterfactuals: after each round the learner is refit once without
+    the round's active points and once without its passive points, and
+    each arm is credited the test accuracy its points actually bought
+    (each distinct split jits its own step, so expect a few extra
+    compiles on the first adaptive run).
+
+    For sweeps, prefer :func:`simulate_learning_batch`: the identical
+    round, scanned over rounds and vmapped over replications.
     """
+    from repro.learning import linear
+
     X = jnp.asarray(X, jnp.float32)
     X_test = jnp.asarray(X_test, jnp.float32)
     y_test = np.asarray(y_test)
@@ -666,8 +710,28 @@ def simulate_learning(cfg: FastConfig, X, y, X_test, y_test, *,
     p = cfg.pool_size
     if k_active is None:
         k_active = p // 2
-    n_passive = p - k_active
-    step = make_learner_step(n_passive, k_active, fit_steps, use_kernel)
+    steps_cache = {}
+
+    def get_step(k_act):
+        # like make_learner_step, but also returns the selection-validity
+        # mask so short unlabeled pools cannot clobber earlier labels
+        if k_act not in steps_cache:
+            from repro.learning import select as lsel
+            uk = None if use_kernel else False
+
+            @jax.jit
+            def step(W, b, X, labeled, y_obs, key):
+                st = linear.init(X.shape[1], W.shape[1])._replace(W=W, b=b)
+                ent = linear.entropy(st, X, use_kernel=uk)
+                chosen, take, act_mask = lsel.hybrid_select(
+                    key, ent, labeled, k_act, p - k_act)
+                st = linear.fit(st, X, y_obs, labeled.astype(jnp.float32),
+                                steps=fit_steps)
+                return st.W, st.b, chosen, take, act_mask
+
+            steps_cache[k_act] = step
+        return steps_cache[k_act]
+
     bcfg = dataclasses.replace(cfg, n_tasks=p, batch_size=p,
                                n_classes=n_classes)
 
@@ -682,15 +746,122 @@ def simulate_learning(cfg: FastConfig, X, y, X_test, y_test, *,
         return float((np.asarray((X_test @ W + b).argmax(-1))
                       == y_test).mean())
 
+    def refit_acc(sw):
+        st = linear.fit(linear.init(d, n_classes)._replace(W=W, b=b),
+                        X, y_obs, sw, steps=fit_steps)
+        return test_acc(st.W, st.b)
+
     curve = [(0.0, 0, test_acc(W, b))]
     for _ in range(rounds):
         key, k_sel, k_sim = jax.random.split(key, 3)
-        W, b, chosen, _ = step(W, b, X, labeled, y_obs, k_sel)
+        W, b, chosen, take, act_mask = get_step(k_active)(
+            W, b, X, labeled, y_obs, k_sel)
         chosen_np = np.asarray(chosen)
         out = _simulate_batch(bcfg, jax.random.split(k_sim, 1),
                               jnp.asarray(y[chosen_np], jnp.int32))
-        y_obs = y_obs.at[chosen].set(out["result"][0].astype(jnp.int32))
-        labeled = labeled.at[chosen].set(out["done"][0])
+        # identical masked updates to _learner_round: only valid picks
+        # (take) that completed write back, padding goes to the dump row
+        done = out["done"][0] & take
+        chosen_w = jnp.where(done, chosen, n)
+        y_obs = jnp.concatenate([y_obs, jnp.zeros((1,), jnp.int32)]).at[
+            chosen_w].set(out["result"][0].astype(jnp.int32))[:n]
+        labeled = jnp.concatenate([labeled, jnp.zeros((1,), bool)]).at[
+            chosen_w].set(True)[:n]
         t_sim += float(out["total_time"][0]) + decision_latency_s
         curve.append((t_sim, int(labeled.sum()), test_acc(W, b)))
+        if accest is not None:
+            # leave-one-arm-out counterfactual: credit each arm the test
+            # accuracy its newly-bought labels contribute to a refit on
+            # all labels so far (can favor EITHER arm — active picks that
+            # bought noise make acc_full - acc_no_active negative)
+            done_np = np.asarray(done)
+            act_np = np.asarray(act_mask)[chosen_np] & done_np
+            pas_np = ~np.asarray(act_mask)[chosen_np] & done_np
+            lab_f = labeled.astype(jnp.float32)
+            drop_act = lab_f.at[chosen_np[act_np]].set(0.0)
+            drop_pas = lab_f.at[chosen_np[pas_np]].set(0.0)
+            acc_full = refit_acc(lab_f)
+            g_act = (acc_full - refit_acc(drop_act)) / max(act_np.sum(), 1)
+            g_pas = (acc_full - refit_acc(drop_pas)) / max(pas_np.sum(), 1)
+            k_active = min(p, max(0, int(round(
+                accest.update(g_act, g_pas) * p))))
     return curve, dict(W=W, b=b, labeled=labeled, y_obs=y_obs)
+
+
+@functools.partial(jax.jit,
+                   static_argnums=(0, 5, 6, 7, 8, 9))
+def _learning_batch_jit(bcfg: FastConfig, X, y, X_test, y_test, rounds,
+                        k_active, n_passive, fit_steps, use_kernel, keys,
+                        decision_latency_s):
+    uk = None if use_kernel else False
+
+    def one_rep(key):
+        n, d = X.shape
+        C = bcfg.n_classes
+        from repro.learning import linear
+        st0 = linear.init(d, C)
+        acc0 = linear.test_accuracy(st0, X_test, y_test)
+
+        def round_body(carry, _):
+            W, b, labeled, y_obs, t, key = carry
+            key, k_round = jax.random.split(key)
+            W, b, labeled, y_obs, t, aux = _learner_round(
+                bcfg, X, y, X_test, y_test, k_active, n_passive, fit_steps,
+                decision_latency_s, uk, W, b, labeled, y_obs, t, k_round)
+            return (W, b, labeled, y_obs, t, key), \
+                dict(t=t, n_labeled=labeled.sum(), acc=aux["acc"])
+
+        carry0 = (st0.W, st0.b, jnp.zeros((n,), bool),
+                  jnp.zeros((n,), jnp.int32), jnp.zeros(()), key)
+        (W, b, labeled, y_obs, t, _), ys = jax.lax.scan(
+            round_body, carry0, None, length=rounds)
+        curve = dict(
+            t=jnp.concatenate([jnp.zeros((1,)), ys["t"]]),
+            n_labeled=jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                       ys["n_labeled"].astype(jnp.int32)]),
+            acc=jnp.concatenate([acc0[None], ys["acc"]]))
+        return dict(curve=curve, W=W, b=b, labeled=labeled, y_obs=y_obs,
+                    total_time=t)
+
+    return jax.vmap(one_rep)(keys)
+
+
+def simulate_learning_batch(cfg: FastConfig, X, y, X_test, y_test, *,
+                            rounds: int = 10, n_reps: int = 64,
+                            k_active: Optional[int] = None, seed: int = 0,
+                            fit_steps: int = 60,
+                            decision_latency_s: float = 15.0,
+                            use_kernel: bool = True):
+    """Vectorized hybrid learning: scan over rounds, vmap over replications.
+
+    The whole fit -> select -> crowd-vote -> refit loop is one jitted
+    program: ``_learner_round`` (identical semantics to the scalar
+    :func:`simulate_learning` round, deterministic tie-breaking included)
+    under ``lax.scan`` over ``rounds``, ``jax.vmap`` over ``n_reps``
+    replications — the ROADMAP "vectorize simulate_learning across
+    replications" item. No host round-trips inside the loop, so hundreds of
+    replications advance in lock-step and per-replication cost drops by the
+    batch width (see ``benchmarks/bench_hybrid.py``; the acceptance floor is
+    10x replications/sec at >= 64 reps).
+
+    Returns a dict of stacked arrays with leading dim ``n_reps``:
+    ``curve`` = {t, n_labeled, acc} each (n_reps, rounds+1) — curve[i]
+    matches the scalar path's list-of-tuples — plus final ``W``/``b``/
+    ``labeled``/``y_obs``/``total_time``.
+    """
+    X = jnp.asarray(X, jnp.float32)
+    X_test = jnp.asarray(X_test, jnp.float32)
+    y = np.asarray(y)
+    n_classes = int(y.max()) + 1
+    p = cfg.pool_size
+    if k_active is None:
+        k_active = p // 2
+    n_passive = p - k_active
+    bcfg = dataclasses.replace(cfg, n_tasks=p, batch_size=p,
+                               n_classes=n_classes)
+    keys = jax.random.split(jax.random.key(seed), n_reps)
+    return _learning_batch_jit(
+        bcfg, X, jnp.asarray(y, jnp.int32), X_test,
+        jnp.asarray(np.asarray(y_test), jnp.int32), int(rounds),
+        int(k_active), int(n_passive), int(fit_steps), bool(use_kernel),
+        keys, jnp.float32(decision_latency_s))

@@ -23,6 +23,7 @@ _EXPORTS = {
     "sample_arrivals": "arrivals",
     "PolicyConfig": "policy",
     "StreamConfig": "router",
+    "StreamLearnerConfig": "router",
     "run_stream": "router",
     "stream_summary": "router",
 }

@@ -61,3 +61,29 @@ def should_finalize(log_posterior, n_votes, pol: PolicyConfig):
         & (n_votes >= pol.min_votes)
     at_cap = n_votes >= pol.votes_cap
     return (n_votes > 0) & (early | at_cap), conf
+
+
+def fuse_posteriors(crowd_logpost, model_logpost, weight):
+    """Product-of-experts fusion of crowd and learner posteriors.
+
+    Both inputs are unnormalized log-posteriors over classes; the learner's
+    contribution is scaled by ``weight`` (the router ramps it with the
+    number of training examples, so an untrained model carries no votes).
+    Log-linear fusion keeps the result a valid log-posterior for
+    :func:`confidence` / :func:`should_finalize`.
+    """
+    return crowd_logpost + weight * model_logpost
+
+
+def learner_known(fused_logpost, n_votes, *, threshold: float,
+                  min_votes_known: int):
+    """Tasks the fused posterior already decides — stop buying votes.
+
+    ``known`` marks tasks whose fused confidence clears ``threshold``;
+    ``finalizable`` additionally requires ``min_votes_known`` crowd votes
+    (0 lets a mature model finalize a task the crowd never saw). The
+    router finalizes ``known & finalizable`` and zeroes the outstanding-
+    vote target beyond the ``min_votes_known`` floor for the rest.
+    """
+    known = confidence(fused_logpost) >= threshold
+    return known, known & (n_votes >= min_votes_known)

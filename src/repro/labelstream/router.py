@@ -30,6 +30,17 @@ The ``batch_replay`` flag turns the SAME machinery into the naive
 fixed-batch baseline — a shard admits work only when its window is
 completely drained — so streaming-vs-batch comparisons share every other
 code path.
+
+Hybrid learning rides along when ``StreamConfig.learner.enabled``
+(:class:`StreamLearnerConfig`): admitted tasks carry feature vectors, the
+shared ``repro.learning`` linear learner trains online on finalized
+(features, label) pairs, and its log-posterior is fused (product of
+experts, ``policy.fuse_posteriors``) into each task's DS posterior —
+model-known tasks finalize after ``min_votes_known`` votes and stop
+soliciting the crowd, and vote routing drains the most-uncertain window
+tasks first. ``refresh_every`` additionally re-runs the exact offline
+full-confusion EM (aggregate.py) on the window vote log periodically and
+resets the online posteriors and worker-accuracy estimates from it.
 """
 from __future__ import annotations
 
@@ -48,8 +59,42 @@ from repro.core.simfast import (
 from repro.labelstream.arrivals import (
     ArrivalConfig, init_arrival_state, sample_arrivals,
 )
-from repro.labelstream.policy import PolicyConfig, should_finalize, \
-    target_outstanding
+from repro.labelstream.policy import (
+    PolicyConfig, confidence, fuse_posteriors, learner_known,
+    should_finalize, target_outstanding,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamLearnerConfig:
+    """Streaming hybrid learning: the shared ``repro.learning`` linear
+    learner rides along with the router (paper §6: the second pillar).
+
+    Admitted tasks carry a feature vector (class-conditional Gaussian,
+    ``class_sep`` one-hot means — requires ``n_features >= n_classes``);
+    the learner trains online on finalized (features, label) pairs from a
+    replay ring buffer and its log-posterior is fused into each task's
+    Dawid-Skene posterior (product of experts, weight ramping with the
+    training-set size). Tasks the fused posterior already decides finalize
+    after ``min_votes_known`` votes and stop soliciting further votes —
+    the model labels what it knows, the crowd's votes concentrate on what
+    it doesn't. With ``prioritize`` the router also routes votes to the
+    most-uncertain window tasks first instead of rotating randomly.
+    """
+    enabled: bool = False
+    n_features: int = 8
+    class_sep: float = 1.8
+    prior_scale: float = 1.0      # fusion weight at full ramp
+    ramp_n: float = 48.0          # training examples to reach full weight
+    known_threshold: float = 0.97 # fused confidence to call a task known
+    min_votes_known: int = 1      # crowd votes still required when known
+    fit_every: int = 4            # ticks between online Adam updates
+    fit_steps: int = 2            # Adam steps per update
+    lr: float = 0.05
+    l2: float = 1e-3
+    buffer: int = 256             # replay buffer of finalized examples
+    prioritize: bool = True       # uncertainty-ranked vote routing
+    train_crowd_only: bool = True # train only on tasks with >= 1 crowd vote
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +141,16 @@ class StreamConfig:
     # online worker-accuracy prior (Beta pseudo-counts)
     est_prior_acc: float = 0.85
     est_prior_n: float = 8.0
+    # streaming hybrid learner (repro.learning); disabled by default
+    learner: StreamLearnerConfig = StreamLearnerConfig()
+    # periodic offline full-confusion Dawid-Skene refresh: every
+    # ``refresh_every`` ticks re-run aggregate EM on the window's vote log
+    # and reset the online posteriors + worker-accuracy estimates from it
+    # (0 = off). The vote log is the per-slot store that also backs
+    # finalize-time crediting, so the refresh sees every vote still in the
+    # window (finalized tasks have left the system and keep their label).
+    refresh_every: int = 0
+    refresh_iters: int = 8
     # time-in-system histogram (steady-state percentiles)
     tis_bins: int = 512
     tis_bin_s: float = 4.0
@@ -122,7 +177,7 @@ class StreamConfig:
 
 def _init_window(cfg: StreamConfig):
     Ws, C, cap = cfg.window, cfg.n_classes, cfg.policy.votes_cap
-    return dict(
+    win = dict(
         active=jnp.zeros((Ws,), bool),
         arrival_t=jnp.zeros((Ws,)),
         difficulty=jnp.ones((Ws,)),
@@ -133,6 +188,9 @@ def _init_window(cfg: StreamConfig):
         vote_wid=jnp.zeros((Ws + 1, cap), jnp.int32),
         vote_lab=jnp.zeros((Ws + 1, cap), jnp.int32),
     )
+    if cfg.learner.enabled:
+        win["feat"] = jnp.zeros((Ws, cfg.learner.n_features))
+    return win
 
 
 def _init_shard(cfg: StreamConfig, key):
@@ -151,10 +209,10 @@ def _init_shard(cfg: StreamConfig, key):
 # --------------------------------------------------------------------------
 
 def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
-                warmup_t):
+                warmup_t, lW, lb, fuse_w):
     P, Ws, C = cfg.pool_size, cfg.window, cfg.n_classes
     Q, M, cap = cfg.backlog, cfg.max_arrivals_per_tick, cfg.policy.votes_cap
-    pol, fast = cfg.policy, cfg.fast
+    pol, fast, L = cfg.policy, cfg.fast, cfg.learner
     up = _uniform_block(seed, step, 8 * P).reshape(8, P)
 
     # ---- backlog push (this tick's arrivals, FIFO ring of arrival times) --
@@ -192,6 +250,16 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
     win["true_label"] = jnp.where(admit, tl, win["true_label"])
     win["n_votes"] = jnp.where(admit, 0, win["n_votes"])
     win["logpost"] = jnp.where(admit[:, None], 0.0, win["logpost"])
+    if L.enabled:
+        # class-conditional Gaussian features (one-hot means, unit noise):
+        # the observable side of the task the learner generalizes over
+        F = L.n_features
+        uf = _uniform_block(seed ^ jnp.uint32(0x5EEDF00D), step,
+                            2 * Ws * F).reshape(2, Ws, F)
+        nrm = jnp.sqrt(-2.0 * jnp.log1p(-uf[0])) \
+            * jnp.cos(2.0 * jnp.pi * uf[1])
+        means = L.class_sep * jnp.eye(C, F)
+        win["feat"] = jnp.where(admit[:, None], means[tl] + nrm, win["feat"])
 
     # ---- completions -> votes -> online posterior -----------------------
     ws = dict(ws)
@@ -232,10 +300,49 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
                                                                  jnp.int32)])
                       .at[tid_k].add(keep.astype(jnp.int32)))[:Ws]
 
+    # ---- periodic offline full-confusion Dawid-Skene refresh ------------
+    # every refresh_every ticks, re-run the exact batched EM (aggregate.py)
+    # on the window's vote log and reset the online posteriors and worker-
+    # accuracy estimates from it — the online one-coin increments drift
+    # (stale accuracy estimates at vote time are never revisited); the
+    # offline EM re-explains every stored vote under the final confusions
+    if cfg.refresh_every > 0:
+        from repro.labelstream.aggregate import _ds_em
+
+        def _refresh(_):
+            vmask_r = (jnp.arange(cap)[None, :] < win["n_votes"][:, None]) \
+                & win["active"][:, None]
+            em = _ds_em(win["vote_lab"][:Ws], win["vote_wid"][:Ws], vmask_r,
+                        P + 1, C, cfg.refresh_iters, False, False, True)
+            lp = jnp.where((win["active"] & (win["n_votes"] > 0))[:, None],
+                           em["log_posterior"], win["logpost"])
+            vpw = em["votes_per_worker"][:P]
+            return lp, em["accuracy"][:P] * vpw, vpw
+
+        win["logpost"], ws["est_correct"], ws["est_n"] = jax.lax.cond(
+            step % cfg.refresh_every == cfg.refresh_every - 1, _refresh,
+            lambda _: (win["logpost"], ws["est_correct"], ws["est_n"]),
+            None)
+
+    # ---- learner fusion (product of experts) ----------------------------
+    # the adaptive-redundancy policy consumes the learner posterior fused
+    # with the DS posterior: tasks the model already knows finalize after
+    # min_votes_known crowd votes and stop soliciting further votes
+    if L.enabled:
+        model_lp = jax.nn.log_softmax(win["feat"] @ lW + lb, axis=-1)
+        fused = fuse_posteriors(win["logpost"], model_lp, fuse_w)
+        known, known_fin = learner_known(
+            fused, win["n_votes"], threshold=L.known_threshold,
+            min_votes_known=L.min_votes_known)
+    else:
+        fused = win["logpost"]
+        known = jnp.zeros((Ws,), bool)
+        known_fin = known
+
     # ---- finalization (adaptive redundancy) -----------------------------
-    fin, conf = should_finalize(win["logpost"], win["n_votes"], pol)
-    fin = fin & win["active"]
-    result = win["logpost"].argmax(-1)
+    fin, conf = should_finalize(fused, win["n_votes"], pol)
+    fin = (fin | known_fin) & win["active"]
+    result = fused.argmax(-1)
     tis = jnp.where(fin, t - win["arrival_t"], 0.0)
     # steady-state metrics count tasks by ARRIVAL-time warmth (matching the
     # offered-rate gate), so warmup queueing cannot leak into the histogram
@@ -296,6 +403,12 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
     n_asg = jnp.zeros((Ws + 1,), jnp.int32).at[
         jnp.where(ws["assigned"] >= 0, ws["assigned"], Ws)].add(1)[:Ws]
     want = target_outstanding(win["n_votes"], pol)
+    if L.enabled:
+        # a model-known task requests only the crowd votes it still needs
+        # to clear the min_votes_known floor — the learner posterior covers
+        # the rest, so the saved votes concentrate on unknown tasks
+        want = jnp.where(known, jnp.minimum(
+            want, jnp.maximum(L.min_votes_known - win["n_votes"], 0)), want)
     tier1 = win["active"] & (n_asg < want)
     if cfg.straggler:
         extra = jnp.minimum(want, cfg.max_dup)
@@ -303,9 +416,20 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
             & (n_asg < want + extra)
     else:
         tier2 = jnp.zeros((Ws,), bool)
-    shift = (_uniform_block(seed ^ jnp.uint32(0xA5A5A5A5), step, 1)[0]
-             * Ws).astype(jnp.int32)
-    take, task_for_w, _, _ = priority_match(avail, tier1, tier2, shift)
+    if L.enabled and L.prioritize:
+        # learner-driven prioritization: route votes to the window tasks
+        # with the LOWEST fused confidence first (priority_match drains
+        # eligible tasks in slot order, so matching in permuted slot space
+        # and mapping back yields most-uncertain-first routing)
+        unc = jnp.where(win["active"], -confidence(fused), -jnp.inf)
+        perm = jnp.argsort(-unc, stable=True).astype(jnp.int32)
+        take, task_p, _, _ = priority_match(
+            avail, tier1[perm], tier2[perm], jnp.zeros((), jnp.int32))
+        task_for_w = perm[task_p]
+    else:
+        shift = (_uniform_block(seed ^ jnp.uint32(0xA5A5A5A5), step, 1)[0]
+                 * Ws).astype(jnp.int32)
+        take, task_for_w, _, _ = priority_match(avail, tier1, tier2, shift)
     lat_new = draw_latency(fast, ws["mu"], ws["sigma"], up[6], up[7])
     ws["assigned"] = jnp.where(take, task_for_w, ws["assigned"])
     ws["busy_until"] = jnp.where(take, t + lat_new, ws["busy_until"])
@@ -320,8 +444,23 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
                    completions=(comp & (win["arrival_t"][a_idx]
                                         >= warmup_t)).sum(),
                    done_all=fin.sum(), dropped=dropped,
-                   backlog=bl_count, in_flight=win["active"].sum())
-    return ws, win, bl, metrics
+                   backlog=bl_count, in_flight=win["active"].sum(),
+                   model_known=(wfin & known).sum())
+    if L.enabled:
+        # finalized (features, label) pairs feed the replay buffer the
+        # driver trains on. Training labels come from the CROWD-ONLY
+        # posterior (not the fused result): a confident-but-wrong model
+        # that finalizes over a disagreeing vote must not feed its own
+        # prediction back into its training set (self-training feedback
+        # loop); with train_crowd_only the pair additionally requires at
+        # least one crowd vote so zero-vote model finalizations never
+        # train the model on itself
+        tmask = fin & (win["n_votes"] >= 1) if L.train_crowd_only else fin
+        train = dict(mask=tmask, feat=win["feat"],
+                     label=win["logpost"].argmax(-1))
+    else:
+        train = dict(mask=jnp.zeros((Ws,), bool))
+    return ws, win, bl, metrics, train
 
 
 # --------------------------------------------------------------------------
@@ -329,7 +468,9 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
 # --------------------------------------------------------------------------
 
 def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
-    S = cfg.n_shards
+    from repro.learning import linear
+
+    S, L = cfg.n_shards, cfg.learner
     k_init, k_seed, k_run = jax.random.split(key, 3)
     ws, banks, win, bl = jax.vmap(lambda k: _init_shard(cfg, k))(
         jax.random.split(k_init, S))
@@ -346,7 +487,15 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
         dropped=jnp.zeros((), jnp.int32),
         arrived=jnp.zeros((), jnp.int32),
         arrived_warm=jnp.zeros((), jnp.int32),
+        model_known=jnp.zeros((), jnp.int32),
     )
+    if L.enabled:
+        # one learner per replication, shared across shards; finalized
+        # (features, label) pairs land in a replay ring (+1 dump row)
+        state["learn"] = linear.init(L.n_features, cfg.n_classes)
+        state["buf_X"] = jnp.zeros((L.buffer + 1, L.n_features))
+        state["buf_y"] = jnp.zeros((L.buffer + 1,), jnp.int32)
+        state["buf_n"] = jnp.zeros((), jnp.int32)
     M, cap_total = cfg.max_arrivals_per_tick, cfg.max_arrivals_per_tick * S
 
     def tick(state, _):
@@ -363,13 +512,44 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
         over = (n_arr - M).clip(0).sum() + (n_new - n_cap)
         n_arr = jnp.minimum(n_arr, M)
 
-        ws, win, bl, m = jax.vmap(
+        if L.enabled:
+            lW, lb = state["learn"].W, state["learn"].b
+            # fusion weight ramps with the training-set size so an
+            # untrained model contributes nothing to finalization
+            fuse_w = L.prior_scale * jnp.minimum(
+                1.0, state["buf_n"].astype(jnp.float32) / L.ramp_n)
+        else:
+            lW = jnp.zeros((1, cfg.n_classes))
+            lb = jnp.zeros((cfg.n_classes,))
+            fuse_w = jnp.zeros(())
+        ws, win, bl, m, train = jax.vmap(
             functools.partial(_shard_tick, cfg),
-            in_axes=(0, 0, 0, 0, 0, None, None, 0, None),
+            in_axes=(0, 0, 0, 0, 0, None, None, 0, None, None, None, None),
         )(state["ws"], state["banks"], state["win"], state["bl"],
-          n_arr, t, step, seeds, warmup_t)
+          n_arr, t, step, seeds, warmup_t, lW, lb, fuse_w)
 
         new = dict(state)
+        if L.enabled:
+            # push this tick's finalized examples into the replay ring
+            B = L.buffer
+            tm = train["mask"].reshape(-1)
+            tf = train["feat"].reshape(-1, L.n_features)
+            tl = train["label"].reshape(-1)
+            rank = (jnp.cumsum(tm) - 1).astype(jnp.int32)
+            pos = jnp.where(tm, (state["buf_n"] + rank) % B, B)
+            buf_X = state["buf_X"].at[pos].set(
+                jnp.where(tm[:, None], tf, state["buf_X"][pos]))
+            buf_y = state["buf_y"].at[pos].set(
+                jnp.where(tm, tl, state["buf_y"][pos]))
+            buf_n = state["buf_n"] + tm.sum()
+            learn = jax.lax.cond(
+                (step % L.fit_every == 0) & (buf_n > 0),
+                lambda l: linear.fit(
+                    l, buf_X[:B], buf_y[:B],
+                    (jnp.arange(B) < buf_n).astype(jnp.float32),
+                    steps=L.fit_steps, lr=L.lr, l2=L.l2, fresh_opt=False),
+                lambda l: l, state["learn"])
+            new.update(learn=learn, buf_X=buf_X, buf_y=buf_y, buf_n=buf_n)
         new.update(
             t=t + cfg.dt, step=step + 1, key=key, arr=arr,
             ws=ws, win=win, bl=bl,
@@ -383,6 +563,7 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
             dropped=state["dropped"] + m["dropped"].sum() + over,
             arrived=state["arrived"] + n_new,
             arrived_warm=state["arrived_warm"] + jnp.where(warm, n_new, 0),
+            model_known=state["model_known"] + m["model_known"].sum(),
         )
         ys = dict(arrivals=n_new, finalized=m["done_all"].sum(),
                   backlog=m["backlog"].sum(), in_flight=m["in_flight"].sum())
@@ -391,7 +572,7 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
     state, ys = jax.lax.scan(tick, state, None, length=horizon)
     out = {k: state[k] for k in
            ("hist", "done", "correct", "sum_tis", "votes_fin", "completions",
-            "done_all", "dropped", "arrived", "arrived_warm")}
+            "done_all", "dropped", "arrived", "arrived_warm", "model_known")}
     out["cost_wait"] = state["ws"]["cost_wait"].sum()
     out["cost_work"] = state["ws"]["cost_work"].sum()
     out["n_churned"] = state["ws"]["n_churned"].sum()
@@ -417,6 +598,9 @@ def run_stream(cfg: StreamConfig, horizon: int, *, n_reps: int = 1,
     arrival rate WITHOUT recompiling (it is traced), so load sweeps are
     one compilation. Returns stacked device arrays with leading dim n_reps
     plus ``warmup_t``/``measured_s`` scalars."""
+    if cfg.learner.enabled and cfg.learner.n_features < cfg.n_classes:
+        raise ValueError("learner.n_features must be >= n_classes "
+                         "(one-hot class means)")
     keys = jax.random.split(jax.random.key(seed), n_reps)
     warmup_t = float(warmup_frac * horizon * cfg.dt)
     out = _run_jit(cfg, int(horizon), keys, warmup_t,
@@ -476,6 +660,8 @@ def stream_summary(cfg: StreamConfig, out) -> dict:
         votes_per_task=float(np.asarray(out["votes_fin"]).sum())
         / max(done, 1.0),
         completions_per_task=float(np.asarray(out["completions"]).sum())
+        / max(done, 1.0),
+        model_known_frac=float(np.asarray(out["model_known"]).sum())
         / max(done, 1.0),
         dropped=float(np.asarray(out["dropped"]).sum()),
         backlog_end=float(np.asarray(out["backlog_end"]).sum()) / reps,

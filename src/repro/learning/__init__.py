@@ -1,0 +1,47 @@
+"""learning: the engine-agnostic hybrid/active learning subsystem.
+
+One learner, two engines (paper §5-§6): the batch simulators
+(``core/simfast.simulate_learning[_batch]``, the scalar event loop through
+the ``core/learner`` shim) and the streaming labelstream router both drive
+the same pure-pytree :class:`~repro.learning.linear.LinearLearner` —
+``fit``/``entropy`` are pure array functions, so the identical code path
+runs under jit, scan-over-rounds, vmap-over-replications, and per-tick in
+the streaming service. Point selection (``select``) is uncertainty sampling
+with deterministic index tie-breaking; ``allocate`` splits the label budget
+between active and passive arms.
+
+Exports resolve lazily (PEP 562), mirroring ``labelstream/__init__``.
+"""
+import importlib
+
+_EXPORTS = {
+    "LinearLearner": "linear",
+    "init": "linear",
+    "reset_opt": "linear",
+    "fit": "linear",
+    "fit_step": "linear",
+    "logits": "linear",
+    "predict": "linear",
+    "predict_proba": "linear",
+    "entropy": "linear",
+    "entropy_from_logits": "linear",
+    "test_accuracy": "linear",
+    "MIN_KERNEL_CLASSES": "linear",
+    "topk_uncertain": "select",
+    "al_select": "select",
+    "passive_select": "select",
+    "hybrid_select": "select",
+    "split_budget": "allocate",
+    "AccEst": "allocate",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        mod = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        value = getattr(mod, name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,174 @@
+"""Pure-JAX pytree linear learner — the model half of hybrid learning.
+
+The paper's learner is scikit-learn logistic regression refit from scratch
+between crowd batches; ``core/learner.py`` wrapped that idea in a Python
+dataclass with device arrays inside — fine for one replication at a time,
+invisible to ``vmap``. This module is the engine-agnostic replacement: the
+learner is a :class:`LinearLearner` NamedTuple of arrays (params + Adam
+moments), every operation is a pure function of that pytree, and therefore
+every operation jits, scans and vmaps — the same ``fit``/``entropy`` code
+runs per-round inside ``simulate_learning_batch``'s lax.scan, vmapped over
+replications, and per-tick inside the labelstream streaming router.
+
+Uncertainty scoring goes through the fused Pallas entropy kernel
+(``kernels/uncertainty.entropy_scores``) whenever the class dimension is
+large enough to benefit from tile streaming; tiny class counts (the crowd
+benchmarks' C=2..10) use the pure-jnp oracle, which is exact and avoids
+padding a 2-wide row to a 512-wide tile.
+
+Optimizer semantics match the historical ``core/learner._fit`` exactly
+(bias-corrected Adam, lr 0.15, l2 on W only, moments reset per ``fit``
+call), so the deprecated shim in ``core/learner.py`` is bit-compatible.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+# classes below this width score entropy with the pure-jnp oracle: the
+# Pallas kernel pads the class axis to a 512-lane tile, which is pure
+# overhead for the crowd benchmarks' 2..10-class problems
+MIN_KERNEL_CLASSES = 128
+
+
+class LinearLearner(NamedTuple):
+    """Multinomial logistic regression + Adam state, all arrays (a pytree)."""
+    W: jnp.ndarray          # (n_features, n_classes)
+    b: jnp.ndarray          # (n_classes,)
+    m_W: jnp.ndarray        # Adam first moments
+    m_b: jnp.ndarray
+    v_W: jnp.ndarray        # Adam second moments
+    v_b: jnp.ndarray
+    t: jnp.ndarray          # () int32 Adam step counter
+
+    @property
+    def n_features(self) -> int:
+        return self.W.shape[0]
+
+    @property
+    def n_classes(self) -> int:
+        return self.W.shape[1]
+
+
+def init(n_features: int, n_classes: int,
+         dtype=jnp.float32) -> LinearLearner:
+    """Zero-initialized learner (uniform predictions, zero entropy grads)."""
+    W = jnp.zeros((n_features, n_classes), dtype)
+    b = jnp.zeros((n_classes,), dtype)
+    return LinearLearner(W, b, jnp.zeros_like(W), jnp.zeros_like(b),
+                         jnp.zeros_like(W), jnp.zeros_like(b),
+                         jnp.zeros((), jnp.int32))
+
+
+def reset_opt(state: LinearLearner) -> LinearLearner:
+    """Fresh Adam moments, same params (scratch-refit semantics)."""
+    return state._replace(m_W=jnp.zeros_like(state.W),
+                          m_b=jnp.zeros_like(state.b),
+                          v_W=jnp.zeros_like(state.W),
+                          v_b=jnp.zeros_like(state.b),
+                          t=jnp.zeros((), jnp.int32))
+
+
+def logits(state: LinearLearner, X) -> jnp.ndarray:
+    return X @ state.W + state.b
+
+
+def predict_proba(state: LinearLearner, X) -> jnp.ndarray:
+    return jax.nn.softmax(logits(state, X), axis=-1)
+
+
+def predict(state: LinearLearner, X) -> jnp.ndarray:
+    return logits(state, X).argmax(-1)
+
+
+def test_accuracy(state: LinearLearner, X, y) -> jnp.ndarray:
+    """Mean 0/1 accuracy on (X, y) — a traced scalar, usable inside scan."""
+    return (predict(state, X) == y).mean()
+
+
+def _nll(params, X, y, sw, l2):
+    W, b = params
+    ll = jax.nn.log_softmax(X @ W + b)
+    nll = -jnp.take_along_axis(ll, y[:, None], axis=1)[:, 0]
+    return jnp.sum(nll * sw) / jnp.maximum(sw.sum(), 1e-9) + l2 * jnp.sum(W * W)
+
+
+def fit_step(state: LinearLearner, X, y, sw, *, lr: float = 0.15,
+             l2: float = 1e-3) -> LinearLearner:
+    """One bias-corrected Adam step on the weighted multinomial NLL.
+
+    Pure pytree -> pytree; chain under ``lax.scan`` (see :func:`fit`) or
+    call per-tick for online learning (the labelstream router does).
+    """
+    gW, gb = jax.grad(_nll)((state.W, state.b), X, y, sw, l2)
+    t = state.t + 1
+    m_W = 0.9 * state.m_W + 0.1 * gW
+    m_b = 0.9 * state.m_b + 0.1 * gb
+    v_W = 0.999 * state.v_W + 0.001 * gW * gW
+    v_b = 0.999 * state.v_b + 0.001 * gb * gb
+
+    def upd(p, m, v):
+        mh = m / (1 - 0.9 ** t)
+        vh = v / (1 - 0.999 ** t)
+        return p - lr * mh / (jnp.sqrt(vh) + 1e-8)
+
+    return LinearLearner(upd(state.W, m_W, v_W), upd(state.b, m_b, v_b),
+                         m_W, m_b, v_W, v_b, t)
+
+
+def fit(state: LinearLearner, X, y, sw, *, steps: int = 120,
+        lr: float = 0.15, l2: float = 1e-3,
+        fresh_opt: bool = True) -> LinearLearner:
+    """``steps`` Adam steps via lax.scan; a no-op when no row has weight.
+
+    ``sw`` is the per-row weight — zero rows are unlabeled (masked fit lets
+    the caller keep a fixed-shape (n,) problem inside jit). ``fresh_opt``
+    resets the Adam moments first, giving the paper's refit-from-scratch
+    semantics; pass False for online/streaming updates that should keep
+    momentum across calls.
+    """
+    if fresh_opt:
+        state = reset_opt(state)
+
+    def body(s, _):
+        return fit_step(s, X, y, sw, lr=lr, l2=l2), None
+
+    new, _ = jax.lax.scan(body, state, None, length=steps)
+    has = sw.sum() > 0
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(has, a, b), new, state)
+
+
+def entropy(state: LinearLearner, X, *, use_kernel: Optional[bool] = None,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Predictive entropy per row — the hybrid-learning hot path.
+
+    Routes through the fused Pallas streaming-softmax kernel when the class
+    axis is wide enough to tile (LM-scale heads); narrow class counts use
+    the exact jnp oracle. ``use_kernel``/``interpret`` override the
+    backend-based auto-selection (tests force interpret on CPU).
+    """
+    lg = logits(state, X)
+    return entropy_from_logits(lg, use_kernel=use_kernel, interpret=interpret)
+
+
+def entropy_from_logits(lg, *, use_kernel: Optional[bool] = None,
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
+    V = lg.shape[-1]
+    if use_kernel is None:
+        use_kernel = V >= MIN_KERNEL_CLASSES
+    if use_kernel:
+        from repro.kernels.uncertainty import entropy_scores
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return entropy_scores(lg, interpret=interpret)
+    from repro.kernels import ref
+    return ref.entropy_ref(lg)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "lr", "l2"))
+def _fit_jit(state, X, y, sw, steps, lr, l2):
+    return fit(state, X, y, sw, steps=steps, lr=lr, l2=l2)

@@ -1,0 +1,83 @@
+"""Active-learning point selection with deterministic tie-breaking.
+
+Uncertainty sampling takes the top-k highest-entropy unlabeled points. The
+historical implementation argsorted raw float scores, so equal-entropy ties
+landed in backend-dependent order — the batched (vmap) and scalar paths
+could disagree on which point to buy a label for, which breaks bit-for-bit
+replication parity. Here every selection is a STABLE argsort on masked
+scores: ties break by ascending point index, identically under jit, vmap,
+and numpy.
+
+All functions are fixed-shape pure jnp so they run inside
+``simulate_learning_batch``'s round scan; when fewer eligible points exist
+than requested, the returned ``take`` mask marks the valid prefix instead
+of shrinking the shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -jnp.inf
+
+
+def topk_uncertain(scores, eligible, k: int):
+    """Indices of the top-``k`` scores among ``eligible`` points.
+
+    Returns ``(idx, take)``: ``idx`` (k,) int32 point indices in descending
+    score order (ties by ascending index — deterministic), ``take`` (k,)
+    bool marking entries backed by an actual eligible point (False padding
+    when fewer than ``k`` points are eligible; padded entries point at
+    arbitrary ineligible indices and must be masked by the caller).
+    """
+    masked = jnp.where(eligible, scores, NEG_INF)
+    order = jnp.argsort(-masked, stable=True).astype(jnp.int32)
+    if k > order.shape[0]:
+        # more slots requested than points exist: pad (padding is always
+        # masked out by `take`, since eligible.sum() <= n < k)
+        order = jnp.pad(order, (0, k - order.shape[0]))
+    idx = order[:k]
+    take = jnp.arange(k) < eligible.sum()
+    return idx, take
+
+
+def al_select(scores, labeled, k: int):
+    """Top-``k`` most-uncertain UNLABELED points (the AL half of hybrid).
+
+    ``scores`` (n,) float, ``labeled`` (n,) bool. Returns ``(idx, take)``
+    as :func:`topk_uncertain`; a labeled point is never selected (the
+    hypothesis property test in tests/test_properties.py).
+    """
+    return topk_uncertain(scores, ~labeled, k)
+
+
+def passive_select(key, labeled, exclude, k: int):
+    """Uniform-random ``k`` unlabeled points outside ``exclude``.
+
+    Random order comes from ranking iid uniforms, so the shape stays fixed;
+    ``take`` masks the valid prefix when the pool is short.
+    """
+    n = labeled.shape[0]
+    u = jax.random.uniform(key, (n,))
+    eligible = ~(labeled | exclude)
+    return topk_uncertain(u, eligible, k)
+
+
+def hybrid_select(key, scores, labeled, k_active: int, n_passive: int):
+    """Paper §5.1 hybrid batch: k uncertain points + random passive fill.
+
+    Returns ``(chosen, take, act_mask)``: ``chosen`` (k_active+n_passive,)
+    int32 with the active picks first, ``take`` the validity mask, and
+    ``act_mask`` (n,) bool marking which points were chosen actively.
+    """
+    act_idx, act_take = al_select(scores, labeled, k_active)
+    n = labeled.shape[0]
+    # padding entries (take=False) carry arbitrary indices that may collide
+    # with valid picks; route them to a dump row so the scatter never has
+    # conflicting duplicate updates (JAX applies those in undefined order)
+    act_mask = jnp.zeros((n + 1,), bool).at[
+        jnp.where(act_take, act_idx, n)].set(True)[:n]
+    pas_idx, pas_take = passive_select(key, labeled, act_mask, n_passive)
+    chosen = jnp.concatenate([act_idx, pas_idx])
+    take = jnp.concatenate([act_take, pas_take])
+    return chosen, take, act_mask

@@ -204,3 +204,31 @@ def test_simfast_straggler_never_increases_mean_latency(seed):
         FastConfig(pool_size=10, n_tasks=30, straggler=False), 96, seed=seed))
     assert on.mean_latency <= off.mean_latency * 1.05
     assert on.mean_total_time <= off.mean_total_time * 1.05
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 64),
+       k=st.integers(0, 16), frac=st.floats(0.0, 1.0),
+       quant=st.integers(1, 8))
+def test_al_select_never_picks_labeled_point(seed, n, k, frac, quant):
+    """repro.learning.select.al_select: a labeled point is never selected,
+    valid picks are unique, and ties (quantized scores) break
+    deterministically by index."""
+    from repro.learning.select import al_select
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(np.round(rng.uniform(0, 1, n) * quant) / quant)
+    labeled = jnp.asarray(rng.uniform(size=n) < frac)
+    idx, take = al_select(scores, labeled, k)
+    idx, take = np.asarray(idx), np.asarray(take)
+    valid = idx[take]
+    assert not np.asarray(labeled)[valid].any()
+    assert len(set(valid.tolist())) == len(valid)
+    assert take.sum() == min(k, int((~np.asarray(labeled)).sum()))
+    # determinism: the same inputs select the same points
+    idx2, take2 = al_select(scores, labeled, k)
+    np.testing.assert_array_equal(idx, np.asarray(idx2))
+    # ordered by descending score, index-ascending within ties
+    s = np.asarray(scores)[valid]
+    assert (np.diff(s) <= 1e-12).all()
+    for a, b in zip(valid, valid[1:]):
+        if abs(np.asarray(scores)[a] - np.asarray(scores)[b]) < 1e-12:
+            assert a < b
