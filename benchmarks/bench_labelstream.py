@@ -1,7 +1,7 @@
 """labelstream service under sustained load: steady-state throughput and
 p50/p95/p99 time-in-system vs offered load.
 
-Four sections:
+Five sections:
 
   1. load sweep — the full streaming service (ring-buffer window, straggler
      mitigation, pool maintenance, adaptive redundancy) across offered
@@ -18,7 +18,17 @@ Four sections:
   4. learner-fused redundancy (ISSUE-3 acceptance) — the streaming hybrid
      learner (repro.learning fused with DS posteriors, stop-soliciting on
      model-known tasks) must reach matched accuracy with FEWER votes than
-     DS-only adaptive redundancy on the same skewed workload.
+     DS-only adaptive redundancy on the same skewed workload;
+  5. worker-aware routing (ISSUE-4 acceptance) — on a HETEROGENEOUS worker
+     pool (wide Beta accuracy spread, long sessions), FROG-style scored
+     matching (labelstream/routing.py: accurate workers to uncertain
+     tasks, fast workers to easy ones, low-value workers idle when vote
+     demand is scarce) must beat the uniform two-tier match: >= 10% fewer
+     votes at matched-or-better accuracy, p95 time-in-system no worse.
+     Runs at a FIXED horizon/reps in smoke and full so the committed
+     baseline gates the same measurement everywhere; an informational row
+     compares learner-driven most-uncertain-first backlog admission
+     against the FIFO ring under bursty congestion.
 
 Headline metrics land in ``BENCH_labelstream.json`` (simulated-time and
 per-task quantities — machine-independent) for the cross-PR regression
@@ -127,6 +137,75 @@ def _learner_vs_ds(stream, horizon, reps, bench):
     })
 
 
+def _routing_vs_uniform(bench):
+    """Section 5: worker-aware scored matching vs uniform two-tier match
+    on a heterogeneous pool (+ informational backlog-admission row)."""
+    import dataclasses
+
+    from repro.labelstream import ArrivalConfig, RoutingConfig, \
+        StreamLearnerConfig, heterogeneous_stream_config, run_stream, \
+        stream_summary
+
+    het = heterogeneous_stream_config()
+    aware = dataclasses.replace(het, routing=RoutingConfig(enabled=True))
+    horizon, reps = 1200, 4   # fixed in smoke AND full: the baseline gates
+    rows = {}                 # this exact measurement
+    for name, cfg in (("uniform", het), ("aware", aware)):
+        out = run_stream(cfg, horizon, n_reps=reps, seed=0, rate_scale=1.0)
+        s = stream_summary(cfg, out)
+        rows[name] = s
+        emit(f"labelstream_route_{name}_het", 0.0,
+             f"sustained_tps={s['sustained_rate']:.4f};"
+             f"p50_s={s['p50_tis']:.0f};p95_s={s['p95_tis']:.0f};"
+             f"acc={s['accuracy']:.3f};"
+             f"votes_per_task={s['votes_per_task']:.2f}")
+    saved = 1.0 - rows["aware"]["votes_per_task"] \
+        / max(rows["uniform"]["votes_per_task"], 1e-9)
+    acc_gap = rows["aware"]["accuracy"] - rows["uniform"]["accuracy"]
+    emit("labelstream_routing_savings", 0.0,
+         f"votes_saved_pct={100 * saved:.1f};"
+         f"acc_uniform={rows['uniform']['accuracy']:.3f};"
+         f"acc_aware={rows['aware']['accuracy']:.3f};"
+         f"p95_uniform_s={rows['uniform']['p95_tis']:.0f};"
+         f"p95_aware_s={rows['aware']['p95_tis']:.0f};"
+         f"matched_acc={int(acc_gap >= -0.01)};target_pct=10")
+    bench.update({
+        "routing_votes_saved_pct": (100 * saved, "higher"),
+        "routing_votes_per_task": (rows["aware"]["votes_per_task"], "lower"),
+        "uniform_votes_per_task": rows["uniform"]["votes_per_task"],
+        "routing_accuracy": (rows["aware"]["accuracy"], "higher"),
+        "uniform_accuracy": rows["uniform"]["accuracy"],
+        "routing_p95_tis_s": (rows["aware"]["p95_tis"], "lower"),
+        "uniform_p95_tis_s": rows["uniform"]["p95_tis"],
+    })
+
+    # informational: learner-driven most-uncertain-first backlog admission
+    # vs the FIFO ring under bursty congestion (the backlog must actually
+    # queue for the discipline to matter). Not regression-gated: the win
+    # is workload-dependent (uncertainty admission chases noise when hard
+    # tasks are chance-level; here tasks are learnable)
+    burst = dataclasses.replace(
+        het, window=8,
+        arrivals=ArrivalConfig(kind="mmpp", rate=0.01, rate_hi=0.12,
+                               dwell_mean_s=900.0),
+        learner=StreamLearnerConfig(enabled=True, min_votes_known=0,
+                                    class_sep=1.2),
+        routing=RoutingConfig(enabled=True))
+    uncadm = dataclasses.replace(
+        burst, routing=RoutingConfig(enabled=True, admission="uncertain"))
+    for name, cfg in (("fifo", burst), ("uncertain", uncadm)):
+        s = stream_summary(cfg, run_stream(cfg, horizon, n_reps=2, seed=1,
+                                           rate_scale=1.0))
+        rows[name] = s
+        emit(f"labelstream_admit_{name}_burst", 0.0,
+             f"sustained_tps={s['sustained_rate']:.4f};"
+             f"p95_s={s['p95_tis']:.0f};acc={s['accuracy']:.3f};"
+             f"votes_per_task={s['votes_per_task']:.2f};"
+             f"backlog_end={s['backlog_end']:.0f}")
+    bench["admission_uncertain_accuracy"] = rows["uncertain"]["accuracy"]
+    bench["admission_fifo_accuracy"] = rows["fifo"]["accuracy"]
+
+
 def run(smoke: bool = False):
     from repro.labelstream import run_stream, stream_summary
     from repro.labelstream.policy import PolicyConfig
@@ -144,6 +223,7 @@ def run(smoke: bool = False):
         best = _sweep("stream", stream, (2.0, 3.0), horizon, reps)
         bench["stream_sustained_tps"] = best
         _learner_vs_ds(stream, horizon, reps, bench)
+        _routing_vs_uniform(bench)
         write_bench_json("labelstream", bench,
                          meta={"horizon": horizon, "reps": reps,
                                "smoke": True})
@@ -190,6 +270,9 @@ def run(smoke: bool = False):
 
     # -- 4: learner-fused redundancy vs DS-only adaptive ------------------
     _learner_vs_ds(stream, horizon, reps, bench)
+
+    # -- 5: worker-aware routing vs uniform two-tier match ----------------
+    _routing_vs_uniform(bench)
     write_bench_json("labelstream", bench,
                      meta={"horizon": horizon, "reps": reps, "smoke": False})
 

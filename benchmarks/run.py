@@ -29,7 +29,8 @@ def main() -> None:
         bench_kernels.run(validate_only=True)
         print("# --- smoke: hybrid learning (vec vs scalar) ---", flush=True)
         bench_hybrid.run(smoke=True)
-        print("# --- smoke: labelstream service ---", flush=True)
+        print("# --- smoke: labelstream service (incl. worker-aware "
+              "routing, section 5) ---", flush=True)
         bench_labelstream.run(smoke=True)
         print(f"# total {time.time()-t0:.1f}s", flush=True)
         return
@@ -41,7 +42,8 @@ def main() -> None:
                      (bench_e2e, "end-to-end (Fig 17-18, s6.6)"),
                      (bench_simfast, "vectorized engine vs event loop"),
                      (bench_kernels, "pallas kernels"),
-                     (bench_labelstream, "labelstream streaming service"),
+                     (bench_labelstream,
+                      "labelstream streaming service + worker-aware routing"),
                      (roofline, "roofline (dry-run artifacts)")):
         print(f"# --- {tag} ---", flush=True)
         mod.run()

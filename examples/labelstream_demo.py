@@ -2,16 +2,20 @@
 
 Runs the full pipeline — diurnal arrivals -> sharded ring-buffer router ->
 online Dawid-Skene posteriors -> adaptive redundancy — over a simulated
-day, prints the hourly traffic/latency profile, then re-aggregates a
-synthetic vote replay offline with the batched full-confusion EM to show
-the two aggregation paths agree.
+day, prints the hourly traffic/latency profile, shows worker-aware
+FROG-style routing against the uniform two-tier match on a heterogeneous
+pool, then re-aggregates a synthetic vote replay offline with the batched
+full-confusion EM to show the two aggregation paths agree.
 
     PYTHONPATH=src python examples/labelstream_demo.py
 """
+import dataclasses
+
 import numpy as np
 
 from repro.labelstream import (
-    ArrivalConfig, PolicyConfig, StreamConfig, run_stream, stream_summary,
+    ArrivalConfig, PolicyConfig, RoutingConfig, StreamConfig,
+    heterogeneous_stream_config, run_stream, stream_summary,
 )
 from repro.labelstream.aggregate import aggregate_votes
 
@@ -47,6 +51,15 @@ def main():
     print(f"label accuracy {s['accuracy']:.3f} at "
           f"{s['votes_per_task']:.2f} votes/task "
           f"(cap {cfg.policy.votes_cap}); cost ${s['cost']:.2f}")
+
+    print("\n== worker-aware routing vs uniform match (heterogeneous pool) ==")
+    het = heterogeneous_stream_config()
+    aware = dataclasses.replace(het, routing=RoutingConfig(enabled=True))
+    for name, c in (("uniform two-tier", het), ("FROG-style scored", aware)):
+        r = stream_summary(c, run_stream(c, 1200, n_reps=2, seed=0))
+        print(f"{name:18s}: acc {r['accuracy']:.3f} at "
+              f"{r['votes_per_task']:.2f} votes/task, "
+              f"p50/p95 = {r['p50_tis']:.0f}/{r['p95_tis']:.0f} s")
 
     print("\n== offline re-aggregation (batched full-confusion DS EM) ==")
     rng = np.random.default_rng(0)

@@ -247,6 +247,14 @@ def priority_match(avail, tier1, tier2, shift):
     per call. Shared by the simfast batch engine and the labelstream
     streaming router.
 
+    This is the UNIFORM special case of the worker-aware scored matcher
+    (``labelstream/routing.py::scored_match``): with a constant score
+    matrix the greedy scan reduces to exactly this rank-based drain, tie-
+    broken in the same rotated slot order — the parity test in
+    tests/test_labelstream.py pins the two bit-for-bit, which makes this
+    function the oracle for the scored path. Keep the two tie-break
+    orders in sync if either changes.
+
     Returns ``(take, task_for_w, took_tier1, n_tier1)``: per-worker
     assignment mask, matched task index, tier-1 membership, and the number
     of tier-1-eligible tasks.

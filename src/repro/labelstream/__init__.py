@@ -4,8 +4,10 @@ Open-world counterpart to the fixed-batch simulators in ``core/``: tasks
 arrive continuously (``arrivals``), a jitted router admits them into a
 ring-buffer task window over sharded retainer pools (``router``), votes are
 aggregated by a batched full-confusion Dawid-Skene EM (``aggregate``, with a
-fused Pallas E-step kernel), and posterior-confidence adaptive redundancy
-(``policy``) stops requesting votes once a task's posterior is confident.
+fused Pallas E-step kernel), posterior-confidence adaptive redundancy
+(``policy``) stops requesting votes once a task's posterior is confident,
+and worker-aware FROG-style routing (``routing``) matches accurate workers
+to uncertain tasks and fast workers to easy ones.
 
 Exports resolve lazily (PEP 562) so lower layers that only need one piece
 — e.g. ``core/quality.py`` fronting ``aggregate.dawid_skene`` — do not pay
@@ -22,8 +24,11 @@ _EXPORTS = {
     "ArrivalConfig": "arrivals",
     "sample_arrivals": "arrivals",
     "PolicyConfig": "policy",
+    "RoutingConfig": "routing",
+    "scored_match": "routing",
     "StreamConfig": "router",
     "StreamLearnerConfig": "router",
+    "heterogeneous_stream_config": "router",
     "run_stream": "router",
     "stream_summary": "router",
 }

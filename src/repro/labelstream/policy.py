@@ -40,6 +40,16 @@ def confidence(log_posterior):
     return jnp.max(jax.nn.softmax(log_posterior, axis=-1), axis=-1)
 
 
+def uncertainty(log_posterior):
+    """Normalized task uncertainty in [0, 1] from unnormalized
+    log-posteriors: 1 - confidence rescaled by C/(C-1) so a uniform
+    posterior scores 1 regardless of the class count. The worker-aware
+    router (routing.py) uses it to split tasks between the accuracy and
+    speed axes; backlog admission ranks queued tasks by it."""
+    C = log_posterior.shape[-1]
+    return (1.0 - confidence(log_posterior)) * C / max(C - 1, 1)
+
+
 def target_outstanding(n_votes, pol: PolicyConfig):
     """How many assignments a task WANTS concurrently active right now.
 

@@ -41,6 +41,17 @@ soliciting the crowd, and vote routing drains the most-uncertain window
 tasks first. ``refresh_every`` additionally re-runs the exact offline
 full-confusion EM (aggregate.py) on the window vote log periodically and
 resets the online posteriors and worker-accuracy estimates from it.
+
+Worker-aware routing (``StreamConfig.routing``, routing.py) replaces the
+uniform two-tier match with FROG-style scored matching: a worker x slot
+score matrix built from the online per-worker accuracy estimates (shared
+with the DS vote weights) and a completion-latency EWMA routes
+hard/uncertain tasks to accurate workers and easy tasks to fast ones,
+greedy-assigned under ``lax.scan`` (``scored_match`` — bit-for-bit
+``priority_match`` when the scores are uniform). ``routing.admission =
+"uncertain"`` additionally swaps the backlog FIFO for learner-driven
+admission: task features are drawn at ARRIVAL and queued tasks enter the
+window most-uncertain-first under the current model.
 """
 from __future__ import annotations
 
@@ -61,7 +72,10 @@ from repro.labelstream.arrivals import (
 )
 from repro.labelstream.policy import (
     PolicyConfig, confidence, fuse_posteriors, learner_known,
-    should_finalize, target_outstanding,
+    should_finalize, target_outstanding, uncertainty,
+)
+from repro.labelstream.routing import (
+    RoutingConfig, admit_select, route_scores, scored_match,
 )
 
 
@@ -143,6 +157,10 @@ class StreamConfig:
     est_prior_n: float = 8.0
     # streaming hybrid learner (repro.learning); disabled by default
     learner: StreamLearnerConfig = StreamLearnerConfig()
+    # worker-aware task routing (FROG-style scored matching) and backlog
+    # admission discipline (FIFO ring vs learner-driven most-uncertain-
+    # first); see labelstream/routing.py
+    routing: RoutingConfig = RoutingConfig()
     # periodic offline full-confusion Dawid-Skene refresh: every
     # ``refresh_every`` ticks re-run aggregate EM on the window's vote log
     # and reset the online posteriors + worker-accuracy estimates from it
@@ -171,6 +189,26 @@ class StreamConfig:
         )
 
 
+def heterogeneous_stream_config(**overrides) -> StreamConfig:
+    """The canonical heterogeneous-pool workload where worker-aware routing
+    has signal to exploit: wide Beta(2, 1) worker-accuracy spread, a weak
+    estimation prior so the online estimates actually separate workers,
+    hour-long sessions so they stay valid, and drip adaptive redundancy
+    (one outstanding vote, finalize at 0.95). Shared by bench_labelstream
+    section 5 (the regression-gated measurement behind the committed
+    baseline), the routing tests, and the demo so the three cannot
+    silently measure different workloads. ``overrides`` are StreamConfig
+    fields applied on top."""
+    base = dict(
+        n_shards=2, pool_size=8, window=16, dt=5.0, tis_bin_s=8.0,
+        arrivals=ArrivalConfig(kind="poisson", rate=0.012),
+        acc_a=2.0, acc_b=1.0, est_prior_n=2.0, session_mean_s=3600.0,
+        policy=PolicyConfig(adaptive=True, votes_cap=5, conf_threshold=0.95,
+                            min_votes=1, max_outstanding=1))
+    base.update(overrides)
+    return StreamConfig(**base)
+
+
 # --------------------------------------------------------------------------
 # state init
 # --------------------------------------------------------------------------
@@ -195,12 +233,26 @@ def _init_window(cfg: StreamConfig):
 
 def _init_shard(cfg: StreamConfig, key):
     ws, banks = _init_workers(cfg.fast, key)
-    P = cfg.pool_size
+    P, Q = cfg.pool_size, cfg.backlog
     ws["est_correct"] = jnp.zeros((P,))
     ws["est_n"] = jnp.zeros((P,))
-    bl = dict(times=jnp.zeros((cfg.backlog + 1,)),
-              head=jnp.zeros((), jnp.int32),
-              count=jnp.zeros((), jnp.int32))
+    # per-worker completion-latency EWMA (the routing speed axis); starts
+    # at the population median so an unobserved worker scores neutral
+    ws["lat_ewma"] = jnp.full((P,), cfg.median_mu)
+    if cfg.routing.admission == "uncertain":
+        # slot-array backlog: task identity (features, difficulty, label)
+        # is drawn at ARRIVAL and stored so admission can rank by model
+        # uncertainty; row Q is the dump row for masked scatters/gathers
+        bl = dict(times=jnp.zeros((Q + 1,)),
+                  diff=jnp.ones((Q + 1,)),
+                  tlab=jnp.zeros((Q + 1,), jnp.int32),
+                  feat=jnp.zeros((Q + 1, cfg.learner.n_features)),
+                  occ=jnp.zeros((Q,), bool),
+                  count=jnp.zeros((), jnp.int32))
+    else:
+        bl = dict(times=jnp.zeros((Q + 1,)),
+                  head=jnp.zeros((), jnp.int32),
+                  count=jnp.zeros((), jnp.int32))
     return ws, banks, _init_window(cfg), bl
 
 
@@ -208,41 +260,112 @@ def _init_shard(cfg: StreamConfig, key):
 # one shard, one tick
 # --------------------------------------------------------------------------
 
+def _acc_hat(cfg: StreamConfig, ws):
+    """Beta-smoothed clipped online worker-accuracy estimate — the SAME
+    quantity that weights online Dawid-Skene votes and feeds the routing
+    accuracy axis (the shared-counters invariant the README documents)."""
+    return jnp.clip(
+        (cfg.est_prior_acc * cfg.est_prior_n + ws["est_correct"])
+        / (cfg.est_prior_n + ws["est_n"]), 0.52, 0.995)
+
+
+def _task_features(u1, u2, tl, L: StreamLearnerConfig, C: int):
+    """Class-conditional Gaussian features (one-hot class means scaled by
+    ``class_sep``, unit Box-Muller noise) for tasks with true labels
+    ``tl`` — the observable side the learner generalizes over. Shared by
+    the admission-time (FIFO) and arrival-time (uncertain admission)
+    draws so the two backlog disciplines sample the same feature
+    distribution."""
+    nrm = jnp.sqrt(-2.0 * jnp.log1p(-u1)) * jnp.cos(2.0 * jnp.pi * u2)
+    means = L.class_sep * jnp.eye(C, L.n_features)
+    return means[tl] + nrm
+
 def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
                 warmup_t, lW, lb, fuse_w):
     P, Ws, C = cfg.pool_size, cfg.window, cfg.n_classes
     Q, M, cap = cfg.backlog, cfg.max_arrivals_per_tick, cfg.policy.votes_cap
-    pol, fast, L = cfg.policy, cfg.fast, cfg.learner
+    pol, fast, L, R = cfg.policy, cfg.fast, cfg.learner, cfg.routing
     up = _uniform_block(seed, step, 8 * P).reshape(8, P)
 
-    # ---- backlog push (this tick's arrivals, FIFO ring of arrival times) --
-    space = Q - bl["count"]
-    n_push = jnp.minimum(n_arr, space)
-    dropped = (n_arr - n_push).astype(jnp.int32)
-    slot = jnp.arange(M, dtype=jnp.int32)
-    pos = (bl["head"] + bl["count"] + slot) % Q
-    bl_times = bl["times"].at[jnp.where(slot < n_push, pos, Q)].set(t)
-    bl_count = bl["count"] + n_push
-
-    # ---- admission into free window slots -------------------------------
+    # ---- backlog push + admission into free window slots -----------------
     free = ~win["active"]
     if cfg.batch_replay:
         # naive fixed-batch replay: refill only once the window is drained
         gate = free.all()
     else:
         gate = jnp.ones((), bool)
-    n_adm = jnp.where(gate, jnp.minimum(bl_count, free.sum()), 0
-                      ).astype(jnp.int32)
     frank = (jnp.cumsum(free) - 1).astype(jnp.int32)
-    admit = free & (frank < n_adm)
-    arr_t = bl_times[jnp.where(admit, (bl["head"] + frank) % Q, Q)]
-    bl_head = (bl["head"] + n_adm) % Q
-    bl_count = bl_count - n_adm
-    # fresh-task draws (difficulty mixture + true label)
-    uw = _uniform_block(seed ^ jnp.uint32(0x33CC33CC), step, 2 * Ws
-                        ).reshape(2, Ws)
-    diff = jnp.where(uw[0] < cfg.p_hard, cfg.hard_scale, 1.0)
-    tl = jnp.floor(uw[1] * C).astype(jnp.int32).clip(0, C - 1)
+    featw = None
+    if R.admission == "uncertain":
+        # learner-driven admission: task identity (difficulty, true label,
+        # features) is drawn at ARRIVAL and stored in the slot-array
+        # backlog; admission ranks queued tasks by the current model's
+        # uncertainty on their features and takes the most uncertain first
+        # (an untrained model ties everything and slot order wins)
+        F = L.n_features
+        occ = bl["occ"]
+        space = Q - occ.sum()
+        n_push = jnp.minimum(n_arr, space)
+        dropped = (n_arr - n_push).astype(jnp.int32)
+        slot = jnp.arange(M, dtype=jnp.int32)
+        # i-th arrival -> i-th free backlog slot (searchsorted rank trick)
+        csum = jnp.cumsum((~occ).astype(jnp.int32))
+        dst = jnp.searchsorted(csum, slot + 1).astype(jnp.int32)
+        ok = slot < n_push
+        dstw = jnp.where(ok, dst, Q)          # row Q is the dump row
+        ua = _uniform_block(seed ^ jnp.uint32(0x0BAD5EED), step,
+                            (2 + 2 * F) * M).reshape(2 + 2 * F, M)
+        diff_a = jnp.where(ua[0] < cfg.p_hard, cfg.hard_scale, 1.0)
+        tl_a = jnp.floor(ua[1] * C).astype(jnp.int32).clip(0, C - 1)
+        feat_a = _task_features(ua[2:2 + F].T, ua[2 + F:2 + 2 * F].T,
+                                tl_a, L, C)
+        bl_times = bl["times"].at[dstw].set(t)
+        bl_diff = bl["diff"].at[dstw].set(diff_a)
+        bl_tlab = bl["tlab"].at[dstw].set(tl_a)
+        bl_feat = bl["feat"].at[dstw].set(feat_a)
+        occ = jnp.concatenate([occ, jnp.zeros((1,), bool)]
+                              ).at[dstw].set(True)[:Q]
+        n_adm = jnp.where(gate, jnp.minimum(occ.sum(), free.sum()), 0
+                          ).astype(jnp.int32)
+        u_bl = uncertainty(bl_feat[:Q] @ lW + lb)
+        admit_bl, order = admit_select(u_bl, occ, n_adm)
+        admit = free & (frank < n_adm)
+        # r-th free window slot takes the r-th most-uncertain queued task
+        src = jnp.where(admit, order[frank.clip(0, Q - 1)], Q)
+        arr_t = bl_times[src]
+        diff = bl_diff[src]
+        tl = bl_tlab[src]
+        featw = bl_feat[src]
+        occ = occ & ~admit_bl
+        bl = dict(times=bl_times, diff=bl_diff, tlab=bl_tlab, feat=bl_feat,
+                  occ=occ, count=occ.sum().astype(jnp.int32))
+        bl_count = bl["count"]
+    else:
+        # FIFO ring of arrival times (PR-2 semantics, bit-for-bit)
+        space = Q - bl["count"]
+        n_push = jnp.minimum(n_arr, space)
+        dropped = (n_arr - n_push).astype(jnp.int32)
+        slot = jnp.arange(M, dtype=jnp.int32)
+        pos = (bl["head"] + bl["count"] + slot) % Q
+        bl_times = bl["times"].at[jnp.where(slot < n_push, pos, Q)].set(t)
+        bl_count = bl["count"] + n_push
+        n_adm = jnp.where(gate, jnp.minimum(bl_count, free.sum()), 0
+                          ).astype(jnp.int32)
+        admit = free & (frank < n_adm)
+        arr_t = bl_times[jnp.where(admit, (bl["head"] + frank) % Q, Q)]
+        bl = dict(times=bl_times, head=(bl["head"] + n_adm) % Q,
+                  count=bl_count - n_adm)
+        bl_count = bl["count"]
+        # fresh-task draws at ADMISSION (difficulty mixture + true label)
+        uw = _uniform_block(seed ^ jnp.uint32(0x33CC33CC), step, 2 * Ws
+                            ).reshape(2, Ws)
+        diff = jnp.where(uw[0] < cfg.p_hard, cfg.hard_scale, 1.0)
+        tl = jnp.floor(uw[1] * C).astype(jnp.int32).clip(0, C - 1)
+        if L.enabled:
+            F = L.n_features
+            uf = _uniform_block(seed ^ jnp.uint32(0x5EEDF00D), step,
+                                2 * Ws * F).reshape(2, Ws, F)
+            featw = _task_features(uf[0], uf[1], tl, L, C)
     win = dict(win)
     win["active"] = win["active"] | admit
     win["arrival_t"] = jnp.where(admit, arr_t, win["arrival_t"])
@@ -251,15 +374,7 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
     win["n_votes"] = jnp.where(admit, 0, win["n_votes"])
     win["logpost"] = jnp.where(admit[:, None], 0.0, win["logpost"])
     if L.enabled:
-        # class-conditional Gaussian features (one-hot means, unit noise):
-        # the observable side of the task the learner generalizes over
-        F = L.n_features
-        uf = _uniform_block(seed ^ jnp.uint32(0x5EEDF00D), step,
-                            2 * Ws * F).reshape(2, Ws, F)
-        nrm = jnp.sqrt(-2.0 * jnp.log1p(-uf[0])) \
-            * jnp.cos(2.0 * jnp.pi * uf[1])
-        means = L.class_sep * jnp.eye(C, F)
-        win["feat"] = jnp.where(admit[:, None], means[tl] + nrm, win["feat"])
+        win["feat"] = jnp.where(admit[:, None], featw, win["feat"])
 
     # ---- completions -> votes -> online posterior -----------------------
     ws = dict(ws)
@@ -290,8 +405,7 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
     win["vote_lab"] = win["vote_lab"].at[tid_k, vpos_k].set(
         jnp.where(keep, label, win["vote_lab"][tid_k, vpos_k]))
     # online DS E-step: add the voter's estimated log-odds to the voted class
-    a_e = jnp.clip((cfg.est_prior_acc * cfg.est_prior_n + ws["est_correct"])
-                   / (cfg.est_prior_n + ws["est_n"]), 0.52, 0.995)
+    a_e = _acc_hat(cfg, ws)
     delta = jnp.log(a_e * max(C - 1, 1) / (1.0 - a_e))
     win["logpost"] = (jnp.concatenate(
         [win["logpost"], jnp.zeros((1, C))])
@@ -378,6 +492,10 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
     ws["comp_sum"] = ws["comp_sum"] + lat * comp
     ws["comp_sqsum"] = ws["comp_sqsum"] + lat * lat * comp
     ws["term_sum"] = ws["term_sum"] + winner * lose
+    # completion-latency EWMA: the routing speed axis (route_scores)
+    ws["lat_ewma"] = jnp.where(
+        comp, (1.0 - R.ewma_alpha) * ws["lat_ewma"] + R.ewma_alpha * lat,
+        ws["lat_ewma"])
     ws["cost_work"] = ws["cost_work"] + freed.sum() * WORK_PAY_PER_RECORD
     ws["blocked_until"] = jnp.where(
         comp, ws["busy_until"],
@@ -390,6 +508,7 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
                                    cfg.recruit_mean_s)
     ws["est_correct"] = jnp.where(leave, 0.0, ws["est_correct"])
     ws["est_n"] = jnp.where(leave, 0.0, ws["est_n"])
+    ws["lat_ewma"] = jnp.where(leave, cfg.median_mu, ws["lat_ewma"])
     # stored votes key on the pool slot: remap votes cast by departing
     # workers to the dump slot P so finalize-time crediting cannot charge
     # the replacement worker for its predecessor's answers
@@ -416,7 +535,21 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
             & (n_asg < want + extra)
     else:
         tier2 = jnp.zeros((Ws,), bool)
-    if L.enabled and L.prioritize:
+    if R.enabled:
+        # FROG-style worker-aware routing: score workers x window slots
+        # from the ONLINE per-worker accuracy estimate (the same counters
+        # behind the DS vote weights, refreshed after this tick's
+        # crediting and churn) and the completion-latency EWMA, then
+        # greedy-match under scan. Task uncertainty comes from the FUSED
+        # posterior, so an enabled learner sharpens the routing for free;
+        # with w_acc == w_speed == 0 this is exactly priority_match
+        shift = (_uniform_block(seed ^ jnp.uint32(0xA5A5A5A5), step, 1)[0]
+                 * Ws).astype(jnp.int32)
+        scores = route_scores(_acc_hat(cfg, ws), ws["lat_ewma"],
+                              uncertainty(fused), R)
+        take, task_for_w, _, _ = scored_match(scores, avail, tier1, tier2,
+                                              shift)
+    elif L.enabled and L.prioritize:
         # learner-driven prioritization: route votes to the window tasks
         # with the LOWEST fused confidence first (priority_match drains
         # eligible tasks in slot order, so matching in permuted slot space
@@ -438,7 +571,6 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
     waiting = avail & ~take
     ws["cost_wait"] = ws["cost_wait"] + waiting.sum() * cfg.dt * WAIT_PAY_PER_S
 
-    bl = dict(times=bl_times, head=bl_head, count=bl_count)
     metrics = dict(hist=hist_d, done=done_d, correct=corr_d, sum_tis=tis_d,
                    votes_fin=votesfin_d,
                    completions=(comp & (win["arrival_t"][a_idx]
@@ -601,6 +733,13 @@ def run_stream(cfg: StreamConfig, horizon: int, *, n_reps: int = 1,
     if cfg.learner.enabled and cfg.learner.n_features < cfg.n_classes:
         raise ValueError("learner.n_features must be >= n_classes "
                          "(one-hot class means)")
+    if cfg.routing.admission not in ("fifo", "uncertain"):
+        raise ValueError("routing.admission must be 'fifo' or 'uncertain', "
+                         f"got {cfg.routing.admission!r}")
+    if cfg.routing.admission == "uncertain" and not cfg.learner.enabled:
+        raise ValueError("routing.admission='uncertain' requires "
+                         "learner.enabled: features are drawn at arrival "
+                         "and ranked by the online model")
     keys = jax.random.split(jax.random.key(seed), n_reps)
     warmup_t = float(warmup_frac * horizon * cfg.dt)
     out = _run_jit(cfg, int(horizon), keys, warmup_t,
@@ -617,10 +756,18 @@ def _hist_percentile(hist, q, bin_s):
     The top bin collects every task clipped past the histogram range, so a
     percentile landing there is unbounded above — report it as ``inf``
     rather than silently truncating to the ceiling (an overloaded run must
-    not masquerade as one with a bounded tail)."""
+    not masquerade as one with a bounded tail). An EMPTY histogram (no
+    task finalized in the measured interval — routine at warmup or under
+    total overload) is also ``inf``, not NaN: NaN silently poisons every
+    downstream comparison (a NaN p95 "passes" no budget gate but also
+    fails no assertion loudly), while ``inf`` reads as what it is — no
+    evidence of a bounded tail."""
+    hist = np.asarray(hist)
+    if hist.size == 0:
+        return float("inf")
     c = np.cumsum(hist)
     if c[-1] == 0:
-        return float("nan")
+        return float("inf")
     idx = int(np.searchsorted(c, q / 100.0 * c[-1]))
     if idx >= len(hist) - 1:
         return float("inf")

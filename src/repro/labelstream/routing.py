@@ -1,0 +1,176 @@
+"""Worker-aware task routing (FROG-style) for the streaming router.
+
+The two-tier ``priority_match`` (core/simfast.py) treats every retained
+worker as interchangeable: the r-th available worker takes the r-th
+eligible task in rotated slot order. CLAMShell's own latency taxonomy
+(paper §3) says per-worker speed and accuracy dominate tail latency and
+wasted votes, and FROG (arXiv:1610.08411) shows that matching tasks to
+workers by estimated reliability and response time buys large
+latency/accuracy wins. This module is that matcher for the labelstream
+service:
+
+  * :func:`route_scores` builds a (pool, window) score matrix from the
+    ONLINE per-worker accuracy estimate (the same Beta-smoothed
+    ``est_correct``/``est_n`` counters that drive the Dawid-Skene vote
+    weights) and a per-worker speed estimate (EWMA of observed completion
+    latencies). Hard/uncertain tasks weight the accuracy axis, easy tasks
+    the speed axis, so accurate workers drain the tasks whose posterior
+    needs strong evidence while fast workers burn down the easy backlog.
+  * :func:`scored_match` performs fixed-shape greedy assignment of the
+    score matrix under ``lax.scan`` — worker slots in index order, each
+    taking its best-scoring still-free task, tier-1 (understaffed) tasks
+    strictly before tier-2 (straggler duplicates). With a CONSTANT score
+    matrix it reduces bit-for-bit to ``priority_match`` (ties break in
+    rotated slot order, exactly the uniform engine's random rotation), so
+    the uniform two-tier match is the special case and the parity oracle
+    (tests/test_labelstream.py::test_scored_match_uniform_parity).
+  * :func:`admit_select` is learner-driven BACKLOG admission: rank queued
+    tasks by model uncertainty on their arrival-time features and admit
+    the most uncertain first (FIFO is the zero-model special case — all
+    uncertainties tie and slot order wins).
+
+Everything is pure jnp on fixed shapes so the router can call it inside
+the jitted, vmapped streaming tick.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingConfig:
+    """Static knobs for worker-aware routing and backlog admission.
+
+    ``enabled`` switches the window match from the uniform two-tier
+    ``priority_match`` to :func:`scored_match` over :func:`route_scores`.
+    ``w_acc``/``w_speed`` weight the accuracy and speed axes of the score
+    (both zero = uniform scores = exact ``priority_match`` parity).
+    ``ewma_alpha`` smooths the per-worker completion-latency EWMA the
+    speed axis reads. ``admission`` picks the backlog discipline:
+    ``"fifo"`` is the PR-2 arrival-time ring, ``"uncertain"`` draws task
+    features at ARRIVAL and admits most-uncertain-first under the current
+    learner (requires ``StreamConfig.learner.enabled``).
+    """
+    enabled: bool = False
+    # accuracy is weighted 6x speed by default: evidence quality compounds
+    # through the adaptive-redundancy policy (strong votes finalize tasks
+    # in fewer votes), while speed only shaves service time. Only the
+    # w_acc/w_speed RATIO matters — the scores are standardized per axis
+    w_acc: float = 3.0
+    w_speed: float = 0.5
+    ewma_alpha: float = 0.25
+    admission: str = "fifo"       # "fifo" | "uncertain"
+
+
+def _standardize(x):
+    """Zero-mean/unit-std within the pool so the two axes are comparable
+    regardless of the raw units (log-odds vs log-seconds)."""
+    mu = x.mean()
+    sd = x.std()
+    return (x - mu) / jnp.maximum(sd, 1e-6)
+
+
+def route_scores(acc_hat, lat_ewma, unc, rcfg: RoutingConfig):
+    """(pool, window) score matrix: uncertain tasks rank workers by
+    accuracy, easy tasks by speed.
+
+    ``acc_hat`` is the Beta-smoothed online accuracy estimate in (0, 1)
+    (shared with the Dawid-Skene vote weights), ``lat_ewma`` the
+    per-worker completion-latency EWMA in seconds (> 0), ``unc`` the
+    per-task normalized uncertainty in [0, 1] (1 - confidence of the
+    fused learner+DS posterior, rescaled by C/(C-1)).
+
+    score[w, t] = w_acc * unc_t * A_w + w_speed * (1 - unc_t) * S_w with
+    A/S the standardized accuracy log-odds and negative log-latency: a
+    worker whose accuracy z-score beats its speed z-score maximizes its
+    score on the MOST uncertain eligible task, and vice versa — exactly
+    the FROG pairing. With ``w_acc == w_speed == 0`` the matrix is
+    constant and :func:`scored_match` degenerates to ``priority_match``.
+    """
+    a = _standardize(jnp.log(acc_hat) - jnp.log1p(-acc_hat))
+    s = _standardize(-jnp.log(lat_ewma))
+    u = jnp.clip(unc, 0.0, 1.0)
+    return (rcfg.w_acc * u[None, :] * a[:, None]
+            + rcfg.w_speed * (1.0 - u)[None, :] * s[:, None])
+
+
+def scored_match(scores, avail, tier1, tier2, shift):
+    """Greedy worker-aware matching: fixed-shape ``lax.scan`` over worker
+    slots in descending-priority order, each available worker taking its
+    best-scoring still-free task, tier-1 tasks strictly before tier-2.
+
+    Worker priority is the best score the worker could realize on any
+    currently eligible task, so when eligible tasks are SCARCER than
+    available workers the high-value workers win the contest and the
+    low-value ones idle — the half of FROG that saves votes: a weak
+    worker's vote still counts against the task's cap, so spending the
+    slot on it is worse than not voting at all. Ties — and the
+    constant-score special case — break by worker slot index, and task
+    ties break in slot order rotated by ``shift`` (the same rotation
+    ``priority_match`` applies), so a uniform score matrix reproduces
+    ``priority_match`` bit-for-bit: the r-th available worker takes the
+    r-th eligible task. ``tier1`` and ``tier2`` must be disjoint (both
+    engines guarantee it: tier-1 is understaffed, tier-2 already has an
+    active assignment), which makes "mask the task once taken" equivalent
+    to the rank-based drain.
+
+    Same signature/returns as ``priority_match``:
+    ``(take, task_for_w, took_tier1, n_tier1)``.
+    """
+    P, B = scores.shape
+    rot = jnp.arange(B, dtype=jnp.int32)
+    # rotated task space: rotated index i is window slot (i + shift) % B,
+    # so "first in array order" == "first in rotated slot order"
+    perm = (rot + shift) % B
+    t1r = tier1[perm]
+    t2r = tier2[perm]
+    sr = scores[:, perm]
+    # descending worker priority; stable argsort keeps slot order on ties,
+    # which is what makes uniform scores collapse to priority_match
+    prio = jnp.max(jnp.where((t1r | t2r)[None, :], sr, -jnp.inf), axis=1)
+    worder = jnp.argsort(-prio, stable=True).astype(jnp.int32)
+
+    def step(taken, inp):
+        s_w, av_w = inp
+        c1 = t1r & ~taken
+        c2 = t2r & ~taken
+        cand = jnp.where(c1.any(), c1, c2)
+        take_w = av_w & cand.any()
+        j = jnp.argmax(jnp.where(cand, s_w, -jnp.inf))  # first max wins ties
+        taken = taken | ((rot == j) & take_w)
+        return taken, (take_w, j, take_w & c1.any())
+
+    _, (take_o, j_rot, took1_o) = jax.lax.scan(
+        step, jnp.zeros((B,), bool), (sr[worder], avail[worder]))
+    # scatter the priority-ordered outputs back to worker slots
+    take = jnp.zeros((P,), bool).at[worder].set(take_o)
+    took_tier1 = jnp.zeros((P,), bool).at[worder].set(took1_o)
+    task_for_w = jnp.zeros((P,), jnp.int32).at[worder].set(
+        ((j_rot + shift) % B).astype(jnp.int32))
+    return take, task_for_w, took_tier1, tier1.sum().astype(jnp.int32)
+
+
+def admit_select(unc, occupied, n_adm):
+    """Most-uncertain-first backlog admission (fixed shape).
+
+    Ranks occupied backlog slots by descending ``unc`` (ties — e.g. an
+    untrained model scoring everything equally — break by slot index, the
+    arrival-order-ish discipline) and admits the top ``n_adm``. Returns
+    ``(admit, order)``: the per-slot admit mask and the full ranking,
+    ``order[r]`` = backlog slot of the r-th admitted task, so the caller
+    can gather the r-th free window slot's payload from ``order[r]``.
+
+    Conservation: ``admit.sum() == min(n_adm, occupied.sum())`` and
+    ``admit`` never selects an unoccupied slot — the property tests in
+    tests/test_properties.py pin both.
+    """
+    Q = unc.shape[0]
+    key = jnp.where(occupied, unc, -jnp.inf)   # empty slots sort last
+    order = jnp.argsort(-key, stable=True).astype(jnp.int32)
+    rank = jnp.zeros((Q,), jnp.int32).at[order].set(
+        jnp.arange(Q, dtype=jnp.int32))
+    admit = occupied & (rank < n_adm)
+    return admit, order

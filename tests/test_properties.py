@@ -206,6 +206,102 @@ def test_simfast_straggler_never_increases_mean_latency(seed):
     assert on.mean_total_time <= off.mean_total_time * 1.05
 
 
+@given(seed=st.integers(0, 2**31 - 1), P=st.integers(1, 12),
+       B=st.integers(1, 40))
+def test_scored_match_worker_and_task_invariants(seed, P, B):
+    """Worker-aware matcher invariants under arbitrary scores: a
+    busy/absent worker is never assigned, every worker gets at most one
+    slot per tick, every task at most one worker, assigned tasks are
+    eligible, and the number of assignments is exactly
+    min(available workers, eligible tasks)."""
+    from repro.labelstream.routing import scored_match
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.normal(size=(P, B)).astype(np.float32))
+    avail = jnp.asarray(rng.random(P) < rng.uniform(0.1, 0.9))
+    t1 = rng.random(B) < rng.uniform(0.0, 0.6)
+    t2 = (rng.random(B) < rng.uniform(0.0, 0.6)) & ~t1
+    shift = jnp.int32(rng.integers(0, B))
+    take, task_for_w, took1, n1 = scored_match(
+        scores, avail, jnp.asarray(t1), jnp.asarray(t2), shift)
+    take = np.asarray(take)
+    task = np.asarray(task_for_w)
+    elig = t1 | t2
+    assert not (take & ~np.asarray(avail)).any()     # no absent worker
+    # a worker appears at most once in the outputs by construction (one
+    # row each); the matched tasks of taking workers are unique + eligible
+    assigned = task[take]
+    assert len(set(assigned.tolist())) == len(assigned)
+    assert elig[assigned].all()
+    assert take.sum() == min(int(np.asarray(avail).sum()), int(elig.sum()))
+    assert int(n1) == int(t1.sum())
+    # tier-1 tasks drain strictly before tier-2 gets any worker
+    assert np.asarray(took1)[take].sum() == min(int(take.sum()),
+                                                int(t1.sum()))
+
+
+@given(seed=st.integers(0, 2**31 - 1), P=st.integers(1, 10),
+       B=st.integers(2, 32))
+def test_scored_match_permutation_invariant_in_scores(seed, P, B):
+    """With distinct scores the assignment is a function of the SCORES
+    alone: it ignores the random rotation shift, and permuting the task
+    axis permutes the matching with it (equivariance)."""
+    from repro.labelstream.routing import scored_match
+    rng = np.random.default_rng(seed)
+    # distinct scores: permutation of a strictly spaced grid, so argmax
+    # never ties and the tie-break rotation cannot influence the result
+    scores = jnp.asarray(
+        rng.permutation(np.arange(P * B, dtype=np.float32) / 7.0
+                        ).reshape(P, B))
+    avail = jnp.asarray(rng.random(P) < 0.7)
+    t1 = rng.random(B) < 0.4
+    t2 = (rng.random(B) < 0.4) & ~t1
+    s1 = jnp.int32(rng.integers(0, B))
+    s2 = jnp.int32(rng.integers(0, B))
+    a = scored_match(scores, avail, jnp.asarray(t1), jnp.asarray(t2), s1)
+    b = scored_match(scores, avail, jnp.asarray(t1), jnp.asarray(t2), s2)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    tk = np.asarray(a[0])
+    np.testing.assert_array_equal(np.asarray(a[1])[tk], np.asarray(b[1])[tk])
+    # task-axis equivariance: permute tasks, matching follows
+    perm = rng.permutation(B)
+    c = scored_match(scores[:, perm], avail, jnp.asarray(t1[perm]),
+                     jnp.asarray(t2[perm]), s1)
+    inv = np.empty(B, np.int64)
+    inv[perm] = np.arange(B)
+    np.testing.assert_array_equal(np.asarray(c[0]), tk)
+    np.testing.assert_array_equal(inv[np.asarray(a[1])[tk]],
+                                  np.asarray(c[1])[tk])
+
+
+@given(seed=st.integers(0, 2**31 - 1), Q=st.integers(1, 48),
+       n_adm=st.integers(0, 48))
+def test_admission_conserves_and_selects_most_uncertain(seed, Q, n_adm):
+    """Backlog admission: never admits an empty slot, admits exactly
+    min(n_adm, queued), admits the top-uncertainty entries, and the
+    admitted MULTISET is invariant under slot reordering (conservation of
+    tasks under admission reordering)."""
+    from repro.labelstream.routing import admit_select
+    rng = np.random.default_rng(seed)
+    unc = rng.random(Q).astype(np.float32)
+    occ = rng.random(Q) < rng.uniform(0.1, 0.9)
+    admit, order = admit_select(jnp.asarray(unc), jnp.asarray(occ),
+                                jnp.int32(n_adm))
+    admit = np.asarray(admit)
+    assert not (admit & ~occ).any()
+    assert admit.sum() == min(n_adm, int(occ.sum()))
+    if admit.any() and (occ & ~admit).any():
+        assert unc[admit].min() >= unc[occ & ~admit].max() - 1e-6
+    # order[r] enumerates admitted slots by descending uncertainty
+    r = np.asarray(order)[:admit.sum()]
+    assert (np.sort(r) == np.flatnonzero(admit)).all()
+    # reordering the backlog admits the same uncertainty multiset
+    perm = rng.permutation(Q)
+    admit_p, _ = admit_select(jnp.asarray(unc[perm]), jnp.asarray(occ[perm]),
+                              jnp.int32(n_adm))
+    np.testing.assert_allclose(np.sort(unc[perm][np.asarray(admit_p)]),
+                               np.sort(unc[admit]), atol=0)
+
+
 @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 64),
        k=st.integers(0, 16), frac=st.floats(0.0, 1.0),
        quant=st.integers(1, 8))
