@@ -1,11 +1,16 @@
 """Paper Fig 12/13 (+ Fig 14 TermEst): the SM x PM grid and the TermEst
-replacement-rate restoration."""
+replacement-rate restoration — ``repro.scenarios`` specs through the
+events engine facade."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit
-from repro.core.clamshell import ClamShell, CSConfig
+from benchmarks.common import emit, label_spec
+from repro import scenarios
+
+
+def _label(spec, seed):
+    return scenarios.run(spec, engine="events", seed=seed)["raw"][0]
 
 
 def run(n_tasks=200, seeds=(3, 5)):
@@ -13,11 +18,11 @@ def run(n_tasks=200, seeds=(3, 5)):
     grid = {}
     for sm in (False, True):
         for pm in (float("inf"), 150.0):
+            spec = label_spec(pool_size=15, straggler=sm, pm_l=pm,
+                              n_tasks=n_tasks)
             tot, std, cost = [], [], []
             for seed in seeds:
-                cs = ClamShell(CSConfig(pool_size=15, straggler=sm, pm_l=pm,
-                                        seed=seed))
-                r = cs.run_labeling(n_tasks)
+                r = _label(spec, seed)
                 tot.append(r.total_time)
                 std.append(np.std(r.batch_latencies))
                 cost.append(r.cost)
@@ -36,13 +41,9 @@ def run(n_tasks=200, seeds=(3, 5)):
     rows = {}
     for sm, te, tag in ((False, False, "NoSM"), (True, False, "SM_noTermEst"),
                         (True, True, "SM_TermEst")):
-        reps = []
-        for seed in seeds:
-            cs = ClamShell(CSConfig(pool_size=20, straggler=sm, pm_l=150.0,
-                                    use_termest=te, seed=seed,
-                                    session_mean_s=7200.0))
-            r = cs.run_labeling(300)
-            reps.append(r.n_replaced)
+        spec = label_spec(pool_size=20, straggler=sm, pm_l=150.0,
+                          use_termest=te, session_mean_s=7200.0, n_tasks=300)
+        reps = [_label(spec, seed).n_replaced for seed in seeds]
         rows[tag] = np.mean(reps)
         emit(f"fig14_replacement_{tag}", 0.0, f"replaced={np.mean(reps):.1f}")
     emit("fig14_termest_effect", 0.0,

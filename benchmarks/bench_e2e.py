@@ -1,25 +1,27 @@
 """Paper §6.6 / Fig 17/18: CLAMShell vs Base-R vs Base-NR end to end —
 time-to-accuracy, raw labeling throughput (paper: 7.24x vs Base-NR) and
-latency variance (paper: 151x, 3.1s vs 475s)."""
+latency variance (paper: 151x, 3.1s vs 475s). The three system variants
+are ``repro.scenarios`` specs (policy modules toggled) executed through
+the facade."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit
-from repro.core.clamshell import ClamShell, CSConfig, time_to_accuracy
+from benchmarks.common import emit, label_spec
+from repro import scenarios
+from repro.core.clamshell import time_to_accuracy
 from repro.data.datasets import cifar_like, mnist_like, train_test_split
 
 
-def _mk(kind, seed):
+def _spec(kind, n_tasks=60):
     if kind == "clamshell":
-        return ClamShell(CSConfig(pool_size=16, learner="HL", straggler=True,
-                                  pm_l=150.0, seed=seed))
+        return label_spec(pool_size=16, learner="HL", straggler=True,
+                          pm_l=150.0, n_tasks=n_tasks)
     if kind == "base_r":     # retainer pool + batch AL, no SM/PM, sync
-        return ClamShell(CSConfig(pool_size=16, learner="AL", straggler=False,
-                                  pm_l=float("inf"), async_retrain=False,
-                                  seed=seed))
-    return ClamShell(CSConfig(pool_size=16, learner="PL", straggler=False,
-                              pm_l=float("inf"), retainer=False, seed=seed))
+        return label_spec(pool_size=16, learner="AL", straggler=False,
+                          async_retrain=False, n_tasks=n_tasks)
+    return label_spec(pool_size=16, learner="PL", straggler=False,
+                      retainer=False, n_tasks=n_tasks)
 
 
 def run(seeds=(5, 6)):
@@ -28,8 +30,8 @@ def run(seeds=(5, 6)):
     for kind in ("clamshell", "base_nr"):
         thr, std = [], []
         for seed in seeds:
-            cs = _mk(kind, seed)
-            r = cs.run_labeling(500)
+            r = scenarios.run(_spec(kind, n_tasks=500), engine="events",
+                              seed=seed)["raw"][0]
             thr.append(r.throughput)
             std.append(np.std(r.task_latencies))
         rows[kind] = (np.mean(thr), np.mean(std))
@@ -48,8 +50,9 @@ def run(seeds=(5, 6)):
         times = {}
         for kind in ("clamshell", "base_r", "base_nr"):
             curves = [
-                _mk(kind, s).run_learning(Xtr, ytr, Xte, yte,
-                                          label_budget=360)[0]
+                scenarios.run_learning(_spec(kind), Xtr, ytr, Xte, yte,
+                                       engine="events", seed=s,
+                                       label_budget=360)["curve"]
                 for s in seeds
             ]
             times[kind] = curves

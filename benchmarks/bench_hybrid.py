@@ -7,6 +7,11 @@ replications) must deliver >= 10x replications/sec vs the scalar
 per-replication loop at >= 64 parallel replications, with distributional
 parity (final test accuracy within one std). Recorded in
 ``BENCH_hybrid.json`` for the cross-PR regression gate.
+
+All runs go through ``repro.scenarios.run_learning`` on the registry's
+``hybrid_small`` workload (vec-vs-scalar) or ad-hoc specs (the Fig 15/16
+grids), so the learning drivers share the same declarative vocabulary as
+the labeling engines.
 """
 from __future__ import annotations
 
@@ -16,7 +21,8 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, write_bench_json
-from repro.core.clamshell import ClamShell, CSConfig, acc_at_time
+from repro import scenarios
+from repro.core.clamshell import acc_at_time
 from repro.data.datasets import (
     cifar_like, make_classification, mnist_like, train_test_split)
 
@@ -33,27 +39,28 @@ def vec_vs_scalar(n_reps=64, scalar_reps=4, rounds=6, fit_steps=40):
     """Vectorized vs per-replication-loop simulate_learning (BENCH_hybrid)."""
     import jax
 
-    from repro.core.simfast import (
-        FastConfig, simulate_learning, simulate_learning_batch)
-
+    spec = scenarios.get_scenario("hybrid_small")
     X, y, Xt, yt = _learning_problem()
-    cfg = FastConfig(pool_size=10)
     kw = dict(rounds=rounds, fit_steps=fit_steps)
 
     # vectorized: untimed compile pass, then a warm timed run
-    jax.block_until_ready(simulate_learning_batch(
-        cfg, X, y, Xt, yt, n_reps=n_reps, seed=0, **kw)["curve"]["acc"])
+    jax.block_until_ready(scenarios.run_learning(
+        spec, X, y, Xt, yt, engine="simfast", n_reps=n_reps, seed=0,
+        **kw)["curve"]["acc"])
     t0 = time.perf_counter()
-    out = simulate_learning_batch(cfg, X, y, Xt, yt, n_reps=n_reps, seed=1,
-                                  **kw)
+    out = scenarios.run_learning(spec, X, y, Xt, yt, engine="simfast",
+                                 n_reps=n_reps, seed=1, **kw)
     jax.block_until_ready(out["curve"]["acc"])
     vec_rps = n_reps / (time.perf_counter() - t0)
     acc_v = np.asarray(out["curve"]["acc"])[:, -1]
 
     # scalar: warm the per-round jits, then time the replication loop
-    simulate_learning(cfg, X, y, Xt, yt, seed=99, **kw)
+    scenarios.run_learning(spec, X, y, Xt, yt, engine="simfast",
+                           vectorized=False, seed=99, **kw)
     t0 = time.perf_counter()
-    acc_s = [simulate_learning(cfg, X, y, Xt, yt, seed=s, **kw)[0][-1][2]
+    acc_s = [scenarios.run_learning(spec, X, y, Xt, yt, engine="simfast",
+                                    vectorized=False, seed=s,
+                                    **kw)["curve"][-1][2]
              for s in range(scalar_reps)]
     scalar_rps = scalar_reps / (time.perf_counter() - t0)
 
@@ -75,15 +82,24 @@ def vec_vs_scalar(n_reps=64, scalar_reps=4, rounds=6, fit_steps=40):
         "final_acc_gap": (gap, "lower"),
         "parity_within_1std": (float(parity), "higher"),
     }, meta={"rounds": rounds, "fit_steps": fit_steps,
-             "pool_size": cfg.pool_size})
+             "pool_size": spec.pool.pool_size})
+
+
+def _learning_spec(kind, r=0.5, pool=24):
+    return scenarios.ScenarioSpec(
+        pool=scenarios.PoolSpec(pool_size=pool),
+        policy=scenarios.PolicySpec(
+            maintenance=scenarios.MaintenanceSpec(pm_l=150.0),
+            learner=scenarios.LearnerSpec(
+                kind=kind, al_fraction=r, al_batch=max(2, int(r * pool)),
+                async_retrain=(kind != "AL"))))
 
 
 def _run(kind, Xtr, ytr, Xte, yte, seed, r=0.5, budget=240, pool=24):
-    cs = ClamShell(CSConfig(pool_size=pool, learner=kind, al_fraction=r,
-                            al_batch=max(2, int(r * pool)), straggler=True,
-                            pm_l=150.0, async_retrain=(kind != "AL"),
-                            seed=seed))
-    return cs.run_learning(Xtr, ytr, Xte, yte, label_budget=budget)
+    res = scenarios.run_learning(_learning_spec(kind, r=r, pool=pool),
+                                 Xtr, ytr, Xte, yte, engine="events",
+                                 seed=seed, label_budget=budget)
+    return res["curve"], res["result"]
 
 
 def run(seeds=(0, 1), smoke: bool = False):

@@ -1,38 +1,38 @@
 """labelstream service under sustained load: steady-state throughput and
 p50/p95/p99 time-in-system vs offered load.
 
-Five sections:
+Every workload is a named ``repro.scenarios`` registry entry and every
+execution goes through the unified facade (``scenarios.run`` /
+``scenarios.sweep``) — a bench section is "registry name + engine +
+metric list". Six sections:
 
-  1. load sweep — the full streaming service (ring-buffer window, straggler
-     mitigation, pool maintenance, adaptive redundancy) across offered
-     loads; one compilation, the load is a traced rate_scale;
+  1. load sweep — the full streaming service across offered loads via
+     ``scenarios.sweep(axis="arrivals.rate", ...)``: the whole grid is ONE
+     compilation, vmapped over sweep points on top of replications;
   2. the PR-2 acceptance headline — the largest offered load each
      architecture sustains (completion ratio >= 95% of the finalizable
-     arrivals, p95 time-in-system <= budget): the streaming service must
-     carry >= 5x the naive fixed-batch replay (same machinery with
-     ``batch_replay=True``, no straggler mitigation, fixed redundancy —
-     drain the window, then refill);
-  3. adaptive redundancy — on a skewed-difficulty workload, posterior-
-     confidence stopping must cut total votes >= 20% at matched accuracy
-     vs fixed ``votes_needed``;
-  4. learner-fused redundancy (ISSUE-3 acceptance) — the streaming hybrid
-     learner (repro.learning fused with DS posteriors, stop-soliciting on
-     model-known tasks) must reach matched accuracy with FEWER votes than
-     DS-only adaptive redundancy on the same skewed workload;
-  5. worker-aware routing (ISSUE-4 acceptance) — on a HETEROGENEOUS worker
-     pool (wide Beta accuracy spread, long sessions), FROG-style scored
-     matching (labelstream/routing.py: accurate workers to uncertain
-     tasks, fast workers to easy ones, low-value workers idle when vote
-     demand is scarce) must beat the uniform two-tier match: >= 10% fewer
-     votes at matched-or-better accuracy, p95 time-in-system no worse.
-     Runs at a FIXED horizon/reps in smoke and full so the committed
-     baseline gates the same measurement everywhere; an informational row
-     compares learner-driven most-uncertain-first backlog admission
-     against the FIFO ring under bursty congestion.
+     arrivals, p95 time-in-system <= budget): the streaming service
+     (``stream_default``) must carry >= 5x the naive fixed-batch replay
+     (``stream_batch_replay``);
+  3. adaptive redundancy — ``skewed_adaptive5`` vs ``skewed_fixed5``:
+     posterior-confidence stopping must cut total votes >= 20% at matched
+     accuracy;
+  4. learner-fused redundancy (ISSUE-3 acceptance) — ``skewed_learner_
+     fused`` vs ``skewed_adaptive5``: matched accuracy with FEWER votes;
+  5. worker-aware routing (ISSUE-4 acceptance) — ``heterogeneous_routed``
+     vs ``heterogeneous_pool`` at a FIXED horizon/reps/seed in smoke and
+     full (the committed baseline gates this exact measurement), plus the
+     informational FIFO-vs-uncertain admission rows on the bursty
+     workload;
+  6. difficulty-aware admission (informational) — on ``chance_hard``
+     (chance-level hard tasks, difficulty visible in feature space),
+     uncertainty x learnability admission vs plain uncertainty vs FIFO:
+     plain uncertainty chases noise it can never resolve, the learnability
+     head should not.
 
 Headline metrics land in ``BENCH_labelstream.json`` (simulated-time and
 per-task quantities — machine-independent) for the cross-PR regression
-gate. ``--smoke`` runs one small config per architecture in seconds.
+gate. ``--smoke`` shrinks dims via registry overrides and runs in seconds.
 """
 from __future__ import annotations
 
@@ -42,74 +42,61 @@ from benchmarks.common import emit, timed, write_bench_json
 
 P95_BUDGET_S = 2400.0
 
-
-def _cfgs(smoke: bool):
-    from repro.labelstream import ArrivalConfig, PolicyConfig, StreamConfig
-    dims = dict(n_shards=2, pool_size=8, window=32, dt=5.0, tis_bin_s=16.0,
-                arrivals=ArrivalConfig(kind="poisson", rate=0.01))
-    if smoke:
-        dims.update(pool_size=6, window=16)
-    stream = StreamConfig(
-        **dims, pm_l=240.0,
-        policy=PolicyConfig(adaptive=True, votes_cap=3, conf_threshold=0.95,
-                            min_votes=1, max_outstanding=1))
-    naive = StreamConfig(
-        **dims, batch_replay=True, straggler=False,
-        policy=PolicyConfig(adaptive=False, votes_cap=3))
-    return stream, naive
+#: registry overrides that shrink the load-sweep dims for CI smoke
+SMOKE_DIMS = {"pool.pool_size": 6, "window": 16}
 
 
-def _sweep(name, cfg, scales, horizon, reps, budget=P95_BUDGET_S):
-    """Emit one row per load; return the best sustained load within budget."""
-    import jax
+def _spec(name, smoke_dims=False, extra=None):
+    from repro import scenarios
+    ov = dict(SMOKE_DIMS) if smoke_dims else {}
+    ov.update(extra or {})
+    return scenarios.get_scenario(name, ov or None)
 
-    from repro.labelstream import run_stream, stream_summary
-    # untimed warm-up call so every emitted row times warm execution
-    # (the first jit of a (cfg, horizon) pair is compile-dominated)
-    jax.block_until_ready(run_stream(cfg, horizon, n_reps=reps, seed=17,
-                                     rate_scale=scales[0]))
+
+def _sweep(name, spec, scales, horizon, reps, budget=P95_BUDGET_S):
+    """One-compilation load sweep through the facade; emit one row per
+    load; return the best sustained load within budget."""
+    from repro import scenarios
+
+    values = [sc * spec.arrivals.rate for sc in scales]
+    # untimed warm-up so the timed pass measures warm execution — the
+    # first jit of the swept program is compile-dominated
+    scenarios.sweep(spec, axis="arrivals.rate", values=values,
+                    engine="stream", horizon=horizon, n_reps=reps, seed=17)
+    (sw, us) = timed(lambda: scenarios.sweep(
+        spec, axis="arrivals.rate", values=values, engine="stream",
+        horizon=horizon, n_reps=reps, seed=17))
     best = 0.0
-    for i, sc in enumerate(scales):
-        # block inside the timed region: run_stream returns unrealized
-        # device arrays and an un-blocked timing would only measure dispatch
-        (out, us) = timed(
-            lambda: jax.block_until_ready(
-                run_stream(cfg, horizon, n_reps=reps, seed=17 + i,
-                           rate_scale=sc)))
-        s = stream_summary(cfg, out)
+    for sc, s in zip(scales, sw["results"]):
         stable = s["completion_ratio"] >= 0.95
         ok = stable and s["p95_tis"] <= budget
-        emit(f"labelstream_{name}_load{sc:g}", us / max(horizon, 1),
+        emit(f"labelstream_{name}_load{sc:g}",
+             us / max(horizon * len(scales), 1),
              f"offered_tps={s['offered_rate']:.4f};"
              f"sustained_tps={s['sustained_rate']:.4f};"
              f"p50_s={s['p50_tis']:.0f};p95_s={s['p95_tis']:.0f};"
              f"p99_s={s['p99_tis']:.0f};acc={s['accuracy']:.3f};"
              f"votes={s['votes_per_task']:.2f};"
-             f"ok_at_p95_budget={int(ok)}")
+             f"ok_at_p95_budget={int(ok)};one_compile_sweep=1")
         if ok:
             best = max(best, s["sustained_rate"])
     return best
 
 
-def _learner_vs_ds(stream, horizon, reps, bench):
-    """Section 4: learner-fused adaptive redundancy vs DS-only adaptive."""
-    import dataclasses
+def _run(spec, horizon, reps, seed, rate_scale=1.0):
+    from repro import scenarios
+    return scenarios.run(spec, engine="stream", horizon=horizon,
+                         n_reps=reps, seed=seed,
+                         rate_scale=rate_scale)["metrics"]
 
-    from repro.labelstream import StreamLearnerConfig, run_stream, \
-        stream_summary
-    from repro.labelstream.policy import PolicyConfig
 
-    pol = PolicyConfig(adaptive=True, votes_cap=5, conf_threshold=0.98,
-                       min_votes=2, max_outstanding=2)
-    ds_only = dataclasses.replace(stream, p_hard=0.25, hard_scale=0.3,
-                                  policy=pol)
-    fused = dataclasses.replace(
-        ds_only, learner=StreamLearnerConfig(enabled=True,
-                                             min_votes_known=1))
+def _learner_vs_ds(smoke, horizon, reps, bench):
+    """Section 4: learner-fused adaptive redundancy vs DS-only adaptive
+    (``skewed_learner_fused`` vs ``skewed_adaptive5``)."""
     rows = {}
-    for name, cfg in (("ds_adaptive", ds_only), ("learner_fused", fused)):
-        out = run_stream(cfg, horizon, n_reps=reps, seed=5, rate_scale=1.0)
-        s = stream_summary(cfg, out)
+    for name, scen in (("ds_adaptive", "skewed_adaptive5"),
+                       ("learner_fused", "skewed_learner_fused")):
+        s = _run(_spec(scen, smoke_dims=smoke), horizon, reps, seed=5)
         rows[name] = s
         emit(f"labelstream_{name}_skewed", 0.0,
              f"sustained_tps={s['sustained_rate']:.4f};"
@@ -139,20 +126,12 @@ def _learner_vs_ds(stream, horizon, reps, bench):
 
 def _routing_vs_uniform(bench):
     """Section 5: worker-aware scored matching vs uniform two-tier match
-    on a heterogeneous pool (+ informational backlog-admission row)."""
-    import dataclasses
-
-    from repro.labelstream import ArrivalConfig, RoutingConfig, \
-        StreamLearnerConfig, heterogeneous_stream_config, run_stream, \
-        stream_summary
-
-    het = heterogeneous_stream_config()
-    aware = dataclasses.replace(het, routing=RoutingConfig(enabled=True))
+    on a heterogeneous pool (+ informational backlog-admission rows)."""
     horizon, reps = 1200, 4   # fixed in smoke AND full: the baseline gates
     rows = {}                 # this exact measurement
-    for name, cfg in (("uniform", het), ("aware", aware)):
-        out = run_stream(cfg, horizon, n_reps=reps, seed=0, rate_scale=1.0)
-        s = stream_summary(cfg, out)
+    for name, scen in (("uniform", "heterogeneous_pool"),
+                       ("aware", "heterogeneous_routed")):
+        s = _run(_spec(scen), horizon, reps, seed=0)
         rows[name] = s
         emit(f"labelstream_route_{name}_het", 0.0,
              f"sustained_tps={s['sustained_rate']:.4f};"
@@ -184,18 +163,9 @@ def _routing_vs_uniform(bench):
     # queue for the discipline to matter). Not regression-gated: the win
     # is workload-dependent (uncertainty admission chases noise when hard
     # tasks are chance-level; here tasks are learnable)
-    burst = dataclasses.replace(
-        het, window=8,
-        arrivals=ArrivalConfig(kind="mmpp", rate=0.01, rate_hi=0.12,
-                               dwell_mean_s=900.0),
-        learner=StreamLearnerConfig(enabled=True, min_votes_known=0,
-                                    class_sep=1.2),
-        routing=RoutingConfig(enabled=True))
-    uncadm = dataclasses.replace(
-        burst, routing=RoutingConfig(enabled=True, admission="uncertain"))
-    for name, cfg in (("fifo", burst), ("uncertain", uncadm)):
-        s = stream_summary(cfg, run_stream(cfg, horizon, n_reps=2, seed=1,
-                                           rate_scale=1.0))
+    for name, scen in (("fifo", "bursty_admission"),
+                       ("uncertain", "bursty_admission_uncertain")):
+        s = _run(_spec(scen), horizon, 2, seed=1)
         rows[name] = s
         emit(f"labelstream_admit_{name}_burst", 0.0,
              f"sustained_tps={s['sustained_rate']:.4f};"
@@ -206,24 +176,67 @@ def _routing_vs_uniform(bench):
     bench["admission_fifo_accuracy"] = rows["fifo"]["accuracy"]
 
 
-def run(smoke: bool = False):
-    from repro.labelstream import run_stream, stream_summary
-    from repro.labelstream.policy import PolicyConfig
-    import dataclasses
+def _admission_difficulty(bench, smoke=False):
+    """Section 6 (informational): difficulty-aware uncertainty x
+    learnability admission on the chance-level-hard-tasks workload — the
+    PR-4 follow-up. Hard tasks are pure noise to the crowd
+    (hard_scale=0) but visibly hard in feature space (hard_sep_scale).
+    Measured under SUSTAINED OVERLOAD (rate_scale=2.5): only then does
+    admission decide WHICH tasks ever finalize — at lighter load every
+    arrival eventually completes and the finalized mix is order-
+    invariant. The expected shape: FIFO has the best accuracy mix but
+    the lowest sustained rate; plain uncertainty admission buys far more
+    throughput (measured ~+75%) by front-running the window but chases
+    noise (measured ~-15pp accuracy); the learnability-weighted score
+    recovers several points of that accuracy at matched-or-better
+    throughput and fewer votes/task. Informational (never gated), so
+    smoke runs a shrunk horizon/reps — the full-size measurement is the
+    full bench's job."""
+    horizon, reps, load = (500, 2, 2.5) if smoke else (1200, 4, 2.5)
+    rows = {}
+    for name, kind in (("fifo", "fifo"), ("uncertain", "uncertain"),
+                       ("learnable", "uncertain_learnable")):
+        s = _run(_spec("chance_hard",
+                       extra={"policy.admission.kind": kind}),
+                 horizon, reps, seed=2, rate_scale=load)
+        rows[name] = s
+        emit(f"labelstream_admit_{name}_chancehard", 0.0,
+             f"sustained_tps={s['sustained_rate']:.4f};"
+             f"p95_s={s['p95_tis']:.0f};acc={s['accuracy']:.3f};"
+             f"votes_per_task={s['votes_per_task']:.2f};"
+             f"backlog_end={s['backlog_end']:.0f}")
+    emit("labelstream_admit_difficulty_aware", 0.0,
+         f"acc_fifo={rows['fifo']['accuracy']:.3f};"
+         f"acc_uncertain={rows['uncertain']['accuracy']:.3f};"
+         f"acc_learnable={rows['learnable']['accuracy']:.3f};"
+         f"tps_fifo={rows['fifo']['sustained_rate']:.4f};"
+         f"tps_uncertain={rows['uncertain']['sustained_rate']:.4f};"
+         f"tps_learnable={rows['learnable']['sustained_rate']:.4f};"
+         f"overload_x={load};"
+         "target=learnable_recovers_uncertain_acc_at_matched_tps")
+    bench["admission_chancehard_fifo_accuracy"] = rows["fifo"]["accuracy"]
+    bench["admission_chancehard_uncertain_accuracy"] = \
+        rows["uncertain"]["accuracy"]
+    bench["admission_chancehard_learnable_accuracy"] = \
+        rows["learnable"]["accuracy"]
+    bench["admission_chancehard_learnable_tps"] = \
+        rows["learnable"]["sustained_rate"]
 
+
+def run(smoke: bool = False):
     horizon = 700 if smoke else 2500
     reps = 2 if smoke else 4
-    stream, naive = _cfgs(smoke)
+    stream = _spec("stream_default", smoke_dims=smoke)
+    naive = _spec("stream_batch_replay", smoke_dims=smoke)
     bench = {}
 
     # -- 1 + 2: load sweeps, then the equal-p95 capacity ratio ------------
     if smoke:
-        # one compilation only: the streaming service at two loads (the
-        # rate_scale is traced, so the second point is a warm re-run)
         best = _sweep("stream", stream, (2.0, 3.0), horizon, reps)
         bench["stream_sustained_tps"] = best
-        _learner_vs_ds(stream, horizon, reps, bench)
+        _learner_vs_ds(smoke, horizon, reps, bench)
         _routing_vs_uniform(bench)
+        _admission_difficulty(bench, smoke=True)
         write_bench_json("labelstream", bench,
                          meta={"horizon": horizon, "reps": reps,
                                "smoke": True})
@@ -244,17 +257,10 @@ def run(smoke: bool = False):
          f"target_x=5")
 
     # -- 3: adaptive redundancy on a skewed-difficulty workload -----------
-    fixed5 = dataclasses.replace(
-        stream, p_hard=0.25, hard_scale=0.3,
-        policy=PolicyConfig(adaptive=False, votes_cap=5))
-    adapt5 = dataclasses.replace(
-        stream, p_hard=0.25, hard_scale=0.3,
-        policy=PolicyConfig(adaptive=True, votes_cap=5, conf_threshold=0.98,
-                            min_votes=2, max_outstanding=2))
     rows = {}
-    for name, cfg in (("fixed5", fixed5), ("adaptive5", adapt5)):
-        out = run_stream(cfg, horizon, n_reps=reps, seed=5, rate_scale=1.0)
-        s = stream_summary(cfg, out)
+    for name, scen in (("fixed5", "skewed_fixed5"),
+                       ("adaptive5", "skewed_adaptive5")):
+        s = _run(_spec(scen), horizon, reps, seed=5)
         rows[name] = s
         emit(f"labelstream_{name}_skewed", 0.0,
              f"sustained_tps={s['sustained_rate']:.4f};"
@@ -269,10 +275,13 @@ def run(smoke: bool = False):
     bench["adaptive_votes_saved_pct"] = (100 * saved, "higher")
 
     # -- 4: learner-fused redundancy vs DS-only adaptive ------------------
-    _learner_vs_ds(stream, horizon, reps, bench)
+    _learner_vs_ds(smoke, horizon, reps, bench)
 
     # -- 5: worker-aware routing vs uniform two-tier match ----------------
     _routing_vs_uniform(bench)
+
+    # -- 6: difficulty-aware admission on chance-level hard tasks ---------
+    _admission_difficulty(bench)
     write_bench_json("labelstream", bench,
                      meta={"horizon": horizon, "reps": reps, "smoke": False})
 

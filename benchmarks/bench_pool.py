@@ -1,12 +1,17 @@
 """Paper Fig 3/4 (task complexity), Fig 6 (MPL over time + §4.2 model), and
-Fig 7/8 (latency-threshold sweep) for pool maintenance."""
+Fig 7/8 (latency-threshold sweep) for pool maintenance — declared as
+``repro.scenarios`` specs and run through the events engine facade."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timed
-from repro.core.clamshell import ClamShell, CSConfig
+from benchmarks.common import emit, label_spec
+from repro import scenarios
 from repro.core.workers import Population
+
+
+def _label(spec, seed):
+    return scenarios.run(spec, engine="events", seed=seed)["raw"][0]
 
 
 def run(seeds=(5, 6)):
@@ -14,12 +19,12 @@ def run(seeds=(5, 6)):
     for ng, tag in ((1, "simple"), (5, "medium"), (10, "complex")):
         res = {}
         for pm in (float("inf"), 150.0):
+            spec = label_spec(pool_size=20, n_records=ng, pm_l=pm,
+                              straggler=False, session_mean_s=7200.0,
+                              n_tasks=500 // ng)
             tot, cost = [], []
             for seed in seeds:
-                cs = ClamShell(CSConfig(pool_size=20, n_records=ng, pm_l=pm,
-                                        straggler=False, seed=seed,
-                                        session_mean_s=7200.0))
-                r = cs.run_labeling(500 // ng)
+                r = _label(spec, seed)
                 tot.append(r.total_time)
                 cost.append(r.cost)
             res[pm] = (np.mean(tot), np.mean(cost))
@@ -32,12 +37,9 @@ def run(seeds=(5, 6)):
     # Fig 6 + model: MPL trajectory vs the (1-q^{n+1}) mu_f + q^{n+1} mu_s law
     pop = Population(seed=1)
     q, mu_f, mu_s = pop.split_stats(150.0)
-    mpls = []
-    for seed in seeds:
-        cs = ClamShell(CSConfig(pool_size=20, pm_l=150.0, straggler=False,
-                                seed=seed, session_mean_s=7200.0))
-        r = cs.run_labeling(400)
-        mpls.append(r.mpl_per_batch)
+    spec = label_spec(pool_size=20, pm_l=150.0, straggler=False,
+                      session_mean_s=7200.0, n_tasks=400)
+    mpls = [_label(spec, seed).mpl_per_batch for seed in seeds]
     n = min(len(m) for m in mpls)
     avg = np.mean([m[:n] for m in mpls], axis=0)
     pred = pop.predicted_mpl(150.0, n)
@@ -47,11 +49,11 @@ def run(seeds=(5, 6)):
 
     # Fig 7/8: threshold sweep
     for pm in (50.0, 100.0, 150.0, 300.0, 600.0):
+        spec = label_spec(pool_size=20, pm_l=pm, straggler=False,
+                          session_mean_s=7200.0, n_tasks=300)
         reps, p50, p95 = [], [], []
         for seed in seeds:
-            cs = ClamShell(CSConfig(pool_size=20, pm_l=pm, straggler=False,
-                                    seed=seed, session_mean_s=7200.0))
-            r = cs.run_labeling(300)
+            r = _label(spec, seed)
             reps.append(r.n_replaced)
             p50.append(np.percentile(r.task_latencies, 50))
             p95.append(np.percentile(r.task_latencies, 95))

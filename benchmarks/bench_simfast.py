@@ -6,6 +6,11 @@ regime where the event loop's per-event queue scans go quadratic), the
 vmapped+pmapped simfast engine must deliver >= 20x the event loop's
 replications/sec at >= 256 parallel replications on CPU.
 
+Workloads come from the ``repro.scenarios`` registry (one name per case)
+and both engines run through the unified facade — ``run(spec,
+engine="events"|"simfast")`` — which compiles each spec to the exact
+config this bench used to hand-construct, so the measurement is unchanged.
+
 Run standalone (`PYTHONPATH=src python -m benchmarks.bench_simfast`) this
 module forces one XLA host device per core *before* jax initializes, so the
 replication batch is sharded across cores; under `benchmarks.run` the flag
@@ -33,54 +38,46 @@ def _force_host_devices():
 _force_host_devices()
 
 import jax  # noqa: E402
-import numpy as np  # noqa: E402
 
 from benchmarks.common import emit, write_bench_json  # noqa: E402
 
 
-def _event_loop_rps(cs_kwargs, n_tasks, n_reps):
-    from repro.core.clamshell import ClamShell, CSConfig
+def _event_loop_rps(spec, n_reps):
+    from repro import scenarios
     t0 = time.perf_counter()
-    for seed in range(n_reps):
-        ClamShell(CSConfig(seed=seed, **cs_kwargs)).run_labeling(
-            n_tasks, max_time=1e9)
+    scenarios.run(spec, engine="events", n_reps=n_reps, seed=0, max_time=1e9)
     return n_reps / (time.perf_counter() - t0)
 
 
-def _simfast_rps(cfg, n_reps):
-    from repro.core.simfast import simulate
-    jax.block_until_ready(simulate(cfg, n_reps, seed=0))      # compile
+def _simfast_rps(spec, n_reps):
+    from repro import scenarios
+    jax.block_until_ready(                                     # compile
+        scenarios.run(spec, engine="simfast", n_reps=n_reps, seed=0)["raw"])
     t0 = time.perf_counter()
-    out = simulate(cfg, n_reps, seed=1)
-    jax.block_until_ready(out)
-    return n_reps / (time.perf_counter() - t0), out
+    res = scenarios.run(spec, engine="simfast", n_reps=n_reps, seed=1)
+    jax.block_until_ready(res["raw"])
+    return n_reps / (time.perf_counter() - t0), res
 
 
 def run(smoke: bool = False):
-    from repro.core.simfast import FastConfig
-    from repro.core.simfast_stats import summarize
+    from repro import scenarios
+    from repro.core.simfast_stats import SimSummary
 
     n_reps = 64 if smoke else 256
     cases = [
-        # (name, event-loop CSConfig kwargs, FastConfig, el_reps)
-        ("smallR1",
-         dict(pool_size=10),
-         FastConfig(pool_size=10, n_tasks=40),
-         40, 8 if smoke else 24),
-        ("throughput_v3_pm",
-         dict(pool_size=15, votes_needed=3, pm_l=150.0, batch_ratio=15 / 400),
-         FastConfig(pool_size=15, n_tasks=400, batch_size=400,
-                    votes_needed=3, pm_l=150.0, max_batch_time=2e5),
-         400, 2 if smoke else 6),
+        # (registry scenario, event-loop replications)
+        ("smallR1", 8 if smoke else 24),
+        ("throughput_v3_pm", 2 if smoke else 6),
     ]
     if smoke:
         cases = cases[:1]
 
     bench = {}
-    for name, cs_kw, cfg, n_tasks, el_reps in cases:
-        el = _event_loop_rps(cs_kw, n_tasks, el_reps)
-        sf, out = _simfast_rps(cfg, n_reps)
-        s = summarize(out)
+    for name, el_reps in cases:
+        spec = scenarios.get_scenario(name)
+        el = _event_loop_rps(spec, el_reps)
+        sf, res = _simfast_rps(spec, n_reps)
+        s = SimSummary(**res["metrics"])
         emit(f"simfast_{name}", 1e6 / sf,
              f"simfast_rps={sf:.1f};eventloop_rps={el:.2f};"
              f"speedup_x={sf / el:.1f};reps={n_reps};"

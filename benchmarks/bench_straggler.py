@@ -1,25 +1,30 @@
 """Paper Fig 9/10/11 (+ §4.1 QC decoupling): straggler mitigation vs R.
 
 Reports per-batch latency, std, and cost for SM on/off across the pool/batch
-ratio R, plus the QC-decoupling win at votes=3.
+ratio R, plus the QC-decoupling win at votes=3. Workloads are
+``repro.scenarios`` specs run through the events engine facade; the QC
+section drives ClamShell directly (it mutates the LifeGuard's ``max_dup``,
+a knob below the spec layer) via the spec -> CSConfig compiler.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timed
-from repro.core.clamshell import ClamShell, CSConfig
+from benchmarks.common import emit, label_spec, timed
+from repro import scenarios
+from repro.core.clamshell import ClamShell
 
 
 def run(n_tasks=150, seeds=(3, 4)):
     for R in (0.5, 0.75, 1.0, 2.0, 3.0):
         for sm in (False, True):
+            spec = label_spec(pool_size=15, batch_ratio=R, straggler=sm,
+                              n_tasks=n_tasks)
             lat, std, cost = [], [], []
             us = 0.0
             for seed in seeds:
-                cs = ClamShell(CSConfig(pool_size=15, batch_ratio=R,
-                                        straggler=sm, seed=seed))
-                r, t = timed(cs.run_labeling, n_tasks)
+                r, t = timed(lambda: scenarios.run(spec, engine="events",
+                                                   seed=seed)["raw"][0])
                 us += t / n_tasks
                 lat.append(np.mean(r.batch_latencies))
                 std.append(np.std(r.batch_latencies))
@@ -30,10 +35,14 @@ def run(n_tasks=150, seeds=(3, 4)):
                  f"cost=${np.mean(cost):.2f}")
 
     # headline ratios at R=1 (paper: latency 2.5-5x, std 5-10x)
-    a = [ClamShell(CSConfig(pool_size=15, batch_ratio=1.0, straggler=False,
-                            seed=s)).run_labeling(n_tasks) for s in seeds]
-    b = [ClamShell(CSConfig(pool_size=15, batch_ratio=1.0, straggler=True,
-                            seed=s)).run_labeling(n_tasks) for s in seeds]
+    no_sm = label_spec(pool_size=15, batch_ratio=1.0, straggler=False,
+                       n_tasks=n_tasks)
+    with_sm = label_spec(pool_size=15, batch_ratio=1.0, straggler=True,
+                         n_tasks=n_tasks)
+    a = [scenarios.run(no_sm, engine="events", seed=s)["raw"][0]
+         for s in seeds]
+    b = [scenarios.run(with_sm, engine="events", seed=s)["raw"][0]
+         for s in seeds]
     lat_ratio = np.mean([x.total_time for x in a]) / np.mean(
         [x.total_time for x in b])
     std_ratio = np.mean([np.std(x.batch_latencies) for x in a]) / max(
@@ -42,11 +51,11 @@ def run(n_tasks=150, seeds=(3, 4)):
          f"latency_x={lat_ratio:.2f};std_x={std_ratio:.2f};paper=2.5-5x/5-10x")
 
     # QC decoupling (§4.1): naive duplication vs decoupled assignment
+    qc = label_spec(pool_size=15, straggler=True, votes=3, n_tasks=60)
     for max_dup, tag in ((6, "naive"), (1, "decoupled")):
         ts = []
         for seed in seeds:
-            cs = ClamShell(CSConfig(pool_size=15, straggler=True,
-                                    votes_needed=3, seed=seed))
+            cs = ClamShell(scenarios.to_cs_config(qc, seed=seed))
             cs.lifeguard.max_dup = max_dup
             r = cs.run_labeling(60)
             ts.append(r.total_time)

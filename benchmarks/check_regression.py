@@ -25,6 +25,7 @@ from __future__ import annotations
 import argparse
 import glob
 import json
+import math
 import os
 import sys
 
@@ -35,7 +36,15 @@ def _load(path: str) -> dict:
 
 
 def compare(baseline: dict, artifact: dict, tol: float):
-    """Yield (metric, base, new, regress_frac, gated, ok) rows."""
+    """Yield (metric, base, new, regress_frac, gated, ok) rows.
+
+    Every baseline key MUST appear in the fresh artifact — a missing key
+    (``new is None``) is a hard failure regardless of direction, because a
+    benchmark that silently stops emitting a gated metric looks exactly
+    like a benchmark that regressed off the chart. Non-finite artifact
+    values fail for the same reason: NaN compares false against any
+    tolerance and must not masquerade as "within tolerance".
+    """
     base_m = baseline.get("metrics", {})
     new_m = artifact.get("metrics", {})
     for key in sorted(base_m):
@@ -45,6 +54,12 @@ def compare(baseline: dict, artifact: dict, tol: float):
         base = float(base_m[key]["value"])
         new = float(new_m[key]["value"])
         direction = base_m[key].get("direction", "info")
+        # non-finite check comes BEFORE the zero-baseline bypass: a gated
+        # metric that produced NaN/inf must fail even when its baseline
+        # value is 0 (only info-direction metrics are exempt)
+        if direction != "info" and not math.isfinite(new):
+            yield key, base, new, None, True, False
+            continue
         if direction == "info" or base == 0:
             yield key, base, new, None, False, True
             continue
@@ -87,8 +102,20 @@ def main(argv=None) -> int:
                       f"{'-' if n is None else f'{n:g}'}")
                 continue
             if n is None:
-                failures.append(f"{fname}:{key} missing from artifact")
-                print(f"[FAIL] {fname}:{key} missing from artifact")
+                msg = (f"{fname}:{key} missing from the freshly produced "
+                       "artifact — the benchmark stopped emitting a "
+                       "baselined metric (restore the emission, or "
+                       "recalibrate benchmarks/baselines/ if the bench "
+                       "config intentionally changed)")
+                failures.append(msg)
+                print(f"[FAIL] {msg}")
+                continue
+            if reg is None:
+                # gated but incomparable: non-finite artifact value
+                msg = (f"{fname}:{key} produced non-finite value {n!r} "
+                       f"(baseline {b:g}) — cannot gate")
+                failures.append(msg)
+                print(f"[FAIL] {msg}")
                 continue
             print(f"[{tag:>4}] {fname}:{key} baseline={b:g} new={n:g} "
                   f"regress={100 * reg:+.1f}% (tol {100 * args.tol:.0f}%)")

@@ -21,6 +21,31 @@ ROWS = []
 BENCH_DIR = os.environ.get("BENCH_DIR", "artifacts")
 
 
+def label_spec(*, n_tasks=60, pool_size=15, batch_ratio=1.0, n_records=1,
+               votes=1, straggler=True, pm_l=float("inf"), use_termest=True,
+               session_mean_s=1800.0, retainer=True, learner="HL",
+               al_fraction=0.5, al_batch=10, async_retrain=True):
+    """Flat-kwarg convenience for the figure benches: build a declarative
+    ``repro.scenarios.ScenarioSpec`` for a closed-world labeling workload
+    (the knobs the paper's event-loop figures sweep), to be executed via
+    ``scenarios.run(spec, engine="events"|"simfast")``."""
+    from repro import scenarios
+    return scenarios.ScenarioSpec(
+        n_tasks=n_tasks, batch_ratio=batch_ratio, n_records=n_records,
+        pool=scenarios.PoolSpec(pool_size=pool_size,
+                                session_mean_s=session_mean_s,
+                                retainer=retainer),
+        policy=scenarios.PolicySpec(
+            straggler=scenarios.StragglerSpec(enabled=straggler),
+            maintenance=scenarios.MaintenanceSpec(pm_l=pm_l,
+                                                  use_termest=use_termest),
+            redundancy=scenarios.RedundancySpec(votes=votes),
+            learner=scenarios.LearnerSpec(kind=learner,
+                                          al_fraction=al_fraction,
+                                          al_batch=al_batch,
+                                          async_retrain=async_retrain)))
+
+
 def emit(name: str, us_per_call: float, derived: str):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)

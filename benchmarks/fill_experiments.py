@@ -45,12 +45,12 @@ def perf_table():
 
 def sweep(n_reps: int = 256, out_path: str = "artifacts/simfast_sweep.md"):
     """Paper §6 grids (batch ratio x straggler, PM_l, votes) on the
-    vectorized engine: hundreds of replications per point in one vmap."""
+    vectorized engine through the ``repro.scenarios`` facade: hundreds of
+    replications per point in one vmap."""
     import os
     import time
 
-    from repro.core.simfast import FastConfig, simulate
-    from repro.core.simfast_stats import summarize
+    from repro import scenarios
 
     rows = ["| config | mean_s | p50_s | p95_s | total_s | acc | cost | "
             "reps/s |", "|---|---|---|---|---|---|---|---|"]
@@ -58,23 +58,38 @@ def sweep(n_reps: int = 256, out_path: str = "artifacts/simfast_sweep.md"):
     for R in (0.5, 1.0, 2.0):
         for sm in (False, True):
             grid.append((f"R={R} {'SM' if sm else 'NoSM'}",
-                         FastConfig(pool_size=12, n_tasks=96, batch_ratio=R,
-                                    straggler=sm)))
+                         scenarios.ScenarioSpec(
+                             n_tasks=96, batch_ratio=R,
+                             pool=scenarios.PoolSpec(pool_size=12),
+                             policy=scenarios.PolicySpec(
+                                 straggler=scenarios.StragglerSpec(
+                                     enabled=sm)))))
     for pm in (float("inf"), 150.0):
         grid.append((f"PM_l={pm}",
-                     FastConfig(pool_size=15, n_tasks=120, straggler=False,
-                                pm_l=pm)))
+                     scenarios.ScenarioSpec(
+                         n_tasks=120,
+                         pool=scenarios.PoolSpec(pool_size=15),
+                         policy=scenarios.PolicySpec(
+                             straggler=scenarios.StragglerSpec(enabled=False),
+                             maintenance=scenarios.MaintenanceSpec(
+                                 pm_l=pm)))))
     for v in (1, 3):
         grid.append((f"votes={v}",
-                     FastConfig(pool_size=12, n_tasks=96, votes_needed=v)))
+                     scenarios.ScenarioSpec(
+                         n_tasks=96,
+                         pool=scenarios.PoolSpec(pool_size=12),
+                         policy=scenarios.PolicySpec(
+                             redundancy=scenarios.RedundancySpec(votes=v)))))
 
-    for name, cfg in grid:
+    for name, spec in grid:
         t0 = time.perf_counter()
-        s = summarize(simulate(cfg, n_reps, seed=0))
+        s = scenarios.run(spec, engine="simfast", n_reps=n_reps,
+                          seed=0)["metrics"]
         rps = n_reps / (time.perf_counter() - t0)
-        rows.append(f"| {name} | {s.mean_latency:.1f} | {s.p50_latency:.1f} "
-                    f"| {s.p95_latency:.1f} | {s.mean_total_time:.1f} | "
-                    f"{s.accuracy:.3f} | {s.cost:.2f} | {rps:.0f} |")
+        rows.append(f"| {name} | {s['mean_latency']:.1f} "
+                    f"| {s['p50_latency']:.1f} "
+                    f"| {s['p95_latency']:.1f} | {s['mean_total_time']:.1f} | "
+                    f"{s['accuracy']:.3f} | {s['cost']:.2f} | {rps:.0f} |")
         print(rows[-1], flush=True)
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:

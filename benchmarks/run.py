@@ -27,10 +27,11 @@ def main() -> None:
         bench_straggler.run(n_tasks=20, seeds=(3,))
         print("# --- smoke: pallas kernels (interpret) ---", flush=True)
         bench_kernels.run(validate_only=True)
-        print("# --- smoke: hybrid learning (vec vs scalar) ---", flush=True)
+        print("# --- smoke: hybrid learning (vec vs scalar, "
+              "repro.scenarios facade) ---", flush=True)
         bench_hybrid.run(smoke=True)
-        print("# --- smoke: labelstream service (incl. worker-aware "
-              "routing, section 5) ---", flush=True)
+        print("# --- smoke: labelstream service (repro.scenarios registry; "
+              "worker-aware routing + admission sections) ---", flush=True)
         bench_labelstream.run(smoke=True)
         print(f"# total {time.time()-t0:.1f}s", flush=True)
         return

@@ -4,24 +4,30 @@ The crowd (simulated workers with medical-deployment-calibrated latencies)
 labels a CIFAR-dimension dataset; CLAMShell splits each round between
 uncertainty-sampled points (scored with the fused entropy kernel) and random
 points, retrains asynchronously, and reports the accuracy-vs-time curve
-against pure active and pure passive learning.
+against pure active and pure passive learning. The learner policy is
+declared on a ``repro.scenarios`` spec and driven through
+``scenarios.run_learning``.
 
     PYTHONPATH=src python examples/active_lm_labeling.py
 """
-import numpy as np
-
-from repro.core.clamshell import ClamShell, CSConfig, acc_at_time
+from repro import scenarios
+from repro.core.clamshell import acc_at_time
 from repro.data.datasets import cifar_like, train_test_split
 
 
 def run(kind):
     X, y = cifar_like(2500, seed=4)
     Xtr, ytr, Xte, yte = train_test_split(X, y)
-    cs = ClamShell(CSConfig(pool_size=24, learner=kind, al_batch=6,
-                            straggler=True, pm_l=150.0,
-                            async_retrain=(kind != "AL"), seed=0))
-    curve, res = cs.run_learning(Xtr, ytr, Xte, yte, label_budget=300)
-    return curve, res
+    spec = scenarios.ScenarioSpec(
+        pool=scenarios.PoolSpec(pool_size=24),
+        policy=scenarios.PolicySpec(
+            maintenance=scenarios.MaintenanceSpec(pm_l=150.0),
+            learner=scenarios.LearnerSpec(
+                kind=kind, al_batch=6,
+                async_retrain=(kind != "AL"))))
+    res = scenarios.run_learning(spec, Xtr, ytr, Xte, yte, engine="events",
+                                 seed=0, label_budget=300)
+    return res["curve"], res["result"]
 
 
 def main():

@@ -3,37 +3,40 @@
 Runs the full pipeline — diurnal arrivals -> sharded ring-buffer router ->
 online Dawid-Skene posteriors -> adaptive redundancy — over a simulated
 day, prints the hourly traffic/latency profile, shows worker-aware
-FROG-style routing against the uniform two-tier match on a heterogeneous
-pool, then re-aggregates a synthetic vote replay offline with the batched
-full-confusion EM to show the two aggregation paths agree.
+FROG-style routing against the uniform two-tier match on the registry's
+heterogeneous-pool workload, compares backlog-admission disciplines on the
+chance-level-hard workload, then re-aggregates a synthetic vote replay
+offline with the batched full-confusion EM to show the two aggregation
+paths agree. Every streaming run goes through the declarative
+``repro.scenarios`` layer.
 
     PYTHONPATH=src python examples/labelstream_demo.py
 """
-import dataclasses
-
 import numpy as np
 
-from repro.labelstream import (
-    ArrivalConfig, PolicyConfig, RoutingConfig, StreamConfig,
-    heterogeneous_stream_config, run_stream, stream_summary,
-)
+from repro import scenarios
 from repro.labelstream.aggregate import aggregate_votes
 
 
 def main():
-    cfg = StreamConfig(
-        n_shards=2, pool_size=8, window=32, dt=10.0, tis_bin_s=8.0,
-        pm_l=240.0,
-        arrivals=ArrivalConfig(kind="diurnal", rate=0.02, amplitude=0.8,
-                               period_s=86400.0),
-        policy=PolicyConfig(adaptive=True, votes_cap=5, conf_threshold=0.95,
-                            min_votes=1, max_outstanding=1),
-        p_hard=0.15, hard_scale=0.35,
+    diurnal = scenarios.ScenarioSpec(
+        window=32,
+        pool=scenarios.PoolSpec(pool_size=8, n_shards=2),
+        arrivals=scenarios.ArrivalSpec(kind="diurnal", rate=0.02,
+                                       amplitude=0.8, period_s=86400.0),
+        difficulty=scenarios.DifficultySpec(p_hard=0.15, hard_scale=0.35),
+        policy=scenarios.PolicySpec(
+            maintenance=scenarios.MaintenanceSpec(pm_l=240.0),
+            redundancy=scenarios.RedundancySpec(
+                adaptive=True, votes=5, conf_threshold=0.95, min_votes=1,
+                max_outstanding=1)),
+        engine=scenarios.EngineKnobs(dt=10.0, tis_bin_s=8.0),
     )
     horizon = 8640                     # 24 h of 10 s ticks
     print("== streaming a diurnal day (2 shards x 8 workers, window 32) ==")
-    out = run_stream(cfg, horizon, n_reps=1, seed=0, warmup_frac=0.05)
-    s = stream_summary(cfg, out)
+    res = scenarios.run(diurnal, engine="stream", horizon=horizon,
+                        n_reps=1, seed=0, warmup_frac=0.05)
+    s, out = res["metrics"], res["raw"]
     arr = np.asarray(out["series"]["arrivals"])[0]
     fin = np.asarray(out["series"]["finalized"])[0]
     bkl = np.asarray(out["series"]["backlog"])[0]
@@ -50,16 +53,27 @@ def main():
           f"{s['p95_tis']:.0f}/{s['p99_tis']:.0f} s")
     print(f"label accuracy {s['accuracy']:.3f} at "
           f"{s['votes_per_task']:.2f} votes/task "
-          f"(cap {cfg.policy.votes_cap}); cost ${s['cost']:.2f}")
+          f"(cap {diurnal.policy.redundancy.votes}); cost ${s['cost']:.2f}")
 
     print("\n== worker-aware routing vs uniform match (heterogeneous pool) ==")
-    het = heterogeneous_stream_config()
-    aware = dataclasses.replace(het, routing=RoutingConfig(enabled=True))
-    for name, c in (("uniform two-tier", het), ("FROG-style scored", aware)):
-        r = stream_summary(c, run_stream(c, 1200, n_reps=2, seed=0))
+    for name, scen in (("uniform two-tier", "heterogeneous_pool"),
+                       ("FROG-style scored", "heterogeneous_routed")):
+        r = scenarios.run(scenarios.get_scenario(scen), horizon=1200,
+                          n_reps=2, seed=0)["metrics"]
         print(f"{name:18s}: acc {r['accuracy']:.3f} at "
               f"{r['votes_per_task']:.2f} votes/task, "
               f"p50/p95 = {r['p50_tis']:.0f}/{r['p95_tis']:.0f} s")
+
+    print("\n== admission disciplines on chance-level hard tasks ==")
+    for name, kind in (("FIFO ring", "fifo"),
+                       ("uncertainty", "uncertain"),
+                       ("unc. x learnability", "uncertain_learnable")):
+        spec = scenarios.get_scenario(
+            "chance_hard", {"policy.admission.kind": kind})
+        r = scenarios.run(spec, horizon=1200, n_reps=2, seed=2)["metrics"]
+        print(f"{name:20s}: acc {r['accuracy']:.3f} at "
+              f"{r['votes_per_task']:.2f} votes/task, "
+              f"backlog(end) {r['backlog_end']:.0f}")
 
     print("\n== offline re-aggregation (batched full-confusion DS EM) ==")
     rng = np.random.default_rng(0)

@@ -1,29 +1,41 @@
 """Quickstart: label a task stream with CLAMShell and watch the paper's two
 per-batch techniques work.
 
+Workloads are declared once as ``repro.scenarios`` specs and run through
+the unified facade — the same spec could be pointed at the vectorized
+engine with ``engine="simfast"``.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.clamshell import ClamShell, CSConfig
+from repro import scenarios
 
 
 def main():
     rng = np.random.default_rng(0)
     truth = rng.integers(0, 3, 300)          # 3-way sentiment, say
 
+    base = scenarios.ScenarioSpec(
+        n_tasks=300, n_classes=3,
+        pool=scenarios.PoolSpec(pool_size=15),
+        policy=scenarios.PolicySpec(
+            straggler=scenarios.StragglerSpec(enabled=False)))
+    clam = scenarios.override(base, {
+        "policy.straggler.enabled": True,
+        "policy.maintenance.pm_l": 150.0,
+    })
+
     print("== baseline crowd (no straggler mitigation, no maintenance) ==")
-    base = ClamShell(CSConfig(pool_size=15, straggler=False,
-                              pm_l=float("inf"), seed=1))
-    rb = base.run_labeling(300, true_labels=truth, n_classes=3)
+    rb = scenarios.run(base, engine="events", seed=1,
+                       true_labels=truth)["raw"][0]
     print(f"  {rb.n_labels} labels in {rb.total_time:,.0f}s sim-time "
           f"({rb.throughput:.3f} labels/s), batch std {np.std(rb.batch_latencies):.0f}s, "
           f"cost ${rb.cost:.2f}, label accuracy {rb.accuracy:.2%}")
 
     print("== CLAMShell (straggler mitigation + pool maintenance) ==")
-    clam = ClamShell(CSConfig(pool_size=15, straggler=True, pm_l=150.0,
-                              seed=1))
-    rc = clam.run_labeling(300, true_labels=truth, n_classes=3)
+    rc = scenarios.run(clam, engine="events", seed=1,
+                       true_labels=truth)["raw"][0]
     print(f"  {rc.n_labels} labels in {rc.total_time:,.0f}s sim-time "
           f"({rc.throughput:.3f} labels/s), batch std {np.std(rc.batch_latencies):.0f}s, "
           f"cost ${rc.cost:.2f}, label accuracy {rc.accuracy:.2%}, "

@@ -1,17 +1,17 @@
-"""Sweep CLAMShell configurations with the vectorized Monte-Carlo engine.
+"""Sweep CLAMShell configurations with the vectorized Monte-Carlo engine
+through the ``repro.scenarios`` facade.
 
 Reproduces the shape of the paper's §6 figures in seconds: straggler
 mitigation across pool/batch ratios (Fig 9/10), pool maintenance (Fig 6),
-and the full-system hybrid-learning run (Fig 17) — each point is hundreds
-of vmapped replications instead of one scalar event-loop run.
+a ONE-COMPILATION worker-speed sweep (``scenarios.sweep`` vmapping the
+traced SimScales axis), and the hybrid-learning runs (Fig 17) — each point
+is hundreds of vmapped replications instead of one scalar event-loop run.
 
     PYTHONPATH=src python examples/simfast_sweep.py
 """
 import numpy as np
 
-from repro.core.simfast import (
-    FastConfig, simulate, simulate_learning, simulate_learning_batch)
-from repro.core.simfast_stats import summarize
+from repro import scenarios
 
 
 def straggler_sweep(n_reps=256):
@@ -19,23 +19,45 @@ def straggler_sweep(n_reps=256):
     for R in (0.5, 1.0, 2.0):
         rows = {}
         for sm in (False, True):
-            cfg = FastConfig(pool_size=12, n_tasks=96, batch_ratio=R,
-                             straggler=sm)
-            rows[sm] = summarize(simulate(cfg, n_reps, seed=0))
-        speedup = rows[False].mean_latency / rows[True].mean_latency
-        print(f"  R={R}: mean {rows[False].mean_latency:7.1f}s -> "
-              f"{rows[True].mean_latency:6.1f}s  ({speedup:.1f}x, "
+            spec = scenarios.ScenarioSpec(
+                n_tasks=96, batch_ratio=R,
+                pool=scenarios.PoolSpec(pool_size=12),
+                policy=scenarios.PolicySpec(
+                    straggler=scenarios.StragglerSpec(enabled=sm)))
+            rows[sm] = scenarios.run(spec, engine="simfast",
+                                     n_reps=n_reps, seed=0)["metrics"]
+        speedup = rows[False]["mean_latency"] / rows[True]["mean_latency"]
+        print(f"  R={R}: mean {rows[False]['mean_latency']:7.1f}s -> "
+              f"{rows[True]['mean_latency']:6.1f}s  ({speedup:.1f}x, "
               f"paper: 2.5-5x)")
 
 
 def maintenance_sweep(n_reps=192):
     print("== pool maintenance PM_l (Fig 6) ==")
     for pm in (float("inf"), 300.0, 150.0):
-        cfg = FastConfig(pool_size=15, n_tasks=120, straggler=False,
-                         pm_l=pm, session_mean_s=7200.0)
-        s = summarize(simulate(cfg, n_reps, seed=0))
-        print(f"  PM_l={pm:>6}: mean latency {s.mean_latency:7.1f}s  "
-              f"total {s.mean_total_time:8.1f}s")
+        spec = scenarios.ScenarioSpec(
+            n_tasks=120,
+            pool=scenarios.PoolSpec(pool_size=15, session_mean_s=7200.0),
+            policy=scenarios.PolicySpec(
+                straggler=scenarios.StragglerSpec(enabled=False),
+                maintenance=scenarios.MaintenanceSpec(pm_l=pm)))
+        s = scenarios.run(spec, engine="simfast", n_reps=n_reps,
+                          seed=0)["metrics"]
+        print(f"  PM_l={pm:>6}: mean latency {s['mean_latency']:7.1f}s  "
+              f"total {s['mean_total_time']:8.1f}s")
+
+
+def worker_speed_sweep(n_reps=192):
+    print("== worker speed axis, ONE compilation "
+          "(scenarios.sweep over SimScales) ==")
+    spec = scenarios.get_scenario("smallR1")
+    sw = scenarios.sweep(spec, axis="pool.median_mu",
+                         values=[75.0, 150.0, 300.0, 600.0],
+                         engine="simfast", n_reps=n_reps, seed=0)
+    assert sw["vectorized"]
+    for v, m in zip(sw["values"], sw["results"]):
+        print(f"  median_mu={v:5.0f}s: mean latency {m['mean_latency']:7.1f}s"
+              f"  total {m['mean_total_time']:8.1f}s")
 
 
 def hybrid_learning_demo():
@@ -47,8 +69,10 @@ def hybrid_learning_demo():
     y = (X @ W0).argmax(-1)
     Xt = rng.normal(size=(500, d)).astype(np.float32)
     yt = (Xt @ W0).argmax(-1)
-    curve, _ = simulate_learning(FastConfig(pool_size=15), X, y, Xt, yt,
-                                 rounds=8, seed=0)
+    spec = scenarios.ScenarioSpec(pool=scenarios.PoolSpec(pool_size=15))
+    curve = scenarios.run_learning(spec, X, y, Xt, yt, engine="simfast",
+                                   vectorized=False, rounds=8,
+                                   seed=0)["curve"]
     for t, nlab, acc in curve:
         print(f"  t={t:7.0f}s labels={nlab:4d} test_acc={acc:.3f}")
 
@@ -63,8 +87,9 @@ def hybrid_learning_batch_demo(n_reps=128):
     y = (X @ W0).argmax(-1)
     Xt = rng.normal(size=(500, d)).astype(np.float32)
     yt = (Xt @ W0).argmax(-1)
-    out = simulate_learning_batch(FastConfig(pool_size=15), X, y, Xt, yt,
-                                  rounds=8, n_reps=n_reps, seed=0)
+    spec = scenarios.ScenarioSpec(pool=scenarios.PoolSpec(pool_size=15))
+    out = scenarios.run_learning(spec, X, y, Xt, yt, engine="simfast",
+                                 rounds=8, n_reps=n_reps, seed=0)
     acc = np.asarray(out["curve"]["acc"])
     t = np.asarray(out["curve"]["t"])
     for r in range(acc.shape[1]):
@@ -75,5 +100,6 @@ def hybrid_learning_batch_demo(n_reps=128):
 if __name__ == "__main__":
     straggler_sweep()
     maintenance_sweep()
+    worker_speed_sweep()
     hybrid_learning_demo()
     hybrid_learning_batch_demo()

@@ -21,7 +21,7 @@ from repro.core.events import EventLoop
 from repro.core.crowd import RetainerPool, Task
 from repro.core.lifeguard import LifeGuard
 from repro.core.maintenance import Maintainer
-from repro.core.learner import LogisticLearner
+from repro.learning.compat import LogisticLearner
 from repro.core.workers import Population
 
 
@@ -81,7 +81,13 @@ class LabelResult:
 
 
 class ClamShell:
-    def __init__(self, cfg: CSConfig, population: Optional[Population] = None):
+    def __init__(self, cfg, population: Optional[Population] = None,
+                 *, seed: int = 0):
+        if not isinstance(cfg, CSConfig):
+            # declarative repro.scenarios.ScenarioSpec (CSConfig carries its
+            # seed, so the spec path takes it as a keyword here)
+            from repro.scenarios.compile import to_cs_config
+            cfg = to_cs_config(cfg, seed=seed)
         self.cfg = cfg
         self.loop = EventLoop()
         self.pop = population or Population(seed=cfg.seed)

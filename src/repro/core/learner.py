@@ -2,103 +2,22 @@
 
 ``repro.learning.linear`` holds the pure-pytree :class:`LinearLearner`
 (params + Adam state as arrays, jit/vmap/scan-safe) that both simulation
-engines and the streaming labelstream service share; this module keeps the
-historical object-style :class:`LogisticLearner` API for the scalar
-event-loop driver (``core/clamshell.py``) and existing callers. New code
-should use ``repro.learning`` directly.
-
-Behavioral fix over the historical version: ``select_uncertain`` breaks
-equal-entropy ties by ascending point index (stable argsort) instead of
-backend-dependent float argsort order, so the scalar path agrees
-bit-for-bit with the batched ``repro.learning.select`` path.
+engines and the streaming labelstream service share;
+``repro.learning.compat`` keeps the historical object-style
+:class:`LogisticLearner` API. Importing THIS module emits a
+``DeprecationWarning`` (tests assert it fires); it will be removed after
+one deprecation cycle. New code should use ``repro.learning`` directly.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-from typing import Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+warnings.warn(
+    "repro.core.learner is deprecated: import LogisticLearner from "
+    "repro.learning.compat (or use the pytree repro.learning.linear API); "
+    "this shim will be removed after one deprecation cycle",
+    DeprecationWarning, stacklevel=2)
 
-from repro.learning import linear as _linear
-
-
-@functools.partial(jax.jit, static_argnames=("steps",))
-def _fit(W, b, X, y, sw, steps: int = 120, lr: float = 0.15, l2: float = 1e-3):
-    """Historical entry point: full-batch Adam from fresh moments.
-
-    Kept for backward compatibility; delegates to the pytree learner.
-    """
-    st = _linear.init(W.shape[0], W.shape[1])._replace(W=W, b=b)
-    st = _linear.fit(st, X, y, sw, steps=steps, lr=lr, l2=l2)
-    return st.W, st.b
-
-
-@jax.jit
-def _proba(W, b, X):
-    return jax.nn.softmax(X @ W + b, axis=-1)
-
-
-@jax.jit
-def _entropy(W, b, X):
-    """Predictive entropy (the pure-jnp oracle of kernels/uncertainty)."""
-    st = _linear.init(W.shape[0], W.shape[1])._replace(W=W, b=b)
-    return _linear.entropy(st, X, use_kernel=False)
-
-
-@dataclass
-class LogisticLearner:
-    """Object-style wrapper over ``repro.learning.linear`` (deprecated)."""
-    n_features: int
-    n_classes: int
-    seed: int = 0
-    steps: int = 120
-    W: Optional[jnp.ndarray] = field(default=None, repr=False)
-    b: Optional[jnp.ndarray] = field(default=None, repr=False)
-    version: int = 0
-
-    def __post_init__(self):
-        st = _linear.init(self.n_features, self.n_classes)
-        self.W, self.b = st.W, st.b
-
-    def _state(self) -> "_linear.LinearLearner":
-        return _linear.init(self.n_features, self.n_classes)._replace(
-            W=self.W, b=self.b)
-
-    def fit(self, X, y, sample_weight=None):
-        if len(y) == 0:
-            return self
-        X = jnp.asarray(X, jnp.float32)
-        y = jnp.asarray(y, jnp.int32)
-        sw = (jnp.ones((len(y),), jnp.float32) if sample_weight is None
-              else jnp.asarray(sample_weight, jnp.float32))
-        self.W, self.b = _fit(self.W, self.b, X, y, sw, steps=self.steps)
-        self.version += 1
-        return self
-
-    def predict_proba(self, X):
-        return np.asarray(_proba(self.W, self.b, jnp.asarray(X, jnp.float32)))
-
-    def predict(self, X):
-        return self.predict_proba(X).argmax(-1)
-
-    def score(self, X, y):
-        return float((self.predict(X) == np.asarray(y)).mean())
-
-    def uncertainty(self, X):
-        return np.asarray(_entropy(self.W, self.b,
-                                   jnp.asarray(X, jnp.float32)))
-
-    def select_uncertain(self, X_pool, candidates: np.ndarray, k: int):
-        """Top-k most uncertain among `candidates` (row indices into X_pool).
-
-        Equal-entropy ties break by ascending candidate position (stable
-        sort), matching ``repro.learning.select.al_select`` bit-for-bit.
-        """
-        if k <= 0 or len(candidates) == 0:
-            return np.array([], dtype=np.int64)
-        u = self.uncertainty(X_pool[candidates])
-        order = np.argsort(-u, kind="stable")
-        return candidates[order[:k]]
+from repro.learning.compat import (  # noqa: E402,F401  (re-exports)
+    LogisticLearner, _entropy, _fit, _proba,
+)

@@ -60,7 +60,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +69,23 @@ import numpy as np
 from repro.core.crowd import SWITCH_DELAY_S, WAIT_PAY_PER_S, WORK_PAY_PER_RECORD
 
 INF = jnp.inf
+
+
+class SimScales(NamedTuple):
+    """Traced multipliers on the continuous population/pool rates.
+
+    ``FastConfig`` is static (hashable, baked into the jitted program), so
+    sweeping any of its fields normally recompiles per point. These three
+    axes — worker speed (``mu``), session length (``session``) and
+    recruitment delay (``recruit``) — are threaded through the tick as
+    *traced* scalars instead, so ``repro.scenarios.sweep`` vmaps a whole
+    sweep through ONE compilation (leading axis = sweep points). The
+    default path (``scales=None``) never multiplies, keeping the compiled
+    program and its outputs bit-identical to the pre-sweep engine.
+    """
+    mu: jnp.ndarray = 1.0        # scales median_mu (worker latency)
+    session: jnp.ndarray = 1.0   # scales session_mean_s (churn)
+    recruit: jnp.ndarray = 1.0   # scales recruitment delay means
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,9 +157,10 @@ class FastConfig:
 # population draws (match workers.Population.draw distributions)
 # --------------------------------------------------------------------------
 
-def _draw_workers(cfg: FastConfig, key, shape):
+def _draw_workers(cfg: FastConfig, key, shape, scales=None):
     k_mu, k_cv, k_acc = jax.random.split(key, 3)
-    mu = cfg.median_mu * jnp.exp(cfg.sigma_ln * jax.random.normal(k_mu, shape))
+    med = cfg.median_mu if scales is None else cfg.median_mu * scales.mu
+    mu = med * jnp.exp(cfg.sigma_ln * jax.random.normal(k_mu, shape))
     mu = jnp.maximum(15.0, mu)
     sigma = mu * jax.random.uniform(k_cv, shape, minval=cfg.cv_lo,
                                     maxval=cfg.cv_hi)
@@ -151,19 +169,22 @@ def _draw_workers(cfg: FastConfig, key, shape):
     return mu, sigma, acc
 
 
-def _init_workers(cfg: FastConfig, key):
+def _init_workers(cfg: FastConfig, key, scales=None):
     """Dense worker-pool state; everything is a fixed-shape array."""
     P = cfg.pool_size
     k_pop, k_sess, k_cold = jax.random.split(key, 3)
     # column 0 of the bank seeds the initial pool; later columns are the
     # fresh workers consumed by churn/eviction backfill
-    mu_b, sigma_b, acc_b = _draw_workers(cfg, k_pop, (P, cfg.bank))
-    session = jax.random.exponential(k_sess, (P,)) * cfg.session_mean_s
+    mu_b, sigma_b, acc_b = _draw_workers(cfg, k_pop, (P, cfg.bank), scales)
+    sess_mean = cfg.session_mean_s if scales is None \
+        else cfg.session_mean_s * scales.session
+    cold_mean = cfg.cold_recruit_mean_s if scales is None \
+        else cfg.cold_recruit_mean_s * scales.recruit
+    session = jax.random.exponential(k_sess, (P,)) * sess_mean
     if cfg.retainer:
         blocked = jnp.zeros((P,))           # synchronous fill (paper §6.1)
     else:                                    # Base-NR: workers trickle in
-        blocked = (jax.random.exponential(k_cold, (P,))
-                   * cfg.cold_recruit_mean_s)
+        blocked = (jax.random.exponential(k_cold, (P,)) * cold_mean)
     banks = dict(mu=mu_b, sigma=sigma_b, acc=acc_b)
     return dict(
         mu=mu_b[:, 0], sigma=sigma_b[:, 0], acc=acc_b[:, 0],
@@ -279,10 +300,12 @@ def priority_match(avail, tier1, tier2, shift):
 
 
 def _replace_slots(cfg: FastConfig, ws, banks, leave, t, u_delay, u_sess,
-                   recruit_mean):
+                   recruit_mean, session_mean=None):
     """Slots in `leave` exit the pool; fresh workers (from the pre-drawn
     bank) arrive after an exponential recruitment delay (the event loop's
     pipelined-reserve amortization collapses to the delay distribution)."""
+    if session_mean is None:
+        session_mean = cfg.session_mean_s
     idx = jnp.minimum(ws["repl_idx"] + 1, cfg.bank - 1)
     rows = jnp.arange(cfg.pool_size)
     sel = lambda new, old: jnp.where(leave, new, old)
@@ -293,7 +316,7 @@ def _replace_slots(cfg: FastConfig, ws, banks, leave, t, u_delay, u_sess,
     ws["repl_idx"] = sel(idx, ws["repl_idx"])
     arrive = t + _exp(u_delay, recruit_mean)
     ws["blocked_until"] = sel(arrive, ws["blocked_until"])
-    ws["session_end"] = sel(arrive + _exp(u_sess, cfg.session_mean_s),
+    ws["session_end"] = sel(arrive + _exp(u_sess, session_mean),
                             ws["session_end"])
     zi = jnp.zeros_like(ws["n_started"])
     zf = jnp.zeros_like(ws["comp_sum"])
@@ -313,7 +336,7 @@ def draw_latency(cfg: FastConfig, mu, sigma, u1, u2):
 
 
 def churn_and_maintain(cfg: FastConfig, ws, banks, t, u_delay, u_sess,
-                       recruit_mean):
+                       recruit_mean, session_mean=None):
     """Session churn + PM_l latency eviction + bank backfill, vectorized.
 
     Idle workers whose session ended leave; when maintenance is enabled
@@ -347,7 +370,7 @@ def churn_and_maintain(cfg: FastConfig, ws, banks, t, u_delay, u_sess,
         ws["n_evicted"] = ws["n_evicted"] + evict.sum()
         leave = churned | evict
     ws = _replace_slots(cfg, ws, banks, leave, t, u_delay, u_sess,
-                        recruit_mean)
+                        recruit_mean, session_mean)
     return ws, leave
 
 
@@ -355,7 +378,8 @@ def churn_and_maintain(cfg: FastConfig, ws, banks, t, u_delay, u_sess,
 # one tick over the current batch
 # --------------------------------------------------------------------------
 
-def _tick(cfg: FastConfig, ws, ts, banks, true_label, t0, t, seed_u32, step):
+def _tick(cfg: FastConfig, ws, ts, banks, true_label, t0, t, seed_u32, step,
+          scales=None):
     """Process all events at/before time t and make new assignments in
     O(P + B) work (padded scatters + cumsum/searchsorted matching, one
     hashed uniform block). ``banks`` and ``true_label`` are loop-invariant
@@ -424,9 +448,12 @@ def _tick(cfg: FastConfig, ws, ts, banks, true_label, t0, t, seed_u32, step):
     # ---- churn + pool maintenance (single backfill update) -------------
     # churn backfill uses the cold mean for Base-NR (as does eviction,
     # matching RetainerPool._recruit_async drawing from pool.recruit_mean)
-    ws, _ = churn_and_maintain(cfg, ws, banks, t, up[2], up[3],
-                               cfg.recruit_mean_s if cfg.retainer
-                               else cfg.cold_recruit_mean_s)
+    rm = cfg.recruit_mean_s if cfg.retainer else cfg.cold_recruit_mean_s
+    sm = None
+    if scales is not None:
+        rm = rm * scales.recruit
+        sm = cfg.session_mean_s * scales.session
+    ws, _ = churn_and_maintain(cfg, ws, banks, t, up[2], up[3], rm, sm)
 
     # ---- assignment (priority routing + straggler duplication) ---------
     avail = (ws["assigned"] < 0) & (ws["blocked_until"] <= t) \
@@ -486,7 +513,8 @@ def _tick(cfg: FastConfig, ws, ts, banks, true_label, t0, t, seed_u32, step):
 # drivers
 # --------------------------------------------------------------------------
 
-def _run_batch(cfg: FastConfig, ws, banks, t0, seed_u32, true_labels, valid):
+def _run_batch(cfg: FastConfig, ws, banks, t0, seed_u32, true_labels, valid,
+               scales=None):
     """Label one batch to completion (event-jumping while_loop)."""
     B = cfg.eff_batch
     true_labels = true_labels.astype(jnp.int32)
@@ -505,7 +533,7 @@ def _run_batch(cfg: FastConfig, ws, banks, t0, seed_u32, true_labels, valid):
     def body(carry):
         step, ws, ts, t = carry
         ws, ts, t_next = _tick(cfg, ws, ts, banks, true_labels, t0, t,
-                               seed_u32, step)
+                               seed_u32, step, scales)
         return step + 1, ws, ts, t_next
 
     _, ws, ts, _ = jax.lax.while_loop(
@@ -520,9 +548,9 @@ def _run_batch(cfg: FastConfig, ws, banks, t0, seed_u32, true_labels, valid):
     return ws, ts, t_end
 
 
-def _simulate_one(cfg: FastConfig, key, true_labels):
+def _simulate_one(cfg: FastConfig, key, true_labels, scales=None):
     k_init, k_run = jax.random.split(key)
-    ws, banks = _init_workers(cfg, k_init)
+    ws, banks = _init_workers(cfg, k_init, scales)
     seed = jax.random.bits(k_run, (), jnp.uint32)
     B, T = cfg.eff_batch, cfg.n_tasks
     pad = cfg.n_batches * B - T
@@ -537,7 +565,8 @@ def _simulate_one(cfg: FastConfig, key, true_labels):
         lab, val = xs
         seed_b = _lowbias32(seed ^ (i.astype(jnp.uint32) + 1)
                             * jnp.uint32(0x9E3779B9))
-        ws, ts, t_end = _run_batch(cfg, ws, banks, t, seed_b, lab, val)
+        ws, ts, t_end = _run_batch(cfg, ws, banks, t, seed_b, lab, val,
+                                   scales)
         fin = ts["done"] & val
         out = dict(latency=jnp.where(fin, ts["completed"] - t, 0.0),
                    done=fin,
@@ -578,10 +607,20 @@ def _simulate_sharded(cfg: FastConfig, keys, true_labels):
     return jax.vmap(lambda k: _simulate_one(cfg, k, true_labels))(keys)
 
 
-def simulate(cfg: FastConfig, n_reps: int, *, seed: int = 0,
+def _as_fast_config(cfg) -> FastConfig:
+    """Accept a FastConfig or a declarative ``repro.scenarios``
+    ScenarioSpec (compiled through the unified spec layer)."""
+    if isinstance(cfg, FastConfig):
+        return cfg
+    from repro.scenarios.compile import to_fast_config
+    return to_fast_config(cfg)
+
+
+def simulate(cfg, n_reps: int, *, seed: int = 0,
              true_labels=None, shard: bool = True):
     """Run ``n_reps`` independent replications of the labeling simulation.
 
+    ``cfg`` is a FastConfig or a ``repro.scenarios.ScenarioSpec``.
     Replications are vmapped on one device; with multiple local devices
     (e.g. ``--xla_force_host_platform_device_count=N`` on a multi-core CPU
     host, or a TPU pod slice) and ``shard=True`` they are additionally
@@ -591,6 +630,7 @@ def simulate(cfg: FastConfig, n_reps: int, *, seed: int = 0,
     latency (n_reps, n_tasks), done, result, total_time, accuracy, cost and
     pool counters.
     """
+    cfg = _as_fast_config(cfg)
     if true_labels is None:
         true_labels = np.zeros(cfg.n_tasks, dtype=np.int32)
     true_labels = jnp.asarray(true_labels, jnp.int32)
@@ -605,6 +645,36 @@ def simulate(cfg: FastConfig, n_reps: int, *, seed: int = 0,
                 for k, v in out.items()}
     keys = jax.random.split(jax.random.key(seed), n_reps)
     return _simulate_batch(cfg, keys, true_labels)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _simulate_swept(cfg: FastConfig, keys, true_labels, scales):
+    return jax.vmap(lambda sc: jax.vmap(
+        lambda k: _simulate_one(cfg, k, true_labels, sc))(keys))(scales)
+
+
+def simulate_swept(cfg, n_reps: int, scales: SimScales, *, seed: int = 0,
+                   true_labels=None):
+    """One-compilation scenario sweep over the :class:`SimScales` axes.
+
+    ``scales`` is a SimScales whose leaves share a leading sweep axis
+    ``(V,)`` (broadcast scalars are fine for the non-swept axes); the
+    whole grid runs as ONE jitted program — vmap over sweep points on top
+    of vmap over replications — so per-point cost is amortized exactly
+    like per-replication cost. Returns stacked arrays with leading dims
+    ``(V, n_reps)``. This is the ``repro.scenarios.sweep`` backend for
+    the simfast engine's continuous pool axes.
+    """
+    cfg = _as_fast_config(cfg)
+    if true_labels is None:
+        true_labels = np.zeros(cfg.n_tasks, dtype=np.int32)
+    true_labels = jnp.asarray(true_labels, jnp.int32)
+    V = max([int(np.asarray(leaf).shape[0]) for leaf in scales
+             if np.ndim(leaf) > 0] or [1])
+    scales = SimScales(*[jnp.broadcast_to(jnp.asarray(leaf, jnp.float32), (V,))
+                         for leaf in scales])
+    keys = jax.random.split(jax.random.key(seed), n_reps)
+    return _simulate_swept(cfg, keys, true_labels, scales)
 
 
 # --------------------------------------------------------------------------
@@ -709,6 +779,7 @@ def simulate_learning(cfg: FastConfig, X, y, X_test, y_test, *,
     """
     from repro.learning import linear
 
+    cfg = _as_fast_config(cfg)
     X = jnp.asarray(X, jnp.float32)
     X_test = jnp.asarray(X_test, jnp.float32)
     y_test = np.asarray(y_test)
@@ -857,6 +928,7 @@ def simulate_learning_batch(cfg: FastConfig, X, y, X_test, y_test, *,
     matches the scalar path's list-of-tuples — plus final ``W``/``b``/
     ``labeled``/``y_obs``/``total_time``.
     """
+    cfg = _as_fast_config(cfg)
     X = jnp.asarray(X, jnp.float32)
     X_test = jnp.asarray(X_test, jnp.float32)
     y = np.asarray(y)

@@ -26,10 +26,13 @@ _EXPORTS = {
     "PolicyConfig": "policy",
     "RoutingConfig": "routing",
     "scored_match": "routing",
+    "admit_scores": "routing",
+    "learnability_features": "routing",
     "StreamConfig": "router",
     "StreamLearnerConfig": "router",
     "heterogeneous_stream_config": "router",
     "run_stream": "router",
+    "run_stream_sweep": "router",
     "stream_summary": "router",
 }
 

@@ -75,7 +75,8 @@ from repro.labelstream.policy import (
     should_finalize, target_outstanding, uncertainty,
 )
 from repro.labelstream.routing import (
-    RoutingConfig, admit_select, route_scores, scored_match,
+    RoutingConfig, admit_scores, admit_select, learnability_features,
+    route_scores, scored_match,
 )
 
 
@@ -98,6 +99,10 @@ class StreamLearnerConfig:
     enabled: bool = False
     n_features: int = 8
     class_sep: float = 1.8
+    hard_sep_scale: float = 1.0   # < 1: hard tasks' class separation shrinks
+                                  # by this factor — difficulty becomes
+                                  # visible in feature space (the signal the
+                                  # learnability-aware admission head reads)
     prior_scale: float = 1.0      # fusion weight at full ramp
     ramp_n: float = 48.0          # training examples to reach full weight
     known_threshold: float = 0.97 # fused confidence to call a task known
@@ -239,7 +244,7 @@ def _init_shard(cfg: StreamConfig, key):
     # per-worker completion-latency EWMA (the routing speed axis); starts
     # at the population median so an unobserved worker scores neutral
     ws["lat_ewma"] = jnp.full((P,), cfg.median_mu)
-    if cfg.routing.admission == "uncertain":
+    if cfg.routing.admission != "fifo":
         # slot-array backlog: task identity (features, difficulty, label)
         # is drawn at ARRIVAL and stored so admission can rank by model
         # uncertainty; row Q is the dump row for masked scatters/gathers
@@ -269,19 +274,25 @@ def _acc_hat(cfg: StreamConfig, ws):
         / (cfg.est_prior_n + ws["est_n"]), 0.52, 0.995)
 
 
-def _task_features(u1, u2, tl, L: StreamLearnerConfig, C: int):
+def _task_features(u1, u2, tl, diff, L: StreamLearnerConfig, C: int):
     """Class-conditional Gaussian features (one-hot class means scaled by
     ``class_sep``, unit Box-Muller noise) for tasks with true labels
     ``tl`` — the observable side the learner generalizes over. Shared by
     the admission-time (FIFO) and arrival-time (uncertain admission)
     draws so the two backlog disciplines sample the same feature
-    distribution."""
+    distribution. With ``hard_sep_scale < 1`` hard tasks (``diff < 1``)
+    get their class separation shrunk by that factor, so difficulty is
+    observable from features (the Python-level gate keeps the default
+    path bit-identical to the historical draw)."""
     nrm = jnp.sqrt(-2.0 * jnp.log1p(-u1)) * jnp.cos(2.0 * jnp.pi * u2)
     means = L.class_sep * jnp.eye(C, L.n_features)
-    return means[tl] + nrm
+    base = means[tl]
+    if L.hard_sep_scale != 1.0:
+        base = base * jnp.where(diff < 1.0, L.hard_sep_scale, 1.0)[..., None]
+    return base + nrm
 
 def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
-                warmup_t, lW, lb, fuse_w):
+                warmup_t, lW, lb, fuse_w, gW, gb):
     P, Ws, C = cfg.pool_size, cfg.window, cfg.n_classes
     Q, M, cap = cfg.backlog, cfg.max_arrivals_per_tick, cfg.policy.votes_cap
     pol, fast, L, R = cfg.policy, cfg.fast, cfg.learner, cfg.routing
@@ -296,12 +307,14 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
         gate = jnp.ones((), bool)
     frank = (jnp.cumsum(free) - 1).astype(jnp.int32)
     featw = None
-    if R.admission == "uncertain":
+    if R.admission != "fifo":
         # learner-driven admission: task identity (difficulty, true label,
         # features) is drawn at ARRIVAL and stored in the slot-array
         # backlog; admission ranks queued tasks by the current model's
         # uncertainty on their features and takes the most uncertain first
-        # (an untrained model ties everything and slot order wins)
+        # (an untrained model ties everything and slot order wins);
+        # "uncertain_learnable" weights uncertainty by the learnability
+        # head's estimate so chance-level-hard tasks stop hogging slots
         F = L.n_features
         occ = bl["occ"]
         space = Q - occ.sum()
@@ -318,7 +331,7 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
         diff_a = jnp.where(ua[0] < cfg.p_hard, cfg.hard_scale, 1.0)
         tl_a = jnp.floor(ua[1] * C).astype(jnp.int32).clip(0, C - 1)
         feat_a = _task_features(ua[2:2 + F].T, ua[2 + F:2 + 2 * F].T,
-                                tl_a, L, C)
+                                tl_a, diff_a, L, C)
         bl_times = bl["times"].at[dstw].set(t)
         bl_diff = bl["diff"].at[dstw].set(diff_a)
         bl_tlab = bl["tlab"].at[dstw].set(tl_a)
@@ -328,7 +341,11 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
         n_adm = jnp.where(gate, jnp.minimum(occ.sum(), free.sum()), 0
                           ).astype(jnp.int32)
         u_bl = uncertainty(bl_feat[:Q] @ lW + lb)
-        admit_bl, order = admit_select(u_bl, occ, n_adm)
+        if R.admission == "uncertain_learnable":
+            adm_key = admit_scores(u_bl, bl_feat[:Q], gW, gb)
+        else:
+            adm_key = u_bl
+        admit_bl, order = admit_select(adm_key, occ, n_adm)
         admit = free & (frank < n_adm)
         # r-th free window slot takes the r-th most-uncertain queued task
         src = jnp.where(admit, order[frank.clip(0, Q - 1)], Q)
@@ -365,7 +382,7 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
             F = L.n_features
             uf = _uniform_block(seed ^ jnp.uint32(0x5EEDF00D), step,
                                 2 * Ws * F).reshape(2, Ws, F)
-            featw = _task_features(uf[0], uf[1], tl, L, C)
+            featw = _task_features(uf[0], uf[1], tl, diff, L, C)
     win = dict(win)
     win["active"] = win["active"] | admit
     win["arrival_t"] = jnp.where(admit, arr_t, win["arrival_t"])
@@ -590,6 +607,25 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
         tmask = fin & (win["n_votes"] >= 1) if L.train_crowd_only else fin
         train = dict(mask=tmask, feat=win["feat"],
                      label=win["logpost"].argmax(-1))
+        if R.admission == "uncertain_learnable":
+            # learnability target: did the MODEL's prediction agree with
+            # the CROWD's final label? On learnable tasks both converge
+            # to the truth (agreement ~ model accuracy, high); on
+            # chance-level tasks the crowd label is a coin flip, so
+            # agreement sits at chance no matter how confident either
+            # party looks. This is the one finalize-time observable with
+            # a clean statistical gap: posterior confidence, vote counts
+            # and model-known status all fail here, because random votes
+            # frequently produce confident-looking 2-0/4-1 posteriors
+            # and a sharply-trained linear model is confidently WRONG on
+            # small-norm noise features. Cold start is graceful: an
+            # untrained model agrees at chance everywhere, the head
+            # learns ~constant, and the admission ranking degrades to
+            # plain ``uncertain``.
+            model_pred = (win["feat"] @ lW + lb).argmax(-1)
+            train["learnable"] = (model_pred
+                                  == win["logpost"].argmax(-1)
+                                  ).astype(jnp.int32)
     else:
         train = dict(mask=jnp.zeros((Ws,), bool))
     return ws, win, bl, metrics, train
@@ -628,6 +664,13 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
         state["buf_X"] = jnp.zeros((L.buffer + 1, L.n_features))
         state["buf_y"] = jnp.zeros((L.buffer + 1,), jnp.int32)
         state["buf_n"] = jnp.zeros((), jnp.int32)
+    if cfg.routing.admission == "uncertain_learnable":
+        # the learnability head: linear over square-augmented features
+        # (routing.learnability_features), binary target "did the model's
+        # prediction agree with the crowd's final label?" stored alongside
+        # the replay ring (see the target rationale in _shard_tick)
+        state["learn2"] = linear.init(2 * L.n_features, 2)
+        state["buf_t"] = jnp.zeros((L.buffer + 1,), jnp.int32)
     M, cap_total = cfg.max_arrivals_per_tick, cfg.max_arrivals_per_tick * S
 
     def tick(state, _):
@@ -654,11 +697,17 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
             lW = jnp.zeros((1, cfg.n_classes))
             lb = jnp.zeros((cfg.n_classes,))
             fuse_w = jnp.zeros(())
+        if cfg.routing.admission == "uncertain_learnable":
+            gW, gb = state["learn2"].W, state["learn2"].b
+        else:
+            gW = jnp.zeros((2, 2))
+            gb = jnp.zeros((2,))
         ws, win, bl, m, train = jax.vmap(
             functools.partial(_shard_tick, cfg),
-            in_axes=(0, 0, 0, 0, 0, None, None, 0, None, None, None, None),
+            in_axes=(0, 0, 0, 0, 0, None, None, 0, None, None, None, None,
+                     None, None),
         )(state["ws"], state["banks"], state["win"], state["bl"],
-          n_arr, t, step, seeds, warmup_t, lW, lb, fuse_w)
+          n_arr, t, step, seeds, warmup_t, lW, lb, fuse_w, gW, gb)
 
         new = dict(state)
         if L.enabled:
@@ -682,6 +731,30 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
                     steps=L.fit_steps, lr=L.lr, l2=L.l2, fresh_opt=False),
                 lambda l: l, state["learn"])
             new.update(learn=learn, buf_X=buf_X, buf_y=buf_y, buf_n=buf_n)
+            if cfg.routing.admission == "uncertain_learnable":
+                # learnability head trains on the SAME ring positions with
+                # the binary finalized-confident target, square-augmented
+                # features, identical cadence
+                tt = train["learnable"].reshape(-1)
+                buf_t = state["buf_t"].at[pos].set(
+                    jnp.where(tm, tt, state["buf_t"][pos]))
+                # the head is tiny (2F x 2) and its score gates every
+                # admission, so unlike the main learner it is REFIT FROM
+                # SCRATCH on the current ring each cadence: its target
+                # distribution shifts hard at cold start (nothing is
+                # model-known, every target 0) and Adam momentum carried
+                # across that shift leaves the online head stuck far from
+                # the batch optimum. A fresh 60-step fit on <= buffer
+                # examples costs microseconds per cadence tick
+                learn2 = jax.lax.cond(
+                    (step % L.fit_every == 0) & (buf_n > 0),
+                    lambda l: linear.fit(
+                        linear.init(2 * L.n_features, 2),
+                        learnability_features(buf_X[:B]), buf_t[:B],
+                        (jnp.arange(B) < buf_n).astype(jnp.float32),
+                        steps=60, lr=L.lr, l2=L.l2),
+                    lambda l: l, state["learn2"])
+                new.update(learn2=learn2, buf_t=buf_t)
         new.update(
             t=t + cfg.dt, step=step + 1, key=key, arr=arr,
             ws=ws, win=win, bl=bl,
@@ -711,6 +784,11 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
     out["n_evicted"] = state["ws"]["n_evicted"].sum()
     out["backlog_end"] = state["bl"]["count"].sum()
     out["in_flight_end"] = state["win"]["active"].sum()
+    if "learn2" in state:
+        # final learnability-head params (diagnostics: lets callers probe
+        # what the admission score learned about the feature space)
+        out["learn2_W"] = state["learn2"].W
+        out["learn2_b"] = state["learn2"].b
     out["series"] = ys
     return out
 
@@ -721,29 +799,71 @@ def _run_jit(cfg: StreamConfig, horizon: int, keys, warmup_t, rate_scale):
         lambda k: _run_one(cfg, horizon, k, warmup_t, rate_scale))(keys)
 
 
-def run_stream(cfg: StreamConfig, horizon: int, *, n_reps: int = 1,
+def _as_stream_config(cfg) -> StreamConfig:
+    """Accept a StreamConfig or a declarative ``repro.scenarios``
+    ScenarioSpec (compiled through the unified spec layer)."""
+    if isinstance(cfg, StreamConfig):
+        return cfg
+    from repro.scenarios.compile import to_stream_config
+    return to_stream_config(cfg)
+
+
+def _validate_stream_config(cfg: StreamConfig):
+    if cfg.learner.enabled and cfg.learner.n_features < cfg.n_classes:
+        raise ValueError("learner.n_features must be >= n_classes "
+                         "(one-hot class means)")
+    if cfg.routing.admission not in ("fifo", "uncertain",
+                                     "uncertain_learnable"):
+        raise ValueError("routing.admission must be 'fifo', 'uncertain' or "
+                         "'uncertain_learnable', "
+                         f"got {cfg.routing.admission!r}")
+    if cfg.routing.admission != "fifo" and not cfg.learner.enabled:
+        raise ValueError(f"routing.admission={cfg.routing.admission!r} "
+                         "requires learner.enabled: features are drawn at "
+                         "arrival and ranked by the online model")
+
+
+def run_stream(cfg, horizon: int, *, n_reps: int = 1,
                seed: int = 0, warmup_frac: float = 0.3,
                rate_scale: float = 1.0):
     """Run ``n_reps`` replications of the streaming service for ``horizon``
-    ticks. Steady-state metrics (histogram, counters) only accumulate after
+    ticks. ``cfg`` is a StreamConfig or a ``repro.scenarios.ScenarioSpec``.
+    Steady-state metrics (histogram, counters) only accumulate after
     ``warmup_frac`` of the horizon. ``rate_scale`` multiplies the offered
     arrival rate WITHOUT recompiling (it is traced), so load sweeps are
     one compilation. Returns stacked device arrays with leading dim n_reps
     plus ``warmup_t``/``measured_s`` scalars."""
-    if cfg.learner.enabled and cfg.learner.n_features < cfg.n_classes:
-        raise ValueError("learner.n_features must be >= n_classes "
-                         "(one-hot class means)")
-    if cfg.routing.admission not in ("fifo", "uncertain"):
-        raise ValueError("routing.admission must be 'fifo' or 'uncertain', "
-                         f"got {cfg.routing.admission!r}")
-    if cfg.routing.admission == "uncertain" and not cfg.learner.enabled:
-        raise ValueError("routing.admission='uncertain' requires "
-                         "learner.enabled: features are drawn at arrival "
-                         "and ranked by the online model")
+    cfg = _as_stream_config(cfg)
+    _validate_stream_config(cfg)
     keys = jax.random.split(jax.random.key(seed), n_reps)
     warmup_t = float(warmup_frac * horizon * cfg.dt)
     out = _run_jit(cfg, int(horizon), keys, warmup_t,
                    jnp.float32(rate_scale))
+    out = dict(out)
+    out["warmup_t"] = warmup_t
+    out["measured_s"] = horizon * cfg.dt - warmup_t
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _run_swept(cfg: StreamConfig, horizon: int, keys, warmup_t, rate_scales):
+    return jax.vmap(lambda rs: jax.vmap(
+        lambda k: _run_one(cfg, horizon, k, warmup_t, rs))(keys))(rate_scales)
+
+
+def run_stream_sweep(cfg, horizon: int, rate_scales, *, n_reps: int = 1,
+                     seed: int = 0, warmup_frac: float = 0.3):
+    """One-compilation load sweep: ``vmap`` over the offered-rate scales on
+    top of the replication vmap, so every sweep point advances in lock-step
+    inside a single jitted program (the ``repro.scenarios.sweep`` backend
+    for the stream engine's arrival-rate axis). Returns stacked arrays with
+    leading dims ``(len(rate_scales), n_reps)``."""
+    cfg = _as_stream_config(cfg)
+    _validate_stream_config(cfg)
+    keys = jax.random.split(jax.random.key(seed), n_reps)
+    warmup_t = float(warmup_frac * horizon * cfg.dt)
+    out = _run_swept(cfg, int(horizon), keys, warmup_t,
+                     jnp.asarray(rate_scales, jnp.float32))
     out = dict(out)
     out["warmup_t"] = warmup_t
     out["measured_s"] = horizon * cfg.dt - warmup_t
@@ -774,10 +894,11 @@ def _hist_percentile(hist, q, bin_s):
     return (idx + 1) * bin_s
 
 
-def stream_summary(cfg: StreamConfig, out) -> dict:
+def stream_summary(cfg, out) -> dict:
     """Reduce run_stream output to the service-level quantities the bench
     reports: offered vs sustained steady-state rate, p50/p95/p99
     time-in-system, label accuracy, votes per finalized task, drops."""
+    cfg = _as_stream_config(cfg)
     reps = int(np.asarray(out["done"]).shape[0])
     dur = float(out["measured_s"]) * reps
     hist = np.asarray(out["hist"]).sum(0)

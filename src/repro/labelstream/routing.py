@@ -28,6 +28,19 @@ service:
     tasks by model uncertainty on their arrival-time features and admit
     the most uncertain first (FIFO is the zero-model special case — all
     uncertainties tie and slot order wins).
+  * ``admission="uncertain_learnable"`` is the difficulty-aware refinement:
+    pure uncertainty admission chases noise when hard tasks are
+    chance-level (the crowd can never decide them, so the model stays
+    uncertain on them forever and keeps re-admitting them). A second
+    linear head — the LEARNABILITY head — trains on finalized tasks with
+    target "did the model's prediction agree with the crowd's final
+    label?" over square-augmented features
+    (:func:`learnability_features`: ``[x, x^2]``, so a linear head can
+    represent the small-norm region where hard-for-everyone tasks live
+    when the feature model makes difficulty visible), and admission
+    ranks by ``uncertainty x learnability`` (:func:`admit_scores`). An
+    untrained head scores everything 0.5 and the ranking degrades
+    gracefully to plain ``uncertain``.
 
 Everything is pure jnp on fixed shapes so the router can call it inside
 the jitted, vmapped streaming tick.
@@ -52,7 +65,10 @@ class RoutingConfig:
     speed axis reads. ``admission`` picks the backlog discipline:
     ``"fifo"`` is the PR-2 arrival-time ring, ``"uncertain"`` draws task
     features at ARRIVAL and admits most-uncertain-first under the current
-    learner (requires ``StreamConfig.learner.enabled``).
+    learner (requires ``StreamConfig.learner.enabled``), and
+    ``"uncertain_learnable"`` additionally weights uncertainty by a
+    learned learnability estimate (a second head trained on finalize-time
+    model-crowd agreement; see the module docstring).
     """
     enabled: bool = False
     # accuracy is weighted 6x speed by default: evidence quality compounds
@@ -62,7 +78,7 @@ class RoutingConfig:
     w_acc: float = 3.0
     w_speed: float = 0.5
     ewma_alpha: float = 0.25
-    admission: str = "fifo"       # "fifo" | "uncertain"
+    admission: str = "fifo"       # "fifo" | "uncertain" | "uncertain_learnable"
 
 
 def _standardize(x):
@@ -174,3 +190,35 @@ def admit_select(unc, occupied, n_adm):
         jnp.arange(Q, dtype=jnp.int32))
     admit = occupied & (rank < n_adm)
     return admit, order
+
+
+def learnability_features(feat):
+    """Square-augmented features ``[x, x^2]`` for the learnability head.
+
+    The chance-level-hard region of the workload's feature space is
+    "small class separation" — geometrically a small-norm neighborhood a
+    purely linear head cannot carve out. Appending elementwise squares
+    lets a linear head represent ellipsoidal (norm-like) decision
+    surfaces, which is exactly the learnable-vs-chance split when the
+    feature model scales hard tasks' separation down
+    (``StreamLearnerConfig.hard_sep_scale < 1``). Fixed shape
+    ``(..., 2F)``; shared by training (router driver) and admission
+    scoring so the two cannot drift."""
+    return jnp.concatenate([feat, feat * feat], axis=-1)
+
+
+def admit_scores(unc, feat, gW, gb):
+    """Difficulty-aware admission score: ``uncertainty x learnability``.
+
+    ``unc`` is the per-task model uncertainty in [0, 1] on the backlog
+    features ``feat``; ``gW``/``gb`` are the learnability head's linear
+    params over :func:`learnability_features`. The head's class-1
+    probability estimates P(model agrees with the crowd's final label |
+    features) — high on learnable tasks where both converge to the truth,
+    at chance on tasks whose crowd label is a coin flip. An untrained
+    (zero) head scores 0.5 everywhere, so the product preserves the plain
+    ``uncertain`` ranking until there is evidence that some uncertainty
+    is unresolvable noise."""
+    logits = learnability_features(feat) @ gW + gb
+    p_learn = jax.nn.softmax(logits, axis=-1)[..., 1]
+    return unc * p_learn

@@ -15,6 +15,7 @@ Exports resolve lazily (PEP 562), mirroring ``labelstream/__init__``.
 import importlib
 
 _EXPORTS = {
+    "LogisticLearner": "compat",
     "LinearLearner": "linear",
     "init": "linear",
     "reset_opt": "linear",

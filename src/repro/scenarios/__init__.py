@@ -1,0 +1,79 @@
+"""repro.scenarios: one declarative Scenario/Policy layer over all three
+engines.
+
+    from repro import scenarios
+
+    spec = scenarios.get_scenario("heterogeneous_pool")
+    res = scenarios.run(spec, engine="stream", horizon=1200, n_reps=4)
+    grid = scenarios.sweep(spec, axis="arrivals.rate",
+                           values=[0.01, 0.02, 0.04], n_reps=4)
+
+The pieces:
+
+  * ``spec``      — frozen, validated, pytree-safe :class:`ScenarioSpec`
+    (workload) and :class:`PolicySpec` (system response) + ``override``
+    for dotted-path functional updates;
+  * ``registry``  — ``register_scenario`` / ``get_scenario`` /
+    ``list_scenarios``: the named canonical workloads (seeded with the
+    bench configs);
+  * ``facade``    — ``run`` / ``sweep`` / ``run_learning``: one call shape
+    over the events, simfast and stream engines; traced sweep axes compile
+    once and vmap across values;
+  * ``compile``   — spec -> engine-native config lowering (exact: facade
+    runs are bit-identical to the legacy entry points);
+  * ``adapters``  — DEPRECATED legacy-config -> spec lifts
+    (``from_fast_config`` / ``from_stream_config`` / ``from_cs_config``),
+    kept for one deprecation cycle.
+
+Exports resolve lazily (PEP 562), mirroring the other packages, so
+importing ``repro.scenarios`` does not pull jax-heavy engine modules until
+a facade call actually needs them.
+"""
+import importlib
+
+_EXPORTS = {
+    # specs
+    "ScenarioSpec": "spec",
+    "PolicySpec": "spec",
+    "ArrivalSpec": "spec",
+    "DifficultySpec": "spec",
+    "FeatureSpec": "spec",
+    "PoolSpec": "spec",
+    "EngineKnobs": "spec",
+    "StragglerSpec": "spec",
+    "MaintenanceSpec": "spec",
+    "RedundancySpec": "spec",
+    "RoutingSpec": "spec",
+    "AdmissionSpec": "spec",
+    "LearnerSpec": "spec",
+    "override": "spec",
+    # registry
+    "register_scenario": "registry",
+    "get_scenario": "registry",
+    "list_scenarios": "registry",
+    # facade
+    "run": "facade",
+    "sweep": "facade",
+    "run_learning": "facade",
+    # compilation + engine compatibility
+    "engines": "compile",
+    "compile_for": "compile",
+    "to_fast_config": "compile",
+    "to_stream_config": "compile",
+    "to_cs_config": "compile",
+    # deprecated legacy-config adapters
+    "from_fast_config": "adapters",
+    "from_stream_config": "adapters",
+    "from_cs_config": "adapters",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        mod = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        value = getattr(mod, name)
+        globals()[name] = value          # cache for subsequent lookups
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,168 @@
+"""Legacy-config adapters: lift an engine-native config into a spec.
+
+Existing code holds hand-built ``FastConfig`` / ``StreamConfig`` /
+``CSConfig`` objects; these adapters are the one-deprecation-cycle bridge
+onto the declarative layer — each emits a ``DeprecationWarning`` (tests
+assert it fires) because the supported direction is now spec-first:
+construct a :class:`~repro.scenarios.spec.ScenarioSpec` (or fetch a
+registry name) and let ``repro.scenarios.compile`` lower it.
+
+The adapters are exact inverses of the compilers on the representable
+subset: ``to_*_config(from_*_config(cfg)) == cfg`` (round-trip pinned in
+tests/test_scenarios.py). A legacy config using a knob the spec layer
+does not model (e.g. ``CSConfig.quality_threshold``) raises ``ValueError``
+naming the field rather than dropping it silently.
+"""
+from __future__ import annotations
+
+import warnings
+
+from repro.scenarios.spec import (
+    AdmissionSpec, ArrivalSpec, DifficultySpec, EngineKnobs, FeatureSpec,
+    LearnerSpec, MaintenanceSpec, PolicySpec, PoolSpec, RedundancySpec,
+    RoutingSpec, ScenarioSpec, StragglerSpec,
+)
+
+
+def _deprecated(what: str):
+    warnings.warn(
+        f"{what} is a legacy engine config: construct a "
+        "repro.scenarios.ScenarioSpec (or use the scenario registry) "
+        "instead; this adapter will be removed after one deprecation cycle",
+        DeprecationWarning, stacklevel=3)
+
+
+def from_fast_config(cfg) -> ScenarioSpec:
+    """simfast.FastConfig -> ScenarioSpec (DEPRECATED entry direction)."""
+    _deprecated("FastConfig")
+    return ScenarioSpec(
+        n_classes=cfg.n_classes,
+        n_tasks=cfg.n_tasks,
+        batch_ratio=cfg.batch_ratio,
+        batch_size=cfg.batch_size,
+        n_records=cfg.n_records,
+        pool=PoolSpec(
+            pool_size=cfg.pool_size, retainer=cfg.retainer,
+            recruit_mean_s=cfg.recruit_mean_s,
+            cold_recruit_mean_s=cfg.cold_recruit_mean_s,
+            session_mean_s=cfg.session_mean_s, median_mu=cfg.median_mu,
+            sigma_ln=cfg.sigma_ln, cv_lo=cfg.cv_lo, cv_hi=cfg.cv_hi,
+            acc_a=cfg.acc_a, acc_b=cfg.acc_b,
+            latency_floor=cfg.latency_floor, bank=cfg.bank,
+        ),
+        policy=PolicySpec(
+            straggler=StragglerSpec(enabled=cfg.straggler,
+                                    max_dup=cfg.max_dup),
+            maintenance=MaintenanceSpec(pm_l=cfg.pm_l,
+                                        use_termest=cfg.use_termest,
+                                        min_obs=cfg.min_obs, z=cfg.z,
+                                        alpha=cfg.alpha),
+            redundancy=RedundancySpec(votes=cfg.votes_needed),
+        ),
+        engine=EngineKnobs(dt=cfg.dt, bundle_s=cfg.bundle_s,
+                           mitig_bundle_s=cfg.mitig_bundle_s,
+                           max_batch_time=cfg.max_batch_time),
+    )
+
+
+def from_stream_config(cfg) -> ScenarioSpec:
+    """labelstream.StreamConfig -> ScenarioSpec (DEPRECATED direction)."""
+    _deprecated("StreamConfig")
+    L, R, pol = cfg.learner, cfg.routing, cfg.policy
+    return ScenarioSpec(
+        n_classes=cfg.n_classes,
+        window=cfg.window,
+        backlog=cfg.backlog,
+        arrivals=ArrivalSpec(
+            kind=cfg.arrivals.kind, rate=cfg.arrivals.rate,
+            rate_hi=cfg.arrivals.rate_hi,
+            dwell_mean_s=cfg.arrivals.dwell_mean_s,
+            period_s=cfg.arrivals.period_s,
+            amplitude=cfg.arrivals.amplitude,
+        ),
+        difficulty=DifficultySpec(p_hard=cfg.p_hard,
+                                  hard_scale=cfg.hard_scale),
+        features=FeatureSpec(n_features=L.n_features,
+                             class_sep=L.class_sep,
+                             hard_sep_scale=L.hard_sep_scale),
+        pool=PoolSpec(
+            pool_size=cfg.pool_size, n_shards=cfg.n_shards, retainer=True,
+            recruit_mean_s=cfg.recruit_mean_s,
+            session_mean_s=cfg.session_mean_s, median_mu=cfg.median_mu,
+            sigma_ln=cfg.sigma_ln, cv_lo=cfg.cv_lo, cv_hi=cfg.cv_hi,
+            acc_a=cfg.acc_a, acc_b=cfg.acc_b,
+            latency_floor=cfg.latency_floor, bank=cfg.bank,
+            est_prior_acc=cfg.est_prior_acc, est_prior_n=cfg.est_prior_n,
+        ),
+        policy=PolicySpec(
+            straggler=StragglerSpec(enabled=cfg.straggler,
+                                    max_dup=cfg.max_dup),
+            maintenance=MaintenanceSpec(pm_l=cfg.pm_l,
+                                        use_termest=cfg.use_termest,
+                                        min_obs=cfg.min_obs, z=cfg.z,
+                                        alpha=cfg.alpha),
+            redundancy=RedundancySpec(
+                adaptive=pol.adaptive, votes=pol.votes_cap,
+                conf_threshold=pol.conf_threshold, min_votes=pol.min_votes,
+                max_outstanding=pol.max_outstanding),
+            routing=RoutingSpec(
+                kind="scored" if R.enabled else "uniform",
+                w_acc=R.w_acc, w_speed=R.w_speed,
+                ewma_alpha=R.ewma_alpha),
+            admission=AdmissionSpec(kind=R.admission,
+                                    batch_replay=cfg.batch_replay),
+            learner=LearnerSpec(
+                enabled=L.enabled, prior_scale=L.prior_scale,
+                ramp_n=L.ramp_n, known_threshold=L.known_threshold,
+                min_votes_known=L.min_votes_known, fit_every=L.fit_every,
+                fit_steps=L.fit_steps, lr=L.lr, l2=L.l2, buffer=L.buffer,
+                prioritize=L.prioritize,
+                train_crowd_only=L.train_crowd_only,
+                refresh_every=cfg.refresh_every,
+                refresh_iters=cfg.refresh_iters),
+        ),
+        engine=EngineKnobs(dt=cfg.dt,
+                           max_arrivals_per_tick=cfg.max_arrivals_per_tick,
+                           tis_bins=cfg.tis_bins, tis_bin_s=cfg.tis_bin_s),
+    )
+
+
+def from_cs_config(cfg) -> ScenarioSpec:
+    """clamshell.CSConfig -> ScenarioSpec (DEPRECATED direction).
+
+    ``CSConfig.seed`` is a run-time argument in the spec world (pass it to
+    ``scenarios.run``); config knobs the spec layer does not model raise.
+    """
+    _deprecated("CSConfig")
+    if cfg.quality_threshold is not None:
+        raise ValueError("from_cs_config: quality_threshold is not "
+                         "representable in the scenario spec layer")
+    if cfg.routing != "random":
+        raise ValueError(f"from_cs_config: routing={cfg.routing!r} is not "
+                         "representable (the events engine spec path is "
+                         "'random')")
+    if cfg.reweight_active:
+        raise ValueError("from_cs_config: reweight_active=True is not "
+                         "representable in the scenario spec layer")
+    return ScenarioSpec(
+        batch_ratio=cfg.batch_ratio,
+        n_records=cfg.n_records,
+        pool=PoolSpec(
+            pool_size=cfg.pool_size, retainer=cfg.retainer,
+            recruit_mean_s=cfg.recruit_mean_s,
+            cold_recruit_mean_s=cfg.cold_recruit_mean_s,
+            session_mean_s=cfg.session_mean_s,
+        ),
+        policy=PolicySpec(
+            straggler=StragglerSpec(enabled=cfg.straggler),
+            maintenance=MaintenanceSpec(pm_l=cfg.pm_l,
+                                        use_termest=cfg.use_termest),
+            redundancy=RedundancySpec(votes=cfg.votes_needed),
+            learner=LearnerSpec(
+                kind=cfg.learner, al_fraction=cfg.al_fraction,
+                al_batch=cfg.al_batch,
+                decision_latency_s=cfg.decision_latency_s,
+                async_retrain=cfg.async_retrain,
+                uncertainty_sample=cfg.uncertainty_sample),
+        ),
+    )

@@ -1,0 +1,290 @@
+"""Unified execution facade: ``run(scenario, engine=...)`` and
+``sweep(scenario, axis=..., values=...)`` over all three engines.
+
+One call shape for every engine:
+
+    from repro import scenarios
+    res = scenarios.run(scenarios.get_scenario("heterogeneous_pool"),
+                        engine="stream", horizon=1200, n_reps=4, seed=0)
+    res["metrics"]["votes_per_task"]
+
+``run`` compiles the spec to the engine's native config and calls the
+legacy entry point with it, so a default-spec run is BIT-IDENTICAL to the
+pre-facade path (the acceptance property tests/test_scenarios.py pins).
+
+``sweep`` runs a scenario across one axis. Where the engine supports a
+*traced* axis the whole sweep is ONE compilation — the stream engine
+vmaps over the offered arrival rate (``run_stream_sweep``), the simfast
+engine vmaps over the continuous pool axes (``SimScales``: worker speed,
+session length, recruitment delay). Any other axis falls back to one
+``run`` per value (override + recompile), so every axis is sweepable and
+the fast ones are fast.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.scenarios.compile import (
+    compile_for, engines, to_cs_config, to_fast_config, to_stream_config,
+)
+from repro.scenarios.spec import ScenarioSpec, override
+
+#: axis name -> SimScales field for the vectorized simfast sweep
+_SIMFAST_AXES = {
+    "pool.median_mu": "mu",
+    "pool.session_mean_s": "session",
+    "pool.recruit_mean_s": "recruit",
+}
+#: stream axes that map onto the traced rate_scale
+_STREAM_AXES = ("arrivals.rate",)
+
+
+def _resolve_engine(spec: ScenarioSpec, engine):
+    compat = engines(spec)
+    if engine is None:
+        if not compat:
+            raise ValueError(f"scenario {spec.name or '<anonymous>'} is "
+                             "compatible with no engine")
+        return compat[0] if len(compat) == 1 else compat[1 if
+                                                         "simfast" in compat
+                                                         else 0]
+    if engine not in compat:
+        raise ValueError(f"scenario {spec.name or '<anonymous>'} cannot run "
+                         f"on engine {engine!r} (compatible: {compat})")
+    return engine
+
+
+def _label_metrics(results) -> dict:
+    """Mean service metrics over a list of event-loop LabelResults."""
+    lat_means = [np.mean(r.task_latencies) for r in results
+                 if r.task_latencies]
+    lat_stds = [np.std(r.task_latencies) for r in results
+                if r.task_latencies]
+    return dict(
+        n_reps=len(results),
+        total_time=float(np.mean([r.total_time for r in results])),
+        n_labels=float(np.mean([r.n_labels for r in results])),
+        throughput=float(np.mean([r.throughput for r in results])),
+        # a run that timed out before any completion has no latency data;
+        # report inf (no evidence of a bounded latency), never NaN
+        mean_latency=float(np.mean(lat_means)) if lat_means
+        else float("inf"),
+        std_latency=float(np.mean(lat_stds)) if lat_stds else float("inf"),
+        accuracy=float(np.mean([r.accuracy for r in results])),
+        cost=float(np.mean([r.cost for r in results])),
+        cost_wait=float(np.mean([r.cost_wait for r in results])),
+        cost_work=float(np.mean([r.cost_work for r in results])),
+    )
+
+
+def run(scenario, engine: str = None, *, seed: int = 0, n_reps: int = 1,
+        horizon: int = None, rate_scale: float = 1.0,
+        warmup_frac: float = 0.3, true_labels=None, max_time: float = None,
+        shard: bool = True) -> dict:
+    """Run ``scenario`` on ``engine`` (default: the scenario's preferred
+    compatible engine — simfast for batch workloads, stream otherwise).
+
+    Returns ``{"engine", "scenario", "config", "metrics", "raw"}`` where
+    ``config`` is the compiled engine-native config, ``metrics`` the
+    engine's summary dict and ``raw`` the engine's native output
+    (stacked device arrays for simfast/stream, a list of LabelResult for
+    events). Engine-specific knobs: ``horizon``/``rate_scale``/
+    ``warmup_frac`` (stream), ``true_labels``/``shard`` (batch engines),
+    ``max_time`` (events wall-clock budget in simulated seconds),
+    ``n_reps`` (replications; events runs seeds ``seed..seed+n_reps-1``).
+    """
+    if not isinstance(scenario, ScenarioSpec):
+        raise TypeError("run() takes a ScenarioSpec (use get_scenario or "
+                        f"construct one); got {type(scenario).__name__}")
+    engine = _resolve_engine(scenario, engine)
+    out = dict(engine=engine, scenario=scenario.name)
+
+    if engine == "stream":
+        from repro.labelstream.router import run_stream, stream_summary
+        cfg = to_stream_config(scenario)
+        raw = run_stream(cfg, horizon if horizon is not None
+                         else scenario.horizon, n_reps=n_reps, seed=seed,
+                         warmup_frac=warmup_frac, rate_scale=rate_scale)
+        out.update(config=cfg, metrics=stream_summary(cfg, raw), raw=raw)
+        return out
+
+    if engine == "simfast":
+        from repro.core.simfast import simulate
+        from repro.core.simfast_stats import summarize
+        cfg = to_fast_config(scenario)
+        raw = simulate(cfg, n_reps, seed=seed, true_labels=true_labels,
+                       shard=shard)
+        out.update(config=cfg, metrics=dataclasses.asdict(summarize(raw)),
+                   raw=raw)
+        return out
+
+    # events: the scalar reference engine, one replication per seed
+    from repro.core.clamshell import ClamShell
+    cfg = to_cs_config(scenario, seed=seed)
+    results = []
+    for r in range(n_reps):
+        cs = ClamShell(to_cs_config(scenario, seed=seed + r))
+        kw = {} if max_time is None else {"max_time": max_time}
+        if true_labels is not None:
+            kw["true_labels"] = true_labels
+            kw["n_classes"] = scenario.n_classes
+        results.append(cs.run_labeling(scenario.n_tasks, **kw))
+    out.update(config=cfg, metrics=_label_metrics(results), raw=results)
+    return out
+
+
+def _slice_point(raw, i):
+    """Per-sweep-point view of stacked (V, reps, ...) sweep output."""
+    arrays = {k: v for k, v in raw.items()
+              if k not in ("warmup_t", "measured_s")}
+    point = jax.tree_util.tree_map(lambda a: a[i], arrays)
+    for k in ("warmup_t", "measured_s"):
+        if k in raw:
+            point[k] = raw[k]
+    return point
+
+
+def sweep(scenario, axis: str, values, engine: str = None, *, seed: int = 0,
+          n_reps: int = 1, horizon: int = None, warmup_frac: float = 0.3,
+          true_labels=None) -> dict:
+    """Run ``scenario`` at each value of one axis.
+
+    ``axis`` is a dotted spec path (``"arrivals.rate"``,
+    ``"pool.median_mu"``, ...). Axes the engine can trace are compiled
+    ONCE and vmapped across all values (arrival rate on the stream engine;
+    the :class:`~repro.core.simfast.SimScales` pool axes on simfast);
+    anything else falls back to one ``run`` per value. Returns
+    ``{"axis", "values", "engine", "vectorized", "results"}`` with
+    ``results[i]`` the metrics dict at ``values[i]``.
+    """
+    if not isinstance(scenario, ScenarioSpec):
+        raise TypeError("sweep() takes a ScenarioSpec, got "
+                        f"{type(scenario).__name__}")
+    engine = _resolve_engine(scenario, engine)
+    values = list(values)
+
+    # the stream engine's traced rate_scale multiplies the WHOLE offered
+    # process; that equals overriding arrivals.rate only when every other
+    # rate parameter is relative to it (poisson: trivially; diurnal: the
+    # modulation is multiplicative). For mmpp the burst-state rate_hi is
+    # absolute and must NOT scale with the calm rate, so mmpp sweeps take
+    # the per-value override path to keep the axis semantics exact.
+    if engine == "stream" and axis in _STREAM_AXES \
+            and scenario.arrivals.kind != "mmpp":
+        from repro.labelstream.router import run_stream_sweep, stream_summary
+        cfg = to_stream_config(scenario)
+        scales = [v / scenario.arrivals.rate for v in values]
+        raw = run_stream_sweep(cfg, horizon if horizon is not None
+                               else scenario.horizon, scales, n_reps=n_reps,
+                               seed=seed, warmup_frac=warmup_frac)
+        results = [stream_summary(cfg, _slice_point(raw, i))
+                   for i in range(len(values))]
+        return dict(axis=axis, values=values, engine=engine,
+                    vectorized=True, results=results, raw=raw)
+
+    # SimScales.recruit multiplies whichever recruitment mean the engine
+    # actually uses; on a Base-NR (cold) pool that is cold_recruit_mean_s,
+    # not the recruit_mean_s this axis names — route Base-NR recruit
+    # sweeps through the override path so the axis means what it says.
+    if engine == "simfast" and axis in _SIMFAST_AXES \
+            and not (axis == "pool.recruit_mean_s"
+                     and not scenario.pool.retainer):
+        from repro.core.simfast import SimScales, simulate_swept
+        from repro.core.simfast_stats import summarize
+        cfg = to_fast_config(scenario)
+        base = {"pool.median_mu": scenario.pool.median_mu,
+                "pool.session_mean_s": scenario.pool.session_mean_s,
+                "pool.recruit_mean_s": scenario.pool.recruit_mean_s}[axis]
+        field = _SIMFAST_AXES[axis]
+        scales = SimScales()._replace(
+            **{field: np.asarray([v / base for v in values], np.float32)})
+        raw = simulate_swept(cfg, n_reps, scales, seed=seed,
+                             true_labels=true_labels)
+        results = [dataclasses.asdict(summarize(_slice_point(raw, i)))
+                   for i in range(len(values))]
+        return dict(axis=axis, values=values, engine=engine,
+                    vectorized=True, results=results, raw=raw)
+
+    # generic fallback: override the axis per value (recompiles per point)
+    results = []
+    for v in values:
+        res = run(override(scenario, {axis: v}), engine, seed=seed,
+                  n_reps=n_reps, horizon=horizon, warmup_frac=warmup_frac,
+                  true_labels=true_labels)
+        results.append(res["metrics"])
+    return dict(axis=axis, values=values, engine=engine, vectorized=False,
+                results=results)
+
+
+def run_learning(scenario, X, y, X_test, y_test, engine: str = "simfast", *,
+                 vectorized: bool = True, rounds: int = 10, n_reps: int = 64,
+                 seed: int = 0, label_budget: int = 500,
+                 fit_steps: int = 60, k_active=None, use_kernel: bool = True,
+                 accest=None, max_time: float = 6 * 3600.0):
+    """Hybrid/active learning runs through the same spec vocabulary.
+
+    ``engine="simfast"`` drives ``simulate_learning_batch`` (one jitted
+    scan-over-rounds, vmap-over-replications program) when ``vectorized``,
+    else the scalar per-round ``simulate_learning`` loop; the learner kind
+    maps onto the round's active/passive split (PL -> 0 active, AL -> all
+    active, HL -> the ``al_fraction`` mix) unless ``k_active`` overrides
+    it. ``engine="events"`` drives the reference ``ClamShell.run_learning``
+    — ONE replication whose learner policy (kind, fractions, async
+    retraining, decision latency) comes from ``policy.learner``; the
+    simfast-driver knobs (``n_reps``/``rounds``/``fit_steps``/
+    ``use_kernel``/``vectorized``/``accest``/``k_active``) do not apply
+    there — call per seed to average curves. Returns the engine's native
+    result plus the compiled config.
+    """
+    if not isinstance(scenario, ScenarioSpec):
+        raise TypeError("run_learning() takes a ScenarioSpec, got "
+                        f"{type(scenario).__name__}")
+    if engine == "events":
+        from repro.core.clamshell import ClamShell
+        cfg = to_cs_config(scenario, seed=seed)
+        curve, res = ClamShell(cfg).run_learning(
+            X, y, X_test, y_test, label_budget=label_budget,
+            max_time=max_time)
+        return dict(engine=engine, scenario=scenario.name, config=cfg,
+                    curve=curve, result=res)
+    if engine != "simfast":
+        raise ValueError("run_learning engine must be 'events' or "
+                         f"'simfast', got {engine!r}")
+    from repro.core.simfast import simulate_learning, simulate_learning_batch
+    cfg = to_fast_config(scenario)
+    lr = scenario.policy.learner
+    if k_active is None:
+        # the simfast loop expresses the learner kind through the
+        # active/passive split of each pool-sized round: PL buys only
+        # random points, AL only uncertainty-sampled ones, HL the
+        # al_fraction mix (NL — no learner — has no simfast counterpart;
+        # raise rather than silently run the hybrid loop)
+        p = scenario.pool.pool_size
+        if lr.kind == "PL":
+            k_active = 0
+        elif lr.kind == "AL":
+            k_active = p
+        elif lr.kind == "HL":
+            # the engine's own default split is p // 2; keep it exactly for
+            # the default al_fraction so facade runs stay bit-identical to
+            # the legacy entry point on odd pool sizes too
+            k_active = p // 2 if lr.al_fraction == 0.5 \
+                else int(round(lr.al_fraction * p))
+        else:
+            raise ValueError("run_learning engine='simfast' cannot express "
+                             f"policy.learner.kind={lr.kind!r}")
+    kw = dict(rounds=rounds, seed=seed, fit_steps=fit_steps,
+              k_active=k_active, use_kernel=use_kernel,
+              decision_latency_s=lr.decision_latency_s)
+    if vectorized:
+        raw = simulate_learning_batch(cfg, X, y, X_test, y_test,
+                                      n_reps=n_reps, **kw)
+        return dict(engine=engine, scenario=scenario.name, config=cfg,
+                    raw=raw, curve=raw["curve"])
+    curve, info = simulate_learning(cfg, X, y, X_test, y_test,
+                                    accest=accest, **kw)
+    return dict(engine=engine, scenario=scenario.name, config=cfg,
+                curve=curve, raw=info)

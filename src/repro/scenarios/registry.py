@@ -1,0 +1,213 @@
+"""Named scenario registry — the canonical workloads, one name each.
+
+``register_scenario`` / ``get_scenario`` give every benchmark, example,
+test and CI smoke step the same vocabulary: a bench section becomes
+"registry name + engine + metric list" instead of a hand-wired config.
+The module seeds the registry with today's bench workloads (including the
+canonical heterogeneous-pool workload that used to live in
+``labelstream.heterogeneous_stream_config``); the seeded specs compile
+BIT-IDENTICALLY to the configs the benchmarks previously constructed by
+hand (tests/test_scenarios.py pins each one).
+
+``get_scenario(name, {"pool.pool_size": 6})`` applies dotted-path
+overrides through :func:`repro.scenarios.spec.override`, re-validating
+every touched node.
+"""
+from __future__ import annotations
+
+from repro.scenarios.spec import (
+    AdmissionSpec, ArrivalSpec, DifficultySpec, EngineKnobs, FeatureSpec,
+    LearnerSpec, MaintenanceSpec, PolicySpec, PoolSpec, RedundancySpec,
+    RoutingSpec, ScenarioSpec, StragglerSpec, override,
+)
+
+_REGISTRY: dict = {}
+
+
+def register_scenario(name: str, spec: ScenarioSpec, *,
+                      overwrite: bool = False) -> ScenarioSpec:
+    """Register ``spec`` under ``name``. Re-registering an existing name
+    without ``overwrite=True`` raises (silent replacement of a canonical
+    workload would invalidate committed bench baselines)."""
+    if not name:
+        raise ValueError("register_scenario: name must be non-empty")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"scenario {name!r} is already registered "
+                         "(pass overwrite=True to replace it)")
+    if not isinstance(spec, ScenarioSpec):
+        raise TypeError("register_scenario: spec must be a ScenarioSpec, "
+                        f"got {type(spec).__name__}")
+    spec = spec if spec.name == name else \
+        override(spec, {"name": name})
+    _REGISTRY[name] = spec
+    return spec
+
+
+def get_scenario(name: str, overrides: dict = None) -> ScenarioSpec:
+    """Fetch a registered scenario, optionally applying dotted-path
+    ``overrides`` (e.g. ``{"pool.pool_size": 6, "window": 16}``)."""
+    try:
+        spec = _REGISTRY[name]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY)) or "<empty>"
+        raise KeyError(f"unknown scenario {name!r}; registered: {known}") \
+            from None
+    return override(spec, overrides) if overrides else spec
+
+
+def list_scenarios() -> list:
+    """Sorted registered scenario names."""
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# seeded canonical workloads (the bench configs, named)
+# ---------------------------------------------------------------------------
+
+def _seed():
+    # -- closed-world batch workloads (events + simfast engines) ----------
+    register_scenario("smallR1", ScenarioSpec(
+        n_tasks=40,
+        pool=PoolSpec(pool_size=10),
+    ))
+    register_scenario("throughput_v3_pm", ScenarioSpec(
+        # throughput mode: the whole 400-task set submitted as one batch,
+        # 3-vote QC, PM_l=150 maintenance — the regime where the event
+        # loop's per-event queue scans go quadratic (bench_simfast headline)
+        n_tasks=400, batch_size=400,
+        pool=PoolSpec(pool_size=15),
+        policy=PolicySpec(
+            redundancy=RedundancySpec(votes=3),
+            maintenance=MaintenanceSpec(pm_l=150.0),
+        ),
+        engine=EngineKnobs(max_batch_time=2e5),
+    ))
+    register_scenario("hybrid_small", ScenarioSpec(
+        # the hybrid-learning acceptance workload (bench_hybrid
+        # vec-vs-scalar): one 10-worker pool labeling learner-selected
+        # batches; run through facade.run_learning
+        pool=PoolSpec(pool_size=10),
+    ))
+
+    # -- open-world streaming workloads (stream engine) -------------------
+    _stream_dims = dict(
+        window=32,
+        pool=PoolSpec(pool_size=8, n_shards=2),
+        arrivals=ArrivalSpec(kind="poisson", rate=0.01),
+        engine=EngineKnobs(dt=5.0, tis_bin_s=16.0),
+    )
+    register_scenario("stream_default", ScenarioSpec(
+        **_stream_dims,
+        policy=PolicySpec(
+            maintenance=MaintenanceSpec(pm_l=240.0),
+            redundancy=RedundancySpec(adaptive=True, votes=3,
+                                      conf_threshold=0.95, min_votes=1,
+                                      max_outstanding=1),
+        ),
+    ))
+    register_scenario("stream_batch_replay", ScenarioSpec(
+        # the naive fixed-batch baseline: same machinery, admission gated
+        # until the window drains, no straggler mitigation, fixed 3 votes
+        **_stream_dims,
+        policy=PolicySpec(
+            straggler=StragglerSpec(enabled=False),
+            redundancy=RedundancySpec(votes=3),
+            admission=AdmissionSpec(batch_replay=True),
+        ),
+    ))
+
+    _skew = DifficultySpec(p_hard=0.25, hard_scale=0.3)
+    _adapt5 = RedundancySpec(adaptive=True, votes=5, conf_threshold=0.98,
+                             min_votes=2, max_outstanding=2)
+    register_scenario("skewed_fixed5", ScenarioSpec(
+        **_stream_dims, difficulty=_skew,
+        policy=PolicySpec(
+            maintenance=MaintenanceSpec(pm_l=240.0),
+            redundancy=RedundancySpec(votes=5),
+        ),
+    ))
+    register_scenario("skewed_adaptive5", ScenarioSpec(
+        **_stream_dims, difficulty=_skew,
+        policy=PolicySpec(
+            maintenance=MaintenanceSpec(pm_l=240.0),
+            redundancy=_adapt5,
+        ),
+    ))
+    register_scenario("skewed_learner_fused", ScenarioSpec(
+        **_stream_dims, difficulty=_skew,
+        policy=PolicySpec(
+            maintenance=MaintenanceSpec(pm_l=240.0),
+            redundancy=_adapt5,
+            learner=LearnerSpec(enabled=True, min_votes_known=1),
+        ),
+    ))
+
+    # the canonical heterogeneous-pool workload (wide Beta(2, 1) accuracy
+    # spread, weak estimation prior, hour sessions, drip redundancy) —
+    # previously labelstream.heterogeneous_stream_config
+    _het = dict(
+        window=16,
+        pool=PoolSpec(pool_size=8, n_shards=2, acc_a=2.0, acc_b=1.0,
+                      est_prior_n=2.0, session_mean_s=3600.0),
+        arrivals=ArrivalSpec(kind="poisson", rate=0.012),
+        engine=EngineKnobs(dt=5.0, tis_bin_s=8.0),
+    )
+    _drip = RedundancySpec(adaptive=True, votes=5, conf_threshold=0.95,
+                           min_votes=1, max_outstanding=1)
+    register_scenario("heterogeneous_pool", ScenarioSpec(
+        **_het, policy=PolicySpec(redundancy=_drip),
+    ))
+    register_scenario("heterogeneous_routed", ScenarioSpec(
+        **_het, policy=PolicySpec(redundancy=_drip,
+                                  routing=RoutingSpec(kind="scored")),
+    ))
+
+    # bursty congestion where the backlog actually queues: the admission-
+    # discipline comparison workload (learnable tasks)
+    _burst = dict(
+        window=8,
+        pool=_het["pool"],
+        arrivals=ArrivalSpec(kind="mmpp", rate=0.01, rate_hi=0.12,
+                             dwell_mean_s=900.0),
+        engine=EngineKnobs(dt=5.0, tis_bin_s=8.0),
+        features=FeatureSpec(class_sep=1.2),
+    )
+    _burst_learner = LearnerSpec(enabled=True, min_votes_known=0)
+    register_scenario("bursty_admission", ScenarioSpec(
+        **_burst,
+        policy=PolicySpec(redundancy=_drip, routing=RoutingSpec(kind="scored"),
+                          learner=_burst_learner),
+    ))
+    register_scenario("bursty_admission_uncertain", ScenarioSpec(
+        **_burst,
+        policy=PolicySpec(redundancy=_drip, routing=RoutingSpec(kind="scored"),
+                          learner=_burst_learner,
+                          admission=AdmissionSpec(kind="uncertain")),
+    ))
+
+    # chance-level hard tasks (hard_scale=0: the crowd is pure noise on
+    # them) with difficulty VISIBLE in feature space (hard_sep_scale):
+    # the workload where plain uncertainty admission chases noise and the
+    # difficulty-aware uncertainty x learnability score should not —
+    # the PR-4 follow-up closed by AdmissionSpec(kind=
+    # "uncertain_learnable"). Variants via override on policy.admission.
+    register_scenario("chance_hard", ScenarioSpec(
+        window=8,
+        pool=_het["pool"],
+        arrivals=ArrivalSpec(kind="mmpp", rate=0.01, rate_hi=0.12,
+                             dwell_mean_s=900.0),
+        engine=EngineKnobs(dt=5.0, tis_bin_s=8.0),
+        difficulty=DifficultySpec(p_hard=0.35, hard_scale=0.0),
+        # wide separation on easy tasks + strongly shrunk separation on
+        # hard ones: difficulty is visible in feature space (a linear
+        # head over [x, x^2] separates the two ~0.9), which is what the
+        # learnability-aware admission score needs to stop re-admitting
+        # tasks the crowd can never resolve
+        features=FeatureSpec(class_sep=3.0, hard_sep_scale=0.1),
+        policy=PolicySpec(redundancy=_drip, routing=RoutingSpec(kind="scored"),
+                          learner=LearnerSpec(enabled=True,
+                                              min_votes_known=1)),
+    ))
+
+
+_seed()

@@ -1,0 +1,73 @@
+"""Registry smoke: enumerate every named scenario and run each one a tick
+or two on every compatible engine.
+
+    PYTHONPATH=src python -m repro.scenarios.smoke
+
+The CI ``scenarios`` step runs this so a scenario that stops compiling —
+a registry seed drifting from a renamed spec field, an engine dropping a
+policy a scenario demands — fails the build even if no benchmark
+exercises it. Each scenario is shrunk (few tasks, two stream ticks, one
+replication) so the whole registry finishes in well under a minute of
+simulated work per engine; the point is "does every (scenario, engine)
+pair still compile and produce finite metrics", not performance.
+"""
+from __future__ import annotations
+
+import math
+import sys
+import time
+
+from repro.scenarios.compile import engines
+from repro.scenarios.facade import run
+from repro.scenarios.registry import get_scenario, list_scenarios
+from repro.scenarios.spec import override
+
+
+def shrink(spec):
+    """A tiny but structurally identical copy of ``spec`` for smoke runs."""
+    small = {"n_tasks": min(spec.n_tasks, 4), "horizon": 2}
+    if spec.batch_size is not None:
+        small["batch_size"] = min(spec.batch_size, 4)
+    # a couple of simulated minutes bounds the events engine wall-clock
+    small["engine.max_batch_time"] = min(spec.engine.max_batch_time, 1800.0)
+    return override(spec, small)
+
+
+def main(argv=None) -> int:
+    t0 = time.time()
+    failures = []
+    for name in list_scenarios():
+        spec = get_scenario(name)
+        compat = engines(spec)
+        if not compat:
+            failures.append(f"{name}: no compatible engine")
+            print(f"[FAIL] {name}: no compatible engine")
+            continue
+        for engine in compat:
+            try:
+                res = run(shrink(spec), engine, n_reps=1, seed=0)
+                m = res["metrics"]
+                # inf is a documented sentinel (e.g. the time-in-system
+                # percentiles report inf when nothing finalized in a
+                # 2-tick run); NaN is never legitimate
+                bad = [k for k, v in m.items()
+                       if isinstance(v, float) and math.isnan(v)]
+                if bad:
+                    raise ValueError(f"NaN metrics: {bad}")
+                head = {k: m[k] for k in list(m)[:3]}
+                print(f"[ ok ] {name:28s} {engine:8s} {head}")
+            except Exception as e:  # noqa: BLE001 — report, don't abort
+                failures.append(f"{name}/{engine}: {type(e).__name__}: {e}")
+                print(f"[FAIL] {name:28s} {engine:8s} {e}")
+    n = len(list_scenarios())
+    print(f"# {n} scenarios, {len(failures)} failure(s), "
+          f"{time.time() - t0:.1f}s")
+    if failures:
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

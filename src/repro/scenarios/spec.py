@@ -1,0 +1,483 @@
+"""Declarative scenario/policy specs — the single vocabulary over all three
+engines.
+
+CLAMShell's contribution is a *composition* of latency techniques; the
+reproduction grew three engines that each exposed the composition through a
+different config surface (scalar ``CSConfig``, vectorized ``FastConfig``,
+streaming ``StreamConfig``). This module is the one declarative layer those
+surfaces compile from:
+
+  * :class:`ScenarioSpec` describes the WORKLOAD — how many tasks / how they
+    arrive (:class:`ArrivalSpec`), how hard they are and what the learner can
+    observe about them (:class:`DifficultySpec`, :class:`FeatureSpec`), and
+    who labels them (:class:`PoolSpec`: size, heterogeneity, churn).
+  * :class:`PolicySpec` describes the SYSTEM'S RESPONSE — straggler
+    mitigation, pool maintenance, redundancy/QC, worker-aware routing,
+    backlog admission, and hybrid-learner fusion — mirroring how FROG
+    (arXiv:1610.08411) frames routing/quality/latency as pluggable modules
+    over one task-assignment core.
+
+Every spec is a frozen dataclass, validated field-by-field at construction
+(``ValueError`` messages name the offending field), hashable (safe as a
+static jit argument), and registered as a *static* pytree node so specs can
+ride inside pytrees passed through ``jax.jit`` / ``jax.vmap`` without
+becoming tracers.
+
+Specs are engine-agnostic: ``repro.scenarios.compile`` lowers them to the
+engine configs, ``repro.scenarios.facade.run`` executes them, and the
+registry (``repro.scenarios.registry``) names the canonical workloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+
+_ARRIVAL_KINDS = ("batch", "poisson", "mmpp", "diurnal")
+_ADMISSION_KINDS = ("fifo", "uncertain", "uncertain_learnable")
+_ROUTING_KINDS = ("uniform", "scored")
+_LEARNER_KINDS = ("AL", "PL", "HL", "NL")
+
+
+def _fail(cls, field: str, msg: str):
+    raise ValueError(f"{cls.__name__}.{field}: {msg}")
+
+
+def _check(cls, cond: bool, field: str, msg: str):
+    if not cond:
+        _fail(cls, field, msg)
+
+
+def _static(cls):
+    """Frozen-dataclass decorator tail: register as a static pytree node."""
+    jax.tree_util.register_static(cls)
+    return cls
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class ArrivalSpec:
+    """How tasks enter the system.
+
+    ``kind="batch"`` is the closed-world workload (a finite task set
+    submitted up front — the events/simfast engines); the other kinds are
+    open-world arrival processes (the stream engine): homogeneous Poisson,
+    2-state Markov-modulated Poisson (bursty), or sinusoidal diurnal.
+    """
+    kind: str = "batch"
+    rate: float = 0.05            # tasks/s (poisson; mmpp calm; diurnal mean)
+    rate_hi: float = 0.2          # mmpp burst-state rate
+    dwell_mean_s: float = 600.0   # mmpp mean dwell per state
+    period_s: float = 86400.0     # diurnal period
+    amplitude: float = 0.8        # diurnal modulation depth in [0, 1)
+
+    def __post_init__(self):
+        c = ArrivalSpec
+        _check(c, self.kind in _ARRIVAL_KINDS, "kind",
+               f"must be one of {_ARRIVAL_KINDS}, got {self.kind!r}")
+        _check(c, self.rate > 0, "rate", f"must be > 0, got {self.rate}")
+        _check(c, self.rate_hi > 0, "rate_hi",
+               f"must be > 0, got {self.rate_hi}")
+        _check(c, self.dwell_mean_s > 0, "dwell_mean_s",
+               f"must be > 0, got {self.dwell_mean_s}")
+        _check(c, self.period_s > 0, "period_s",
+               f"must be > 0, got {self.period_s}")
+        _check(c, 0.0 <= self.amplitude < 1.0, "amplitude",
+               f"must be in [0, 1), got {self.amplitude}")
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class DifficultySpec:
+    """Task-difficulty mixture: a ``p_hard`` fraction of tasks scale worker
+    accuracy toward chance (``p_correct = 1/C + (acc - 1/C) * hard_scale``;
+    ``hard_scale=0`` makes hard tasks exactly chance-level)."""
+    p_hard: float = 0.0
+    hard_scale: float = 0.35
+
+    def __post_init__(self):
+        c = DifficultySpec
+        _check(c, 0.0 <= self.p_hard <= 1.0, "p_hard",
+               f"must be in [0, 1], got {self.p_hard}")
+        _check(c, 0.0 <= self.hard_scale <= 1.0, "hard_scale",
+               f"must be in [0, 1], got {self.hard_scale}")
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class FeatureSpec:
+    """The observable side of a task — class-conditional Gaussian features
+    the hybrid learner generalizes over. ``hard_sep_scale < 1`` makes hard
+    tasks hard for the MODEL too (their class separation shrinks by that
+    factor), which is what lets difficulty-aware admission learn to avoid
+    chance-level tasks from features alone."""
+    n_features: int = 8
+    class_sep: float = 1.8
+    hard_sep_scale: float = 1.0
+
+    def __post_init__(self):
+        c = FeatureSpec
+        _check(c, self.n_features >= 1, "n_features",
+               f"must be >= 1, got {self.n_features}")
+        _check(c, self.class_sep > 0, "class_sep",
+               f"must be > 0, got {self.class_sep}")
+        _check(c, 0.0 < self.hard_sep_scale <= 1.0, "hard_sep_scale",
+               f"must be in (0, 1], got {self.hard_sep_scale}")
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """Worker-pool size, heterogeneity, and churn (workers.Population
+    distributions + retainer-pool recruitment semantics)."""
+    pool_size: int = 15
+    n_shards: int = 1             # stream engine: independent pool shards
+    retainer: bool = True         # False = Base-NR cold recruitment
+    recruit_mean_s: float = 45.0
+    cold_recruit_mean_s: float = 200.0
+    session_mean_s: float = 1800.0
+    median_mu: float = 150.0      # median worker latency (lognormal)
+    sigma_ln: float = 1.0
+    cv_lo: float = 0.3
+    cv_hi: float = 1.2
+    acc_a: float = 18.0           # worker-accuracy Beta(acc_a, acc_b)
+    acc_b: float = 2.0
+    latency_floor: float = 2.0
+    bank: Optional[int] = None    # pre-drawn replacement workers per slot
+                                  # (None = engine default: 16 batch /
+                                  # 64 stream)
+    est_prior_acc: float = 0.85   # stream online-accuracy Beta prior
+    est_prior_n: float = 8.0
+
+    def __post_init__(self):
+        c = PoolSpec
+        _check(c, self.pool_size >= 1, "pool_size",
+               f"must be >= 1, got {self.pool_size}")
+        _check(c, self.n_shards >= 1, "n_shards",
+               f"must be >= 1, got {self.n_shards}")
+        for f in ("recruit_mean_s", "cold_recruit_mean_s", "session_mean_s",
+                  "median_mu", "sigma_ln", "acc_a", "acc_b"):
+            _check(c, getattr(self, f) > 0, f,
+                   f"must be > 0, got {getattr(self, f)}")
+        _check(c, 0.0 < self.cv_lo <= self.cv_hi, "cv_lo",
+               f"need 0 < cv_lo <= cv_hi, got cv_lo={self.cv_lo} "
+               f"cv_hi={self.cv_hi}")
+        _check(c, self.latency_floor >= 0, "latency_floor",
+               f"must be >= 0, got {self.latency_floor}")
+        _check(c, self.bank is None or self.bank >= 1, "bank",
+               f"must be None or >= 1, got {self.bank}")
+        _check(c, 0.0 < self.est_prior_acc < 1.0, "est_prior_acc",
+               f"must be in (0, 1), got {self.est_prior_acc}")
+        _check(c, self.est_prior_n > 0, "est_prior_n",
+               f"must be > 0, got {self.est_prior_n}")
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class EngineKnobs:
+    """Discretization/measurement knobs that belong to the simulation, not
+    the workload. ``dt=None`` uses the engine default (2 s batch tick /
+    5 s stream tick)."""
+    dt: Optional[float] = None
+    bundle_s: float = 64.0        # simfast event-bundling window
+    mitig_bundle_s: float = 12.0
+    max_batch_time: float = 3600.0
+    max_arrivals_per_tick: int = 64
+    tis_bins: int = 512           # stream time-in-system histogram
+    tis_bin_s: float = 4.0
+
+    def __post_init__(self):
+        c = EngineKnobs
+        _check(c, self.dt is None or self.dt > 0, "dt",
+               f"must be None or > 0, got {self.dt}")
+        for f in ("bundle_s", "mitig_bundle_s", "max_batch_time", "tis_bin_s"):
+            _check(c, getattr(self, f) > 0, f,
+                   f"must be > 0, got {getattr(self, f)}")
+        _check(c, self.max_arrivals_per_tick >= 1, "max_arrivals_per_tick",
+               f"must be >= 1, got {self.max_arrivals_per_tick}")
+        _check(c, self.tis_bins >= 2, "tis_bins",
+               f"must be >= 2, got {self.tis_bins}")
+
+
+# ---------------------------------------------------------------------------
+# policy side
+# ---------------------------------------------------------------------------
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class StragglerSpec:
+    """Straggler mitigation (paper §4): duplicate active tasks onto free
+    workers, first completion wins."""
+    enabled: bool = True
+    max_dup: int = 2
+
+    def __post_init__(self):
+        _check(StragglerSpec, self.max_dup >= 0, "max_dup",
+               f"must be >= 0, got {self.max_dup}")
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class MaintenanceSpec:
+    """Pool maintenance (paper §4.2): evict workers whose TermEst-corrected
+    latency estimate significantly exceeds ``pm_l`` (inf = off)."""
+    pm_l: float = float("inf")
+    use_termest: bool = True
+    min_obs: int = 3
+    z: float = 1.0
+    alpha: float = 1.0
+
+    def __post_init__(self):
+        c = MaintenanceSpec
+        _check(c, self.pm_l > 0, "pm_l", f"must be > 0, got {self.pm_l}")
+        _check(c, self.min_obs >= 1, "min_obs",
+               f"must be >= 1, got {self.min_obs}")
+        _check(c, self.z >= 0, "z", f"must be >= 0, got {self.z}")
+        _check(c, self.alpha > 0, "alpha",
+               f"must be > 0, got {self.alpha}")
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class RedundancySpec:
+    """Vote redundancy / QC. ``adaptive=False`` spends exactly ``votes``
+    votes per task (the batch engines' fixed ``votes_needed``);
+    ``adaptive=True`` drips ``max_outstanding`` at a time and finalizes
+    early once the posterior clears ``conf_threshold`` (stream engine)."""
+    adaptive: bool = False
+    votes: int = 1                # fixed votes_needed == adaptive votes_cap
+    conf_threshold: float = 0.92
+    min_votes: int = 1
+    max_outstanding: int = 1
+
+    def __post_init__(self):
+        c = RedundancySpec
+        _check(c, self.votes >= 1, "votes", f"must be >= 1, got {self.votes}")
+        _check(c, 0.5 < self.conf_threshold <= 1.0, "conf_threshold",
+               f"must be in (0.5, 1], got {self.conf_threshold}")
+        _check(c, 1 <= self.min_votes <= self.votes, "min_votes",
+               f"need 1 <= min_votes <= votes, got min_votes="
+               f"{self.min_votes} votes={self.votes}")
+        _check(c, self.max_outstanding >= 1, "max_outstanding",
+               f"must be >= 1, got {self.max_outstanding}")
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class RoutingSpec:
+    """Worker->task matching. ``uniform`` is the two-tier rank match
+    (``priority_match``); ``scored`` is FROG-style worker-aware matching
+    (accuracy to uncertain tasks, speed to easy ones)."""
+    kind: str = "uniform"
+    w_acc: float = 3.0
+    w_speed: float = 0.5
+    ewma_alpha: float = 0.25
+
+    def __post_init__(self):
+        c = RoutingSpec
+        _check(c, self.kind in _ROUTING_KINDS, "kind",
+               f"must be one of {_ROUTING_KINDS}, got {self.kind!r}")
+        _check(c, self.w_acc >= 0, "w_acc",
+               f"must be >= 0, got {self.w_acc}")
+        _check(c, self.w_speed >= 0, "w_speed",
+               f"must be >= 0, got {self.w_speed}")
+        _check(c, 0.0 < self.ewma_alpha <= 1.0, "ewma_alpha",
+               f"must be in (0, 1], got {self.ewma_alpha}")
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class AdmissionSpec:
+    """Backlog admission discipline. ``fifo`` is the arrival-order ring;
+    ``uncertain`` admits most-uncertain-first under the online model;
+    ``uncertain_learnable`` weights uncertainty by a learned learnability
+    estimate so chance-level-hard tasks stop hogging the window.
+    ``batch_replay`` gates admission until the window drains (the naive
+    fixed-batch baseline)."""
+    kind: str = "fifo"
+    batch_replay: bool = False
+
+    def __post_init__(self):
+        c = AdmissionSpec
+        _check(c, self.kind in _ADMISSION_KINDS, "kind",
+               f"must be one of {_ADMISSION_KINDS}, got {self.kind!r}")
+        if self.batch_replay and self.kind != "fifo":
+            _fail(c, "batch_replay",
+                  "batch_replay (drain-then-refill baseline) requires "
+                  f"kind='fifo', got kind={self.kind!r}")
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class LearnerSpec:
+    """Hybrid-learning policy: the streaming fusion knobs (``enabled`` turns
+    the online learner + product-of-experts fusion on in the stream engine)
+    and the batch-learning driver knobs (``kind``/``al_fraction``/... for
+    the events/simfast learning loops)."""
+    # streaming fusion (StreamLearnerConfig semantics)
+    enabled: bool = False
+    prior_scale: float = 1.0
+    ramp_n: float = 48.0
+    known_threshold: float = 0.97
+    min_votes_known: int = 1
+    fit_every: int = 4
+    fit_steps: int = 2
+    lr: float = 0.05
+    l2: float = 1e-3
+    buffer: int = 256
+    prioritize: bool = True
+    train_crowd_only: bool = True
+    refresh_every: int = 0        # offline full-confusion EM refresh cadence
+    refresh_iters: int = 8
+    # batch learning-loop drivers (events run_learning / simfast
+    # simulate_learning)
+    kind: str = "HL"
+    al_fraction: float = 0.5
+    al_batch: int = 10
+    decision_latency_s: float = 15.0
+    async_retrain: bool = True
+    uncertainty_sample: int = 400
+
+    def __post_init__(self):
+        c = LearnerSpec
+        _check(c, self.prior_scale >= 0, "prior_scale",
+               f"must be >= 0, got {self.prior_scale}")
+        _check(c, self.ramp_n > 0, "ramp_n",
+               f"must be > 0, got {self.ramp_n}")
+        _check(c, 0.5 < self.known_threshold <= 1.0, "known_threshold",
+               f"must be in (0.5, 1], got {self.known_threshold}")
+        _check(c, self.min_votes_known >= 0, "min_votes_known",
+               f"must be >= 0, got {self.min_votes_known}")
+        for f in ("fit_every", "fit_steps", "buffer"):
+            _check(c, getattr(self, f) >= 1, f,
+                   f"must be >= 1, got {getattr(self, f)}")
+        _check(c, self.lr > 0, "lr", f"must be > 0, got {self.lr}")
+        _check(c, self.l2 >= 0, "l2", f"must be >= 0, got {self.l2}")
+        _check(c, self.refresh_every >= 0, "refresh_every",
+               f"must be >= 0, got {self.refresh_every}")
+        _check(c, self.refresh_iters >= 1, "refresh_iters",
+               f"must be >= 1, got {self.refresh_iters}")
+        _check(c, self.kind in _LEARNER_KINDS, "kind",
+               f"must be one of {_LEARNER_KINDS}, got {self.kind!r}")
+        _check(c, 0.0 <= self.al_fraction <= 1.0, "al_fraction",
+               f"must be in [0, 1], got {self.al_fraction}")
+        _check(c, self.al_batch >= 1, "al_batch",
+               f"must be >= 1, got {self.al_batch}")
+        _check(c, self.decision_latency_s >= 0, "decision_latency_s",
+               f"must be >= 0, got {self.decision_latency_s}")
+        _check(c, self.uncertainty_sample >= 1, "uncertainty_sample",
+               f"must be >= 1, got {self.uncertainty_sample}")
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """The system's response to a workload: every CLAMShell latency/quality
+    technique as one pluggable module each."""
+    straggler: StragglerSpec = StragglerSpec()
+    maintenance: MaintenanceSpec = MaintenanceSpec()
+    redundancy: RedundancySpec = RedundancySpec()
+    routing: RoutingSpec = RoutingSpec()
+    admission: AdmissionSpec = AdmissionSpec()
+    learner: LearnerSpec = LearnerSpec()
+
+    def __post_init__(self):
+        c = PolicySpec
+        if self.admission.kind != "fifo" and not self.learner.enabled:
+            _fail(c, "admission.kind",
+                  f"admission.kind={self.admission.kind!r} ranks backlog "
+                  "tasks under the online model and therefore requires "
+                  "learner.enabled=True")
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One declarative workload + the policy that serves it.
+
+    Compiled to the engine configs by ``repro.scenarios.compile`` and run
+    through ``repro.scenarios.run``; see ``repro.scenarios.registry`` for
+    the named canonical scenarios.
+    """
+    name: str = ""
+    n_classes: int = 2
+    # closed-world (batch) workload shape
+    n_tasks: int = 60
+    batch_ratio: float = 1.0      # R = pool/batch -> batch = pool/R
+    batch_size: Optional[int] = None
+    n_records: int = 1
+    # open-world (stream) workload shape
+    horizon: int = 1000           # stream ticks per run
+    window: int = 32              # ring-buffer task slots per shard
+    backlog: int = 1024
+    # sub-specs
+    arrivals: ArrivalSpec = ArrivalSpec()
+    difficulty: DifficultySpec = DifficultySpec()
+    features: FeatureSpec = FeatureSpec()
+    pool: PoolSpec = PoolSpec()
+    policy: PolicySpec = PolicySpec()
+    engine: EngineKnobs = EngineKnobs()
+
+    def __post_init__(self):
+        c = ScenarioSpec
+        _check(c, self.n_classes >= 2, "n_classes",
+               f"must be >= 2, got {self.n_classes}")
+        _check(c, self.n_tasks >= 1, "n_tasks",
+               f"must be >= 1, got {self.n_tasks}")
+        _check(c, self.batch_ratio > 0, "batch_ratio",
+               f"must be > 0, got {self.batch_ratio}")
+        _check(c, self.batch_size is None or self.batch_size >= 1,
+               "batch_size", f"must be None or >= 1, got {self.batch_size}")
+        _check(c, self.n_records >= 1, "n_records",
+               f"must be >= 1, got {self.n_records}")
+        _check(c, self.horizon >= 1, "horizon",
+               f"must be >= 1, got {self.horizon}")
+        _check(c, self.window >= 1, "window",
+               f"must be >= 1, got {self.window}")
+        _check(c, self.backlog >= self.window, "backlog",
+               f"must be >= window ({self.window}), got {self.backlog}")
+        if self.policy.learner.enabled \
+                and self.features.n_features < self.n_classes:
+            _fail(c, "features.n_features",
+                  f"must be >= n_classes ({self.n_classes}) for one-hot "
+                  f"class means, got {self.features.n_features}")
+        if self.policy.redundancy.adaptive \
+                and not math.isfinite(self.policy.redundancy.votes):
+            _fail(c, "policy.redundancy.votes",
+                  "adaptive redundancy needs a finite votes cap")
+
+
+# ---------------------------------------------------------------------------
+# dotted-path override helper
+# ---------------------------------------------------------------------------
+
+def override(spec, overrides: dict):
+    """Functional update of a (possibly nested) frozen spec.
+
+    ``overrides`` maps dotted field paths to new values, e.g.::
+
+        override(get_scenario("stream_default"),
+                 {"pool.pool_size": 6, "window": 16})
+
+    Unknown paths raise ``ValueError`` naming the bad segment; every
+    intermediate node must be a dataclass. Validation reruns on each
+    replaced node (``__post_init__``), so an override cannot produce an
+    invalid spec silently.
+    """
+    def set_path(node, path, value):
+        head, _, rest = path.partition(".")
+        if not dataclasses.is_dataclass(node):
+            raise ValueError(f"override path {path!r}: {type(node).__name__} "
+                             "is not a spec dataclass")
+        if head not in {f.name for f in dataclasses.fields(node)}:
+            raise ValueError(f"override path {path!r}: "
+                             f"{type(node).__name__} has no field {head!r}")
+        if rest:
+            value = set_path(getattr(node, head), rest, value)
+        return dataclasses.replace(node, **{head: value})
+
+    for path, value in overrides.items():
+        spec = set_path(spec, path, value)
+    return spec

@@ -1,0 +1,92 @@
+"""The perf-regression gate must fail LOUDLY — a benchmark that silently
+stops emitting a baselined metric, or emits NaN, must exit non-zero with a
+message naming the metric, never quietly pass."""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.check_regression import compare, main  # noqa: E402
+
+
+def _write(tmp_path, sub, name, metrics):
+    d = tmp_path / sub
+    d.mkdir(exist_ok=True)
+    p = d / f"BENCH_{name}.json"
+    p.write_text(json.dumps({"name": name, "metrics": metrics}))
+    return str(d)
+
+
+BASE = {"a": {"value": 1.0, "direction": "higher"},
+        "b": {"value": 2.0, "direction": "info"}}
+
+
+def _run(tmp_path, art_metrics, capsys):
+    base = _write(tmp_path, "base", "x", BASE)
+    art = _write(tmp_path, "art", "x", art_metrics)
+    rc = main(["--baseline", base, "--artifacts", art])
+    return rc, capsys.readouterr().out
+
+
+def test_all_keys_present_within_tol_passes(tmp_path, capsys):
+    rc, out = _run(tmp_path, {"a": {"value": 0.9, "direction": "higher"},
+                              "b": {"value": 5.0, "direction": "info"}},
+                   capsys)
+    assert rc == 0
+    assert "within tolerance" in out
+
+
+def test_missing_baseline_key_fails_loudly(tmp_path, capsys):
+    """A baseline key absent from the fresh artifact is a hard failure
+    with a message naming the metric — even for info-direction metrics."""
+    rc, out = _run(tmp_path, {"a": {"value": 1.1, "direction": "higher"}},
+                   capsys)
+    assert rc == 1
+    assert "b missing from the freshly produced artifact" in out
+    assert "recalibrate" in out
+
+
+def test_regression_beyond_tolerance_fails(tmp_path, capsys):
+    rc, out = _run(tmp_path, {"a": {"value": 0.5, "direction": "higher"},
+                              "b": {"value": 2.0, "direction": "info"}},
+                   capsys)
+    assert rc == 1
+    assert "regressed" in out or "FAIL" in out
+
+
+def test_nan_artifact_value_fails(tmp_path, capsys):
+    rc, out = _run(tmp_path, {"a": {"value": float("nan"),
+                                    "direction": "higher"},
+                              "b": {"value": 2.0, "direction": "info"}},
+                   capsys)
+    assert rc == 1
+    assert "non-finite" in out
+
+
+def test_nan_fails_even_with_zero_baseline(tmp_path, capsys):
+    """The zero-baseline relative-comparison bypass must not exempt a
+    gated metric from the non-finite check."""
+    base = _write(tmp_path, "base", "x",
+                  {"z": {"value": 0.0, "direction": "lower"}})
+    art = _write(tmp_path, "art", "x",
+                 {"z": {"value": float("nan"), "direction": "lower"}})
+    rc = main(["--baseline", base, "--artifacts", art])
+    assert rc == 1
+    assert "non-finite" in capsys.readouterr().out
+
+
+def test_missing_artifact_file_fails(tmp_path, capsys):
+    base = _write(tmp_path, "base", "x", BASE)
+    (tmp_path / "art2").mkdir()
+    rc = main(["--baseline", base, "--artifacts", str(tmp_path / "art2")])
+    assert rc == 1
+    assert "artifact missing" in capsys.readouterr().out
+
+
+def test_compare_rows_shape():
+    rows = list(compare({"metrics": BASE},
+                        {"metrics": {"a": {"value": 1.2}}}, tol=0.3))
+    by_key = {r[0]: r for r in rows}
+    assert by_key["a"][5] is True            # improved, gated, ok
+    assert by_key["b"][2] is None            # missing
+    assert by_key["b"][4] and not by_key["b"][5]   # gated, not ok

@@ -1,0 +1,413 @@
+"""Unified repro.scenarios layer: spec validation, registry, compilation
+parity, facade runs/sweeps, and the deprecation surface.
+
+The load-bearing guarantee is DEFAULT-SPEC PARITY: for each seeded
+registry scenario, running through the facade produces bit-identical
+metrics to the pre-refactor engine entry points (the compilers produce
+exactly the configs the benchmarks used to hand-construct, and the facade
+calls the same engine functions with the same seeds).
+"""
+import dataclasses
+import importlib
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.scenarios.spec import override
+
+
+# --------------------------------------------------------------------------
+# spec validation
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ctor,field", [
+    (lambda: scenarios.ArrivalSpec(kind="bogus"), "ArrivalSpec.kind"),
+    (lambda: scenarios.ArrivalSpec(rate=0.0), "ArrivalSpec.rate"),
+    (lambda: scenarios.ArrivalSpec(amplitude=1.0), "ArrivalSpec.amplitude"),
+    (lambda: scenarios.DifficultySpec(p_hard=1.5), "DifficultySpec.p_hard"),
+    (lambda: scenarios.FeatureSpec(hard_sep_scale=0.0),
+     "FeatureSpec.hard_sep_scale"),
+    (lambda: scenarios.PoolSpec(pool_size=0), "PoolSpec.pool_size"),
+    (lambda: scenarios.PoolSpec(cv_lo=2.0, cv_hi=1.0), "PoolSpec.cv_lo"),
+    (lambda: scenarios.PoolSpec(bank=0), "PoolSpec.bank"),
+    (lambda: scenarios.EngineKnobs(dt=-1.0), "EngineKnobs.dt"),
+    (lambda: scenarios.StragglerSpec(max_dup=-1), "StragglerSpec.max_dup"),
+    (lambda: scenarios.MaintenanceSpec(pm_l=0.0), "MaintenanceSpec.pm_l"),
+    (lambda: scenarios.RedundancySpec(votes=0), "RedundancySpec.votes"),
+    (lambda: scenarios.RedundancySpec(votes=2, min_votes=3),
+     "RedundancySpec.min_votes"),
+    (lambda: scenarios.RedundancySpec(conf_threshold=0.4),
+     "RedundancySpec.conf_threshold"),
+    (lambda: scenarios.RoutingSpec(kind="greedy"), "RoutingSpec.kind"),
+    (lambda: scenarios.RoutingSpec(ewma_alpha=0.0), "RoutingSpec.ewma_alpha"),
+    (lambda: scenarios.AdmissionSpec(kind="lifo"), "AdmissionSpec.kind"),
+    (lambda: scenarios.LearnerSpec(kind="XL"), "LearnerSpec.kind"),
+    (lambda: scenarios.LearnerSpec(al_fraction=1.5),
+     "LearnerSpec.al_fraction"),
+    (lambda: scenarios.ScenarioSpec(n_classes=1), "ScenarioSpec.n_classes"),
+    (lambda: scenarios.ScenarioSpec(n_tasks=0), "ScenarioSpec.n_tasks"),
+    (lambda: scenarios.ScenarioSpec(window=64, backlog=32),
+     "ScenarioSpec.backlog"),
+])
+def test_invalid_field_raises_with_field_name(ctor, field):
+    with pytest.raises(ValueError, match=field.replace(".", r"\.")):
+        ctor()
+
+
+def test_contradictory_specs_raise():
+    # learner-driven admission without a learner
+    with pytest.raises(ValueError, match="admission.kind"):
+        scenarios.PolicySpec(
+            admission=scenarios.AdmissionSpec(kind="uncertain"))
+    # batch_replay is a FIFO-only baseline
+    with pytest.raises(ValueError, match="batch_replay"):
+        scenarios.AdmissionSpec(kind="uncertain", batch_replay=True)
+    # learner features must cover one-hot class means
+    with pytest.raises(ValueError, match="n_features"):
+        scenarios.ScenarioSpec(
+            n_classes=4, features=scenarios.FeatureSpec(n_features=2),
+            policy=scenarios.PolicySpec(
+                learner=scenarios.LearnerSpec(enabled=True)))
+
+
+def test_engine_compatibility_and_compile_rejections():
+    batch = scenarios.get_scenario("smallR1")
+    stream = scenarios.get_scenario("stream_default")
+    assert scenarios.engines(batch) == ("events", "simfast")
+    assert scenarios.engines(stream) == ("stream",)
+    with pytest.raises(ValueError, match="arrivals.kind"):
+        scenarios.to_stream_config(batch)
+    with pytest.raises(ValueError, match="arrivals.kind"):
+        scenarios.to_fast_config(stream)
+    adaptive_batch = override(batch, {
+        "policy.redundancy": scenarios.RedundancySpec(adaptive=True,
+                                                      votes=3)})
+    with pytest.raises(ValueError, match="redundancy.adaptive"):
+        scenarios.to_fast_config(adaptive_batch)
+    with pytest.raises(ValueError, match="cannot run"):
+        scenarios.run(batch, engine="stream")
+
+
+def test_override_dotted_paths():
+    spec = scenarios.get_scenario("stream_default")
+    got = override(spec, {"pool.pool_size": 6, "window": 16})
+    assert got.pool.pool_size == 6 and got.window == 16
+    assert spec.pool.pool_size == 8          # original untouched
+    with pytest.raises(ValueError, match="no field"):
+        override(spec, {"pool.nope": 1})
+    with pytest.raises(ValueError, match="PoolSpec.pool_size"):
+        override(spec, {"pool.pool_size": 0})   # overrides re-validate
+
+
+def test_specs_are_hashable_static_pytrees():
+    import jax
+    spec = scenarios.get_scenario("heterogeneous_pool")
+    assert hash(spec) == hash(scenarios.get_scenario("heterogeneous_pool"))
+    leaves = jax.tree_util.tree_leaves({"spec": spec, "x": 1})
+    assert leaves == [1]                      # spec is static, not a leaf
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+def test_registry_seeded_and_guarded():
+    names = scenarios.list_scenarios()
+    for expected in ("smallR1", "throughput_v3_pm", "stream_default",
+                     "heterogeneous_pool", "heterogeneous_routed",
+                     "chance_hard", "hybrid_small"):
+        assert expected in names
+    with pytest.raises(KeyError, match="unknown scenario"):
+        scenarios.get_scenario("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        scenarios.register_scenario("smallR1",
+                                    scenarios.get_scenario("smallR1"))
+
+
+def test_registry_register_get_run_deterministic():
+    """register -> get -> run is deterministic under a fixed seed."""
+    spec = override(scenarios.get_scenario("smallR1"), {"n_tasks": 8})
+    scenarios.register_scenario("tmp_det_check", spec, overwrite=True)
+    got = scenarios.get_scenario("tmp_det_check")
+    assert got.name == "tmp_det_check"
+    a = scenarios.run(got, engine="simfast", n_reps=2, seed=7)
+    b = scenarios.run(scenarios.get_scenario("tmp_det_check"),
+                      engine="simfast", n_reps=2, seed=7)
+    assert a["metrics"] == b["metrics"]
+    np.testing.assert_array_equal(np.asarray(a["raw"]["latency"]),
+                                  np.asarray(b["raw"]["latency"]))
+
+
+# --------------------------------------------------------------------------
+# compilation parity: seeded scenarios == the hand-built bench configs
+# --------------------------------------------------------------------------
+
+def test_compile_parity_batch_scenarios():
+    from repro.core.clamshell import CSConfig
+    from repro.core.simfast import FastConfig
+
+    assert scenarios.to_fast_config(scenarios.get_scenario("smallR1")) \
+        == FastConfig(pool_size=10, n_tasks=40)
+    assert scenarios.to_cs_config(scenarios.get_scenario("smallR1"),
+                                  seed=3) == CSConfig(pool_size=10, seed=3)
+    assert scenarios.to_fast_config(
+        scenarios.get_scenario("throughput_v3_pm")) \
+        == FastConfig(pool_size=15, n_tasks=400, batch_size=400,
+                      votes_needed=3, pm_l=150.0, max_batch_time=2e5)
+    assert scenarios.to_cs_config(
+        scenarios.get_scenario("throughput_v3_pm"), seed=0) \
+        == CSConfig(pool_size=15, votes_needed=3, pm_l=150.0,
+                    batch_ratio=15 / 400, seed=0)
+
+
+def test_compile_parity_stream_scenarios():
+    from repro.labelstream import (
+        ArrivalConfig, PolicyConfig, RoutingConfig, StreamConfig,
+        StreamLearnerConfig)
+    from repro.labelstream.router import heterogeneous_stream_config
+
+    dims = dict(n_shards=2, pool_size=8, window=32, dt=5.0, tis_bin_s=16.0,
+                arrivals=ArrivalConfig(kind="poisson", rate=0.01))
+    legacy = {
+        "stream_default": StreamConfig(
+            **dims, pm_l=240.0,
+            policy=PolicyConfig(adaptive=True, votes_cap=3,
+                                conf_threshold=0.95, min_votes=1,
+                                max_outstanding=1)),
+        "stream_batch_replay": StreamConfig(
+            **dims, batch_replay=True, straggler=False,
+            policy=PolicyConfig(adaptive=False, votes_cap=3)),
+        "heterogeneous_pool": heterogeneous_stream_config(),
+        "heterogeneous_routed": dataclasses.replace(
+            heterogeneous_stream_config(),
+            routing=RoutingConfig(enabled=True)),
+        "skewed_learner_fused": dataclasses.replace(
+            StreamConfig(**dims, pm_l=240.0,
+                         policy=PolicyConfig(adaptive=True, votes_cap=5,
+                                             conf_threshold=0.98,
+                                             min_votes=2,
+                                             max_outstanding=2)),
+            p_hard=0.25, hard_scale=0.3,
+            learner=StreamLearnerConfig(enabled=True, min_votes_known=1)),
+    }
+    for name, cfg in legacy.items():
+        assert scenarios.to_stream_config(scenarios.get_scenario(name)) \
+            == cfg, name
+
+
+# --------------------------------------------------------------------------
+# default-spec parity: facade run == legacy engine entry point, bit for bit
+# --------------------------------------------------------------------------
+
+def test_facade_stream_run_bit_identical():
+    from repro.labelstream.router import (
+        heterogeneous_stream_config, run_stream, stream_summary)
+
+    spec = scenarios.get_scenario("heterogeneous_pool")
+    res = scenarios.run(spec, engine="stream", horizon=50, n_reps=2, seed=0)
+    cfg = heterogeneous_stream_config()
+    legacy = stream_summary(cfg, run_stream(cfg, 50, n_reps=2, seed=0))
+    assert res["metrics"] == legacy
+
+
+def test_facade_simfast_run_bit_identical():
+    from repro.core.simfast import FastConfig, simulate
+    from repro.core.simfast_stats import summarize
+
+    spec = scenarios.get_scenario("smallR1")
+    res = scenarios.run(spec, engine="simfast", n_reps=4, seed=0)
+    legacy = simulate(FastConfig(pool_size=10, n_tasks=40), 4, seed=0)
+    assert res["metrics"] == dataclasses.asdict(summarize(legacy))
+    np.testing.assert_array_equal(np.asarray(res["raw"]["latency"]),
+                                  np.asarray(legacy["latency"]))
+
+
+def test_facade_events_run_bit_identical():
+    from repro.core.clamshell import ClamShell, CSConfig
+
+    spec = override(scenarios.get_scenario("smallR1"), {"n_tasks": 10})
+    res = scenarios.run(spec, engine="events", seed=2)
+    legacy = ClamShell(CSConfig(pool_size=10, seed=2)).run_labeling(10)
+    got = res["raw"][0]
+    assert got.total_time == legacy.total_time
+    assert got.task_latencies == legacy.task_latencies
+    assert got.cost == legacy.cost
+
+
+def test_engines_accept_specs_directly():
+    from repro.core.simfast import simulate
+    from repro.labelstream.router import run_stream
+
+    spec = override(scenarios.get_scenario("smallR1"), {"n_tasks": 8})
+    out = simulate(spec, 2, seed=0)
+    assert bool(np.asarray(out["done"]).all())
+    sspec = override(scenarios.get_scenario("stream_default"),
+                     {"pool.pool_size": 4, "window": 8})
+    out = run_stream(sspec, 10, n_reps=1, seed=0)
+    assert np.asarray(out["arrived"]).shape == (1,)
+
+
+# --------------------------------------------------------------------------
+# sweeps: vectorized axes compile once and match point runs
+# --------------------------------------------------------------------------
+
+def test_stream_sweep_matches_point_run():
+    spec = override(scenarios.get_scenario("heterogeneous_pool"),
+                    {"pool.pool_size": 4, "window": 8})
+    sw = scenarios.sweep(spec, axis="arrivals.rate",
+                         values=[0.006, spec.arrivals.rate], horizon=40,
+                         n_reps=2, seed=0)
+    assert sw["vectorized"]
+    point = scenarios.run(spec, engine="stream", horizon=40, n_reps=2,
+                          seed=0)
+    assert sw["results"][1] == point["metrics"]  # scale 1.0 == plain run
+
+
+def test_simfast_sweep_scales_move_latency():
+    spec = override(scenarios.get_scenario("smallR1"), {"n_tasks": 16})
+    sw = scenarios.sweep(spec, axis="pool.median_mu",
+                         values=[75.0, 300.0], engine="simfast", n_reps=8,
+                         seed=0)
+    assert sw["vectorized"]
+    assert sw["results"][0]["mean_latency"] < sw["results"][1]["mean_latency"]
+
+
+def test_sweep_fallback_axis():
+    spec = override(scenarios.get_scenario("smallR1"), {"n_tasks": 8})
+    sw = scenarios.sweep(spec, axis="policy.redundancy.votes",
+                         values=[1, 2], engine="simfast", n_reps=2, seed=0)
+    assert not sw["vectorized"]
+    assert len(sw["results"]) == 2
+
+
+def test_sweep_guards_axes_the_traced_scale_cannot_express():
+    """rate_scale multiplies the WHOLE arrival process, so an mmpp
+    'arrivals.rate' sweep (burst rate_hi is absolute) must take the
+    per-value override path; likewise SimScales.recruit scales the COLD
+    mean on a Base-NR pool, so 'pool.recruit_mean_s' must not vectorize
+    there."""
+    mmpp = override(scenarios.get_scenario("stream_default"),
+                    {"arrivals": scenarios.ArrivalSpec(kind="mmpp",
+                                                       rate=0.01),
+                     "pool.pool_size": 4, "window": 8})
+    sw = scenarios.sweep(mmpp, axis="arrivals.rate", values=[0.01, 0.02],
+                         horizon=10, n_reps=1, seed=0)
+    assert not sw["vectorized"]
+    base_nr = override(scenarios.get_scenario("smallR1"),
+                       {"n_tasks": 8, "pool.retainer": False})
+    sw2 = scenarios.sweep(base_nr, axis="pool.recruit_mean_s",
+                          values=[45.0, 90.0], engine="simfast", n_reps=2,
+                          seed=0)
+    assert not sw2["vectorized"]
+    # the retainer-pool case stays on the one-compilation path
+    sw3 = scenarios.sweep(override(scenarios.get_scenario("smallR1"),
+                                   {"n_tasks": 8}),
+                          axis="pool.recruit_mean_s", values=[45.0, 90.0],
+                          engine="simfast", n_reps=2, seed=0)
+    assert sw3["vectorized"]
+
+
+# --------------------------------------------------------------------------
+# deprecation surface
+# --------------------------------------------------------------------------
+
+def test_core_learner_shim_warns():
+    import repro.core.learner as shim
+    with pytest.warns(DeprecationWarning, match="repro.core.learner"):
+        importlib.reload(shim)
+    assert hasattr(shim, "LogisticLearner")
+
+
+def test_config_adapters_warn_and_round_trip():
+    from repro.core.clamshell import CSConfig
+    from repro.core.simfast import FastConfig
+    from repro.labelstream.router import heterogeneous_stream_config
+
+    cfg = heterogeneous_stream_config()
+    with pytest.warns(DeprecationWarning, match="StreamConfig"):
+        spec = scenarios.from_stream_config(cfg)
+    assert scenarios.to_stream_config(spec) == cfg
+
+    fc = FastConfig(pool_size=9, n_tasks=33, votes_needed=2, pm_l=200.0)
+    with pytest.warns(DeprecationWarning, match="FastConfig"):
+        spec = scenarios.from_fast_config(fc)
+    assert scenarios.to_fast_config(spec) == fc
+
+    cc = CSConfig(pool_size=12, votes_needed=2, learner="AL", al_batch=6)
+    with pytest.warns(DeprecationWarning, match="CSConfig"):
+        spec = scenarios.from_cs_config(cc)
+    assert scenarios.to_cs_config(spec, seed=0) == cc
+
+    with warnings.catch_warnings(), \
+            pytest.raises(ValueError, match="quality_threshold"):
+        warnings.simplefilter("ignore")
+        scenarios.from_cs_config(CSConfig(quality_threshold=0.7))
+
+
+# --------------------------------------------------------------------------
+# difficulty-aware admission (uncertainty x learnability)
+# --------------------------------------------------------------------------
+
+def test_learnable_admission_compiles_and_conserves():
+    spec = scenarios.get_scenario(
+        "chance_hard", {"policy.admission.kind": "uncertain_learnable",
+                        "pool.pool_size": 4, "window": 6})
+    res = scenarios.run(spec, engine="stream", horizon=60, n_reps=1, seed=0)
+    m = res["metrics"]
+    # conservation: arrived = finalized + still in pipe + dropped
+    raw = res["raw"]
+    arrived = int(np.asarray(raw["arrived"]).sum())
+    accounted = int(np.asarray(raw["done_all"]).sum()
+                    + np.asarray(raw["backlog_end"]).sum()
+                    + np.asarray(raw["in_flight_end"]).sum()
+                    + np.asarray(raw["dropped"]).sum())
+    assert arrived == accounted
+    assert np.isfinite(m["accuracy"])
+
+
+def test_learnable_admission_requires_learner():
+    with pytest.raises(ValueError, match="admission.kind"):
+        scenarios.PolicySpec(
+            admission=scenarios.AdmissionSpec(kind="uncertain_learnable"))
+    from repro.labelstream.router import StreamConfig, run_stream
+    from repro.labelstream.routing import RoutingConfig
+    with pytest.raises(ValueError, match="uncertain_learnable"):
+        run_stream(StreamConfig(
+            routing=RoutingConfig(admission="uncertain_learnable")), 2)
+
+
+def test_admit_scores_untrained_head_preserves_uncertain_ranking():
+    import jax.numpy as jnp
+    from repro.labelstream.routing import admit_scores
+    unc = jnp.asarray([0.9, 0.1, 0.5])
+    feat = jnp.ones((3, 4))
+    gW = jnp.zeros((8, 2))
+    gb = jnp.zeros((2,))
+    scores = admit_scores(unc, feat, gW, gb)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(unc) * 0.5,
+                               rtol=1e-6)
+
+
+def test_hard_sep_scale_shrinks_hard_task_features():
+    """hard_sep_scale < 1 must scale hard tasks' class means down (and
+    leave easy tasks untouched) — the signal the learnability head reads.
+    The default (1.0) path keeps the historical draw: the Python-level
+    gate in _task_features never multiplies, so the PR-3/PR-4 learner
+    scenarios stay bit-identical (their parity tests pin that)."""
+    import jax.numpy as jnp
+
+    from repro.labelstream.router import StreamLearnerConfig, _task_features
+
+    u1 = jnp.full((4, 8), 0.5)
+    u2 = jnp.full((4, 8), 0.25)            # cos(pi/2) = 0 -> no noise term
+    tl = jnp.asarray([0, 0, 1, 1])
+    diff = jnp.asarray([1.0, 0.2, 1.0, 0.2])   # easy, hard, easy, hard
+    base = _task_features(u1, u2, tl, diff, StreamLearnerConfig(), 2)
+    scaled = _task_features(u1, u2, tl, diff,
+                            StreamLearnerConfig(hard_sep_scale=0.25), 2)
+    np.testing.assert_allclose(np.asarray(scaled[0]), np.asarray(base[0]),
+                               atol=1e-5)   # easy rows identical
+    np.testing.assert_allclose(np.asarray(scaled[1]),
+                               np.asarray(base[1]) * 0.25, atol=1e-4)
