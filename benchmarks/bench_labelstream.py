@@ -30,12 +30,25 @@ metric list". Six sections:
      plain uncertainty chases noise it can never resolve, the learnability
      head should not.
 
+  7. device-scaling (``stream_sharded``) — the shard_map-partitioned tick
+     at forced host device counts, probed in fresh subprocesses (XLA_FLAGS
+     must precede the first jax import). Gated: bitwise single-device
+     parity (sha1 digest equality across device counts), conservation
+     across cross-shard steals, and the finalized count at FIXED dims in
+     smoke and full. Info-only: tasks/sec and speedup — virtual host
+     devices share the runner's cores, so forced-device wall-clock is
+     machine-dependent tick-machinery overhead, not real parallel speedup.
+     The full bench adds a ~10^5-task workload at 1/2/4/8 devices.
+
 Headline metrics land in ``BENCH_labelstream.json`` (simulated-time and
 per-task quantities — machine-independent) for the cross-PR regression
 gate. ``--smoke`` shrinks dims via registry overrides and runs in seconds.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import sys
 
 from benchmarks.common import emit, timed, write_bench_json
@@ -223,6 +236,71 @@ def _admission_difficulty(bench, smoke=False):
         rows["learnable"]["sustained_rate"]
 
 
+def _probe_devices(n_devices, horizon, reps, rate_scale, window):
+    """Spawn one ``benchmarks.scaling_probe`` subprocess with the forced
+    host-device flag set BEFORE the child's first jax import."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={max(n_devices, 1)}"
+    cmd = [sys.executable, "-m", "benchmarks.scaling_probe",
+           "--devices", str(n_devices), "--horizon", str(horizon),
+           "--reps", str(reps), "--rate-scale", str(rate_scale),
+           "--window", str(window)]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"scaling probe (devices={n_devices}) failed:\n"
+                           + proc.stderr[-4000:])
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def _scaling(bench, smoke):
+    """Section 7: the device-sharded tick vs device count.
+
+    FIXED dims in smoke and full for the gated keys (the committed
+    baseline pins this exact measurement, like the routing section);
+    the full bench adds a ~10^5-task workload as info rows."""
+    horizon, reps, load, window = 400, 2, 10.0, 8
+    res = {d: _probe_devices(d, horizon, reps, load, window)
+           for d in (1, 2)}
+    parity = all(r["digest"] == res[1]["digest"] for r in res.values())
+    cons = all(r["conservation_ok"] for r in res.values())
+    for d, r in res.items():
+        emit(f"labelstream_scaling_d{d}", r["wall_s"] * 1e6,
+             f"tasks_per_sec={r['tasks_per_sec']:.0f};"
+             f"arrived={r['arrived']};done_all={r['done_all']};"
+             f"stolen={r['stolen']};devices={r['devices']};"
+             f"digest={r['digest'][:12]}")
+    speedup = res[2]["tasks_per_sec"] / max(res[1]["tasks_per_sec"], 1e-9)
+    emit("labelstream_scaling_parity", 0.0,
+         f"bitwise_parity={int(parity)};conservation={int(cons)};"
+         f"speedup_2dev_x={speedup:.2f};"
+         "note=virtual_host_devices_share_cores_speedup_is_info_only")
+    bench.update({
+        "scaling_parity_ok": (float(parity), "higher"),
+        "scaling_conservation_ok": (float(cons), "higher"),
+        "scaling_finalized": (float(res[1]["done_all"]), "higher"),
+        "scaling_steals": float(res[1]["stolen"]),
+        "scaling_tasks_per_sec_d1": res[1]["tasks_per_sec"],
+        "scaling_tasks_per_sec_d2": res[2]["tasks_per_sec"],
+        "scaling_speedup_2dev_x": speedup,
+    })
+    if smoke:
+        return
+    # ~10^5 tasks through the tick machinery (info-only): 2500 ticks x
+    # 5 s x 0.04/s x 25x offered x 8 reps ~= 1e5 arrivals
+    big = {d: _probe_devices(d, 2500, 8, 25.0, window)
+           for d in (1, 2, 4, 8)}
+    for d, r in big.items():
+        emit(f"labelstream_scaling_large_d{d}", r["wall_s"] * 1e6,
+             f"tasks_per_sec={r['tasks_per_sec']:.0f};"
+             f"arrived={r['arrived']};digest={r['digest'][:12]}")
+        bench[f"scaling_large_tasks_per_sec_d{d}"] = r["tasks_per_sec"]
+    bench["scaling_large_tasks"] = float(big[1]["arrived"])
+    bench["scaling_large_parity_ok"] = float(
+        all(r["digest"] == big[1]["digest"] for r in big.values()))
+
+
 def run(smoke: bool = False):
     horizon = 700 if smoke else 2500
     reps = 2 if smoke else 4
@@ -237,6 +315,7 @@ def run(smoke: bool = False):
         _learner_vs_ds(smoke, horizon, reps, bench)
         _routing_vs_uniform(bench)
         _admission_difficulty(bench, smoke=True)
+        _scaling(bench, smoke=True)
         write_bench_json("labelstream", bench,
                          meta={"horizon": horizon, "reps": reps,
                                "smoke": True})
@@ -282,6 +361,9 @@ def run(smoke: bool = False):
 
     # -- 6: difficulty-aware admission on chance-level hard tasks ---------
     _admission_difficulty(bench)
+
+    # -- 7: device-scaling of the shard_map-partitioned tick --------------
+    _scaling(bench, smoke=False)
     write_bench_json("labelstream", bench,
                      meta={"horizon": horizon, "reps": reps, "smoke": False})
 

@@ -21,7 +21,7 @@ from repro.core.events import EventLoop
 from repro.core.crowd import RetainerPool, Task
 from repro.core.lifeguard import LifeGuard
 from repro.core.maintenance import Maintainer
-from repro.learning.compat import LogisticLearner
+from repro.learning import LogisticLearner
 from repro.core.workers import Population
 
 

@@ -607,6 +607,20 @@ def _simulate_sharded(cfg: FastConfig, keys, true_labels):
     return jax.vmap(lambda k: _simulate_one(cfg, k, true_labels))(keys)
 
 
+def _pad_keys(keys, pad: int):
+    """Pad a (n,) typed-key batch by repeating the last key ``pad`` times.
+
+    Padding the *batch* (instead of splitting n+pad keys) keeps every real
+    replication's key identical to the unsharded run, so device-sharded
+    results are bit-for-bit the single-device results once the padded rows
+    are dropped."""
+    if pad == 0:
+        return keys
+    kd = jax.random.key_data(keys)
+    kd = jnp.concatenate([kd, jnp.broadcast_to(kd[-1:], (pad,) + kd.shape[1:])])
+    return jax.random.wrap_key_data(kd)
+
+
 def _as_fast_config(cfg) -> FastConfig:
     """Accept a FastConfig or a declarative ``repro.scenarios``
     ScenarioSpec (compiled through the unified spec layer)."""
@@ -639,7 +653,7 @@ def simulate(cfg, n_reps: int, *, seed: int = 0,
         # pad the key batch to a device multiple so sharding never silently
         # degrades to one device, then drop the padded replications
         pad = (-n_reps) % D
-        keys = jax.random.split(jax.random.key(seed), n_reps + pad)
+        keys = _pad_keys(jax.random.split(jax.random.key(seed), n_reps), pad)
         out = _simulate_sharded(cfg, keys.reshape(D, -1), true_labels)
         return {k: v.reshape(n_reps + pad, *v.shape[2:])[:n_reps]
                 for k, v in out.items()}
@@ -653,8 +667,15 @@ def _simulate_swept(cfg: FastConfig, keys, true_labels, scales):
         lambda k: _simulate_one(cfg, k, true_labels, sc))(keys))(scales)
 
 
+@functools.partial(jax.pmap, static_broadcasted_argnums=0,
+                   in_axes=(None, None, None, 0))
+def _simulate_swept_pmap(cfg: FastConfig, keys, true_labels, scales):
+    return jax.vmap(lambda sc: jax.vmap(
+        lambda k: _simulate_one(cfg, k, true_labels, sc))(keys))(scales)
+
+
 def simulate_swept(cfg, n_reps: int, scales: SimScales, *, seed: int = 0,
-                   true_labels=None):
+                   true_labels=None, shard: bool = True):
     """One-compilation scenario sweep over the :class:`SimScales` axes.
 
     ``scales`` is a SimScales whose leaves share a leading sweep axis
@@ -664,6 +685,12 @@ def simulate_swept(cfg, n_reps: int, scales: SimScales, *, seed: int = 0,
     like per-replication cost. Returns stacked arrays with leading dims
     ``(V, n_reps)``. This is the ``repro.scenarios.sweep`` backend for
     the simfast engine's continuous pool axes.
+
+    With multiple local devices and ``shard=True`` the sweep axis is
+    additionally pmapped: sweep points are padded to a device multiple
+    (repeating the last point), split ``(D, V/D)`` across devices, and the
+    padding dropped on the way out — every device traces the same program,
+    so results are bit-identical to the single-device path.
     """
     cfg = _as_fast_config(cfg)
     if true_labels is None:
@@ -674,6 +701,15 @@ def simulate_swept(cfg, n_reps: int, scales: SimScales, *, seed: int = 0,
     scales = SimScales(*[jnp.broadcast_to(jnp.asarray(leaf, jnp.float32), (V,))
                          for leaf in scales])
     keys = jax.random.split(jax.random.key(seed), n_reps)
+    D = jax.local_device_count()
+    if shard and D > 1 and V >= D:
+        pad = (-V) % D
+        padded = SimScales(*[
+            jnp.concatenate([leaf, jnp.broadcast_to(leaf[-1:], (pad,))])
+            .reshape(D, -1) for leaf in scales])
+        out = _simulate_swept_pmap(cfg, keys, true_labels, padded)
+        return {k: v.reshape(V + pad, *v.shape[2:])[:V]
+                for k, v in out.items()}
     return _simulate_swept(cfg, keys, true_labels, scales)
 
 
@@ -867,11 +903,9 @@ def simulate_learning(cfg: FastConfig, X, y, X_test, y_test, *,
     return curve, dict(W=W, b=b, labeled=labeled, y_obs=y_obs)
 
 
-@functools.partial(jax.jit,
-                   static_argnums=(0, 5, 6, 7, 8, 9))
-def _learning_batch_jit(bcfg: FastConfig, X, y, X_test, y_test, rounds,
-                        k_active, n_passive, fit_steps, use_kernel, keys,
-                        decision_latency_s):
+def _learning_batch_impl(bcfg: FastConfig, X, y, X_test, y_test, rounds,
+                         k_active, n_passive, fit_steps, use_kernel, keys,
+                         decision_latency_s):
     uk = None if use_kernel else False
 
     def one_rep(key):
@@ -905,12 +939,21 @@ def _learning_batch_jit(bcfg: FastConfig, X, y, X_test, y_test, rounds,
     return jax.vmap(one_rep)(keys)
 
 
+_learning_batch_jit = functools.partial(
+    jax.jit, static_argnums=(0, 5, 6, 7, 8, 9))(_learning_batch_impl)
+
+_learning_batch_pmap = functools.partial(
+    jax.pmap, static_broadcasted_argnums=(0, 5, 6, 7, 8, 9),
+    in_axes=(None, None, None, None, None, None, None, None, None, None,
+             0, None))(_learning_batch_impl)
+
+
 def simulate_learning_batch(cfg: FastConfig, X, y, X_test, y_test, *,
                             rounds: int = 10, n_reps: int = 64,
                             k_active: Optional[int] = None, seed: int = 0,
                             fit_steps: int = 60,
                             decision_latency_s: float = 15.0,
-                            use_kernel: bool = True):
+                            use_kernel: bool = True, shard: bool = True):
     """Vectorized hybrid learning: scan over rounds, vmap over replications.
 
     The whole fit -> select -> crowd-vote -> refit loop is one jitted
@@ -921,7 +964,9 @@ def simulate_learning_batch(cfg: FastConfig, X, y, X_test, y_test, *,
     replications" item. No host round-trips inside the loop, so hundreds of
     replications advance in lock-step and per-replication cost drops by the
     batch width (see ``benchmarks/bench_hybrid.py``; the acceptance floor is
-    10x replications/sec at >= 64 reps).
+    10x replications/sec at >= 64 reps). With multiple local devices and
+    ``shard=True`` the replication batch is additionally pmapped across
+    devices (same pad/reshape/drop pattern as :func:`simulate`).
 
     Returns a dict of stacked arrays with leading dim ``n_reps``:
     ``curve`` = {t, n_labeled, acc} each (n_reps, rounds+1) — curve[i]
@@ -939,6 +984,17 @@ def simulate_learning_batch(cfg: FastConfig, X, y, X_test, y_test, *,
     n_passive = p - k_active
     bcfg = dataclasses.replace(cfg, n_tasks=p, batch_size=p,
                                n_classes=n_classes)
+    D = jax.local_device_count()
+    if shard and D > 1 and n_reps >= D:
+        pad = (-n_reps) % D
+        keys = _pad_keys(jax.random.split(jax.random.key(seed), n_reps), pad)
+        out = _learning_batch_pmap(
+            bcfg, X, jnp.asarray(y, jnp.int32), X_test,
+            jnp.asarray(np.asarray(y_test), jnp.int32), int(rounds),
+            int(k_active), int(n_passive), int(fit_steps), bool(use_kernel),
+            keys.reshape(D, -1), jnp.float32(decision_latency_s))
+        return jax.tree_util.tree_map(
+            lambda v: v.reshape(n_reps + pad, *v.shape[2:])[:n_reps], out)
     keys = jax.random.split(jax.random.key(seed), n_reps)
     return _learning_batch_jit(
         bcfg, X, jnp.asarray(y, jnp.int32), X_test,

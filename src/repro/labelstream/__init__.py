@@ -30,9 +30,11 @@ _EXPORTS = {
     "learnability_features": "routing",
     "StreamConfig": "router",
     "StreamLearnerConfig": "router",
+    "ShardingConfig": "router",
     "heterogeneous_stream_config": "router",
     "run_stream": "router",
     "run_stream_sweep": "router",
+    "run_stream_votes_sweep": "router",
     "stream_summary": "router",
 }
 

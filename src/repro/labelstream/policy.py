@@ -50,26 +50,34 @@ def uncertainty(log_posterior):
     return (1.0 - confidence(log_posterior)) * C / max(C - 1, 1)
 
 
-def target_outstanding(n_votes, pol: PolicyConfig):
+def target_outstanding(n_votes, pol: PolicyConfig, cap=None):
     """How many assignments a task WANTS concurrently active right now.
 
     Fixed policy floods the full remaining budget (the batch engines'
     semantics: ``votes_needed`` parallel votes); adaptive drips
     ``max_outstanding`` at a time so the posterior is consulted between
     votes. Never exceeds the remaining budget, so total votes stay <= cap.
+    ``cap`` overrides ``pol.votes_cap`` with a (possibly traced) effective
+    budget — the masked-cap hook behind the one-compilation votes sweep.
     """
-    remaining = jnp.maximum(pol.votes_cap - n_votes, 0)
+    cap = pol.votes_cap if cap is None else cap
+    remaining = jnp.maximum(cap - n_votes, 0)
     if not pol.adaptive:
         return remaining
     return jnp.minimum(remaining, pol.max_outstanding)
 
 
-def should_finalize(log_posterior, n_votes, pol: PolicyConfig):
-    """(finalize, conf): early-stop when confident, hard-stop at the cap."""
+def should_finalize(log_posterior, n_votes, pol: PolicyConfig, cap=None):
+    """(finalize, conf): early-stop when confident, hard-stop at the cap.
+
+    ``cap`` overrides ``pol.votes_cap`` (traced effective budget for the
+    one-compilation votes sweep); ``None`` keeps the static policy cap.
+    """
+    cap = pol.votes_cap if cap is None else cap
     conf = confidence(log_posterior)
     early = pol.adaptive & (conf >= pol.conf_threshold) \
         & (n_votes >= pol.min_votes)
-    at_cap = n_votes >= pol.votes_cap
+    at_cap = n_votes >= cap
     return (n_votes > 0) & (early | at_cap), conf
 
 

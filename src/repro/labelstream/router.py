@@ -117,6 +117,33 @@ class StreamLearnerConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardingConfig:
+    """Device topology for the streaming tick (engine-native lowering of
+    ``repro.scenarios.ShardingSpec``).
+
+    With ``n_devices > 1`` the tick runs under ``shard_map`` over a 1-D
+    ``("shard",)`` mesh (``repro.launch.mesh.make_stream_mesh``): each
+    device owns ``n_shards / n_devices`` shard groups — ring-buffer window,
+    retainer pool and backlog FIFO all live device-resident inside the scan
+    carry, and only reduced metrics leave the mesh. Arrival sampling and
+    the shared learner are computed replicated from the same keys on every
+    device, so any device count produces bit-identical results.
+
+    ``steal="pressure"`` adds cross-shard work stealing each tick: shards
+    exchange fixed-shape backlog-depth summaries (all-gather), shards more
+    than ``steal_slack`` tasks above the global mean donate up to
+    ``steal_max`` of their OLDEST backlog entries, and shards below the
+    mean claim them in deterministic shard order (FIFO admission only —
+    a backlog entry is an arrival time, so moving it between shards
+    preserves task identity and conservation).
+    """
+    n_devices: int = 1
+    steal: str = "none"           # "none" | "pressure"
+    steal_max: int = 4            # max tasks a donor shard exports per tick
+    steal_slack: int = 2          # backlog excess over global mean to donate
+
+
+@dataclasses.dataclass(frozen=True)
 class StreamConfig:
     """Static configuration for the streaming service (hashable)."""
     n_shards: int = 2
@@ -177,6 +204,8 @@ class StreamConfig:
     # time-in-system histogram (steady-state percentiles)
     tis_bins: int = 512
     tis_bin_s: float = 4.0
+    # device topology: shard groups + cross-shard work stealing
+    sharding: ShardingConfig = ShardingConfig()
 
     @property
     def fast(self) -> FastConfig:
@@ -292,9 +321,14 @@ def _task_features(u1, u2, tl, diff, L: StreamLearnerConfig, C: int):
     return base + nrm
 
 def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
-                warmup_t, lW, lb, fuse_w, gW, gb):
+                warmup_t, lW, lb, fuse_w, gW, gb, cap_eff=None):
     P, Ws, C = cfg.pool_size, cfg.window, cfg.n_classes
     Q, M, cap = cfg.backlog, cfg.max_arrivals_per_tick, cfg.policy.votes_cap
+    # cap_eff is the (possibly traced) EFFECTIVE vote budget for the masked
+    # votes-cap sweep: buffers stay sized at the static cap (= the sweep
+    # max), the effective cap gates vote admission / finalization /
+    # outstanding targets, and columns past it are never touched or read
+    cap_t = cap if cap_eff is None else cap_eff
     pol, fast, L, R = cfg.policy, cfg.fast, cfg.learner, cfg.routing
     up = _uniform_block(seed, step, 8 * P).reshape(8, P)
 
@@ -414,7 +448,7 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
     prior_ct = ((tid[None, :] == tid[:, None]) & comp[None, :]
                 & (pr[None, :] < pr[:, None])).sum(-1).astype(jnp.int32)
     vpos = win["n_votes"][a_idx] + prior_ct
-    keep = comp & (vpos < cap)
+    keep = comp & (vpos < cap_t)
     tid_k = jnp.where(keep, tid, Ws)
     vpos_k = jnp.where(keep, vpos, 0).clip(0, cap - 1)
     win["vote_wid"] = win["vote_wid"].at[tid_k, vpos_k].set(
@@ -471,7 +505,7 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
         known_fin = known
 
     # ---- finalization (adaptive redundancy) -----------------------------
-    fin, conf = should_finalize(fused, win["n_votes"], pol)
+    fin, conf = should_finalize(fused, win["n_votes"], pol, cap=cap_eff)
     fin = (fin | known_fin) & win["active"]
     result = fused.argmax(-1)
     tis = jnp.where(fin, t - win["arrival_t"], 0.0)
@@ -538,7 +572,7 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
         & (ws["session_end"] > t)
     n_asg = jnp.zeros((Ws + 1,), jnp.int32).at[
         jnp.where(ws["assigned"] >= 0, ws["assigned"], Ws)].add(1)[:Ws]
-    want = target_outstanding(win["n_votes"], pol)
+    want = target_outstanding(win["n_votes"], pol, cap=cap_eff)
     if L.enabled:
         # a model-known task requests only the crowd votes it still needs
         # to clear the min_votes_known floor — the learner posterior covers
@@ -632,30 +666,136 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
 
 
 # --------------------------------------------------------------------------
+# cross-shard work stealing
+# --------------------------------------------------------------------------
+
+def _steal_plan(counts, steal_max: int, slack: int):
+    """Deterministic fixed-shape rebalance plan from global backlog depths.
+
+    ``counts`` is the (S,)-shaped all-gathered backlog-pressure summary.
+    Shards more than ``slack`` above the global mean donate up to
+    ``steal_max`` tasks, shards below the mean claim up to ``steal_max``;
+    the matched volume ``min(sum(give), sum(take))`` is filled greedily in
+    shard order on both sides, so every device computes the identical plan
+    from the identical summary (donor and receiver sets are disjoint:
+    donors sit strictly above the mean, receivers strictly below)."""
+    S = counts.shape[0]
+    target = counts.sum() // S
+    give0 = jnp.clip(counts - target - slack, 0, steal_max)
+    take0 = jnp.clip(target - counts, 0, steal_max)
+    vol = jnp.minimum(give0.sum(), take0.sum())
+    give = jnp.clip(vol - (jnp.cumsum(give0) - give0), 0, give0)
+    take = jnp.clip(vol - (jnp.cumsum(take0) - take0), 0, take0)
+    return give, take
+
+
+def _steal_rebalance(cfg: StreamConfig, bl, lo, axis_name):
+    """Move backlog work from hot shards to starved ones (FIFO layout).
+
+    Donors pop their OLDEST entries (head side, preserving arrival times =
+    task identity under FIFO admission), the donations are all-gathered as
+    a fixed (S, steal_max) block keyed by deterministic donation rank, and
+    receivers append their claimed ranks at the tail. Pure data movement:
+    the global backlog multiset is unchanged (conservation), and the plan
+    is a function of the gathered depth summary only (determinism).
+    Returns (bl, received, donated) with (S_local,) per-shard counts."""
+    sh = cfg.sharding
+    S, Q, K = cfg.n_shards, cfg.backlog, sh.steal_max
+    Sl = bl["count"].shape[0]
+
+    def _gat(x):
+        if axis_name is None:
+            return x
+        return jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
+
+    counts = _gat(bl["count"])                              # (S,)
+    give, take = _steal_plan(counts, K, sh.steal_slack)
+    gcum = jnp.cumsum(give) - give                          # donation ranks
+    tcum = jnp.cumsum(take) - take                          # claim ranks
+    sl = lambda x: jax.lax.dynamic_slice_in_dim(x, lo, Sl)
+    give_l, take_l, tcum_l = sl(give), sl(take), sl(tcum)
+    k = jnp.arange(K)
+    # donors pop their oldest entries off the ring head
+    pos = (bl["head"][:, None] + k[None, :]) % Q            # (Sl, K)
+    don_l = jnp.take_along_axis(bl["times"][:, :Q], pos, axis=1)
+    head = (bl["head"] + give_l) % Q
+    count = bl["count"] - give_l
+    # global donation pool in deterministic rank order
+    don = _gat(don_l)                                       # (S, K)
+    validd = k[None, :] < give[:, None]
+    ranks = jnp.where(validd, gcum[:, None] + k[None, :], S * K)
+    pool = jnp.zeros((S * K + 1,)).at[ranks.reshape(-1)].set(
+        jnp.where(validd, don, 0.0).reshape(-1))[:S * K]
+    # receivers claim consecutive ranks and append at their tail
+    validc = k[None, :] < take_l[:, None]
+    incoming = pool[jnp.where(validc, tcum_l[:, None] + k[None, :], 0)]
+    rows = jnp.arange(Sl)[:, None]
+    posr = (head[:, None] + count[:, None] + k[None, :]) % Q
+    times = bl["times"].at[rows, jnp.where(validc, posr, Q)].set(
+        jnp.where(validc, incoming, 0.0))
+    bl = dict(times=times, head=head, count=count + take_l)
+    return bl, take_l, give_l
+
+
+# --------------------------------------------------------------------------
 # driver
 # --------------------------------------------------------------------------
 
-def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
+def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
+             cap_eff=None, axis_name=None):
+    """One replication of the streaming service.
+
+    ``axis_name`` switches on device sharding: the function then runs
+    INSIDE ``shard_map`` over a 1-D mesh of ``cfg.sharding.n_devices``
+    devices, each owning ``n_shards / n_devices`` shard groups. Everything
+    derived from ``key`` (init keys, counter seeds, arrivals, shard
+    assignment) is computed replicated and sliced locally, per-shard
+    metrics accumulate in the carry and are all-gathered back into
+    canonical shard order before the final reduction — so the reduction
+    code (and its float summation order) is IDENTICAL for every device
+    count, which is what pins single-device bit-parity. ``cap_eff`` is the
+    traced effective vote budget for the masked votes-cap sweep."""
     from repro.learning import linear
 
-    S, L = cfg.n_shards, cfg.learner
+    S, L, sh = cfg.n_shards, cfg.learner, cfg.sharding
+    D = sh.n_devices if axis_name is not None else 1
+    Sl = S // D                            # shard groups on this device
+    di = jax.lax.axis_index(axis_name) if axis_name is not None else 0
+    lo = di * Sl
+
+    def _gat(x):
+        if axis_name is None:
+            return x
+        return jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
+
+    def _gsum(x):
+        v = x.sum()
+        return jax.lax.psum(v, axis_name) if axis_name is not None else v
+
     k_init, k_seed, k_run = jax.random.split(key, 3)
-    ws, banks, win, bl = jax.vmap(lambda k: _init_shard(cfg, k))(
-        jax.random.split(k_init, S))
+    # replicated full-width draws, sliced to the local shard group (typed
+    # keys travel as key_data: extended dtypes don't support dynamic_slice)
+    init_kd = jax.random.key_data(jax.random.split(k_init, S))
     seeds = jax.random.bits(k_seed, (S,), jnp.uint32)
+    if axis_name is not None:
+        init_kd = jax.lax.dynamic_slice_in_dim(init_kd, lo, Sl)
+        seeds = jax.lax.dynamic_slice_in_dim(seeds, lo, Sl)
+    ws, banks, win, bl = jax.vmap(
+        lambda kd: _init_shard(cfg, jax.random.wrap_key_data(kd)))(init_kd)
+    zi = lambda: jnp.zeros((Sl,), jnp.int32)
     state = dict(
         t=jnp.zeros(()), step=jnp.zeros((), jnp.int32), key=k_run,
         arr=init_arrival_state(cfg.arrivals),
         ws=ws, banks=banks, win=win, bl=bl,
-        hist=jnp.zeros((cfg.tis_bins,), jnp.int32),
-        done=jnp.zeros((), jnp.int32), correct=jnp.zeros((), jnp.int32),
-        sum_tis=jnp.zeros(()), votes_fin=jnp.zeros((), jnp.int32),
-        completions=jnp.zeros((), jnp.int32),
-        done_all=jnp.zeros((), jnp.int32),
-        dropped=jnp.zeros((), jnp.int32),
+        hist=jnp.zeros((Sl, cfg.tis_bins), jnp.int32),
+        done=zi(), correct=zi(),
+        sum_tis=jnp.zeros((Sl,)), votes_fin=zi(),
+        completions=zi(), done_all=zi(), dropped=zi(),
+        stolen=zi(), donated=zi(),
+        over=jnp.zeros((), jnp.int32),
         arrived=jnp.zeros((), jnp.int32),
         arrived_warm=jnp.zeros((), jnp.int32),
-        model_known=jnp.zeros((), jnp.int32),
+        model_known=zi(),
     )
     if L.enabled:
         # one learner per replication, shared across shards; finalized
@@ -677,6 +817,9 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
         t, step = state["t"], state["step"]
         key, k_arr, k_sid = jax.random.split(state["key"], 3)
         warm = t >= warmup_t
+        # arrivals + shard assignment are REPLICATED draws (every device
+        # samples the same stream from the same key); each device then
+        # slices out its own shard group's arrival counts
         n_new, arr, _rate = sample_arrivals(cfg.arrivals, state["arr"],
                                             k_arr, t, cfg.dt, rate_scale)
         n_cap = jnp.minimum(n_new, cap_total)
@@ -686,6 +829,8 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
             jnp.where(valid, sid, S)].add(1)[:S]
         over = (n_arr - M).clip(0).sum() + (n_new - n_cap)
         n_arr = jnp.minimum(n_arr, M)
+        if axis_name is not None:
+            n_arr = jax.lax.dynamic_slice_in_dim(n_arr, lo, Sl)
 
         if L.enabled:
             lW, lb = state["learn"].W, state["learn"].b
@@ -703,16 +848,26 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
             gW = jnp.zeros((2, 2))
             gb = jnp.zeros((2,))
         ws, win, bl, m, train = jax.vmap(
-            functools.partial(_shard_tick, cfg),
-            in_axes=(0, 0, 0, 0, 0, None, None, 0, None, None, None, None,
-                     None, None),
+            lambda w, bk, wi, b, na, sd: _shard_tick(
+                cfg, w, bk, wi, b, na, t, step, sd, warmup_t, lW, lb,
+                fuse_w, gW, gb, cap_eff=cap_eff),
         )(state["ws"], state["banks"], state["win"], state["bl"],
-          n_arr, t, step, seeds, warmup_t, lW, lb, fuse_w, gW, gb)
+          n_arr, seeds)
+
+        if sh.steal != "none":
+            bl, got, gave = _steal_rebalance(cfg, bl, lo, axis_name)
+        else:
+            got = gave = jnp.zeros((Sl,), jnp.int32)
 
         new = dict(state)
         if L.enabled:
-            # push this tick's finalized examples into the replay ring
+            # push this tick's finalized examples into the replay ring.
+            # The learner is SHARED across shards: the training tree is
+            # all-gathered into canonical shard order first, so every
+            # device pushes the identical examples and fits the identical
+            # replicated model
             B = L.buffer
+            train = jax.tree_util.tree_map(_gat, train)
             tm = train["mask"].reshape(-1)
             tf = train["feat"].reshape(-1, L.n_features)
             tl = train["label"].reshape(-1)
@@ -758,37 +913,52 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
         new.update(
             t=t + cfg.dt, step=step + 1, key=key, arr=arr,
             ws=ws, win=win, bl=bl,
-            hist=state["hist"] + m["hist"].sum(0),
-            done=state["done"] + m["done"].sum(),
-            correct=state["correct"] + m["correct"].sum(),
-            sum_tis=state["sum_tis"] + m["sum_tis"].sum(),
-            votes_fin=state["votes_fin"] + m["votes_fin"].sum(),
-            completions=state["completions"] + m["completions"].sum(),
-            done_all=state["done_all"] + m["done_all"].sum(),
-            dropped=state["dropped"] + m["dropped"].sum() + over,
+            hist=state["hist"] + m["hist"],
+            done=state["done"] + m["done"],
+            correct=state["correct"] + m["correct"],
+            sum_tis=state["sum_tis"] + m["sum_tis"],
+            votes_fin=state["votes_fin"] + m["votes_fin"],
+            completions=state["completions"] + m["completions"],
+            done_all=state["done_all"] + m["done_all"],
+            dropped=state["dropped"] + m["dropped"],
+            stolen=state["stolen"] + got,
+            donated=state["donated"] + gave,
+            over=state["over"] + over,
             arrived=state["arrived"] + n_new,
             arrived_warm=state["arrived_warm"] + jnp.where(warm, n_new, 0),
-            model_known=state["model_known"] + m["model_known"].sum(),
+            model_known=state["model_known"] + m["model_known"],
         )
-        ys = dict(arrivals=n_new, finalized=m["done_all"].sum(),
-                  backlog=m["backlog"].sum(), in_flight=m["in_flight"].sum())
+        ys = dict(arrivals=n_new, finalized=_gsum(m["done_all"]),
+                  backlog=_gsum(m["backlog"]), in_flight=_gsum(m["in_flight"]))
         return new, ys
 
     state, ys = jax.lax.scan(tick, state, None, length=horizon)
-    out = {k: state[k] for k in
-           ("hist", "done", "correct", "sum_tis", "votes_fin", "completions",
-            "done_all", "dropped", "arrived", "arrived_warm", "model_known")}
-    out["cost_wait"] = state["ws"]["cost_wait"].sum()
-    out["cost_work"] = state["ws"]["cost_work"].sum()
-    out["n_churned"] = state["ws"]["n_churned"].sum()
-    out["n_evicted"] = state["ws"]["n_evicted"].sum()
-    out["backlog_end"] = state["bl"]["count"].sum()
-    out["in_flight_end"] = state["win"]["active"].sum()
+    # per-shard accumulators, reduced over the GATHERED canonical shard
+    # order so sharded and unsharded runs execute the identical reduction
+    local = {k: state[k] for k in
+             ("hist", "done", "correct", "sum_tis", "votes_fin",
+              "completions", "done_all", "dropped", "stolen", "donated",
+              "model_known")}
+    local["cost_wait"] = state["ws"]["cost_wait"]      # (S_local,) scalars
+    local["cost_work"] = state["ws"]["cost_work"]
+    local["n_churned"] = state["ws"]["n_churned"]
+    local["n_evicted"] = state["ws"]["n_evicted"]
+    local["backlog_end"] = state["bl"]["count"]
+    local["in_flight_end"] = state["win"]["active"].sum(-1)
+    full = jax.tree_util.tree_map(_gat, local)              # (S, ...)
+    out = {k: v.sum(0) for k, v in full.items()}
+    out["dropped"] = out["dropped"] + state["over"]
+    out["arrived"] = state["arrived"]
+    out["arrived_warm"] = state["arrived_warm"]
     if "learn2" in state:
         # final learnability-head params (diagnostics: lets callers probe
         # what the admission score learned about the feature space)
         out["learn2_W"] = state["learn2"].W
         out["learn2_b"] = state["learn2"].b
+    # physically device-local shard diagnostics (under shard_map these
+    # leave the mesh sharded over "shard"; see _run_sharded_jit out_specs)
+    out["per_shard"] = {k: local[k] for k in
+                        ("backlog_end", "in_flight_end", "stolen", "donated")}
     out["series"] = ys
     return out
 
@@ -797,6 +967,48 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale):
 def _run_jit(cfg: StreamConfig, horizon: int, keys, warmup_t, rate_scale):
     return jax.vmap(
         lambda k: _run_one(cfg, horizon, k, warmup_t, rate_scale))(keys)
+
+
+@functools.lru_cache(maxsize=None)
+def _run_sharded_jit(cfg: StreamConfig, horizon: int):
+    """Compiled shard_map-partitioned runner for ``cfg.sharding.n_devices``.
+
+    Inputs are replicated (keys travel as key_data; extended dtypes can't
+    cross the shard_map boundary); all per-shard state lives sharded
+    inside — the scan carry keeps window/pool/backlog device-resident
+    between ticks, nothing round-trips to host — and the keys buffer is
+    donated. Reduced metrics come out replicated; the ``per_shard``
+    diagnostics stay physically sharded over the "shard" axis."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as Pspec
+
+    from repro.distributed.sharding import leading_axis_specs
+    from repro.launch.mesh import check_stream_sharding, make_stream_mesh
+
+    D = cfg.sharding.n_devices
+    check_stream_sharding(cfg.n_shards, D)
+    mesh = make_stream_mesh(D)
+
+    def body(keys_data, warmup_t, rate_scale):
+        keys = jax.random.wrap_key_data(keys_data)
+        return jax.vmap(
+            lambda k: _run_one(cfg, horizon, k, warmup_t, rate_scale,
+                               axis_name="shard"))(keys)
+
+    # output structure from an abstract single-device trace: everything is
+    # replicated except the per_shard subtree (sharded on axis 1, after
+    # the replication axis)
+    shapes = jax.eval_shape(
+        lambda k, w, r: jax.vmap(
+            lambda kk: _run_one(cfg, horizon, kk, w, r))(k),
+        jax.random.split(jax.random.key(0), 1), 0.0, 1.0)
+    out_specs = {
+        k: (leading_axis_specs(v, "shard", axis=1) if k == "per_shard"
+            else jax.tree_util.tree_map(lambda _: Pspec(), v))
+        for k, v in shapes.items()}
+    fn = shard_map(body, mesh=mesh, in_specs=(Pspec(), Pspec(), Pspec()),
+                   out_specs=out_specs, check_rep=False)
+    return jax.jit(fn, donate_argnums=(0,))
 
 
 def _as_stream_config(cfg) -> StreamConfig:
@@ -821,6 +1033,25 @@ def _validate_stream_config(cfg: StreamConfig):
         raise ValueError(f"routing.admission={cfg.routing.admission!r} "
                          "requires learner.enabled: features are drawn at "
                          "arrival and ranked by the online model")
+    sh = cfg.sharding
+    if sh.steal not in ("none", "pressure"):
+        raise ValueError("sharding.steal must be 'none' or 'pressure', "
+                         f"got {sh.steal!r}")
+    if sh.steal != "none":
+        if cfg.routing.admission != "fifo":
+            raise ValueError(
+                f"sharding.steal={sh.steal!r} rebalances the FIFO backlog "
+                "ring and requires routing.admission='fifo', got "
+                f"{cfg.routing.admission!r}")
+        if not 1 <= sh.steal_max <= cfg.backlog:
+            raise ValueError("sharding.steal_max must be in [1, backlog="
+                             f"{cfg.backlog}], got {sh.steal_max}")
+        if sh.steal_slack < 0:
+            raise ValueError("sharding.steal_slack must be >= 0, got "
+                             f"{sh.steal_slack}")
+    if sh.n_devices > 1:
+        from repro.launch.mesh import check_stream_sharding
+        check_stream_sharding(cfg.n_shards, sh.n_devices)
 
 
 def run_stream(cfg, horizon: int, *, n_reps: int = 1,
@@ -837,8 +1068,13 @@ def run_stream(cfg, horizon: int, *, n_reps: int = 1,
     _validate_stream_config(cfg)
     keys = jax.random.split(jax.random.key(seed), n_reps)
     warmup_t = float(warmup_frac * horizon * cfg.dt)
-    out = _run_jit(cfg, int(horizon), keys, warmup_t,
-                   jnp.float32(rate_scale))
+    if cfg.sharding.n_devices > 1:
+        out = _run_sharded_jit(cfg, int(horizon))(
+            jax.random.key_data(keys), jnp.float32(warmup_t),
+            jnp.float32(rate_scale))
+    else:
+        out = _run_jit(cfg, int(horizon), keys, warmup_t,
+                       jnp.float32(rate_scale))
     out = dict(out)
     out["warmup_t"] = warmup_t
     out["measured_s"] = horizon * cfg.dt - warmup_t
@@ -851,19 +1087,87 @@ def _run_swept(cfg: StreamConfig, horizon: int, keys, warmup_t, rate_scales):
         lambda k: _run_one(cfg, horizon, k, warmup_t, rs))(keys))(rate_scales)
 
 
+@functools.partial(jax.pmap, static_broadcasted_argnums=(0, 1),
+                   in_axes=(None, None, None, None, 0))
+def _run_swept_pmap(cfg: StreamConfig, horizon: int, keys, warmup_t,
+                    rate_scales):
+    return jax.vmap(lambda rs: jax.vmap(
+        lambda k: _run_one(cfg, horizon, k, warmup_t, rs))(keys))(rate_scales)
+
+
 def run_stream_sweep(cfg, horizon: int, rate_scales, *, n_reps: int = 1,
-                     seed: int = 0, warmup_frac: float = 0.3):
+                     seed: int = 0, warmup_frac: float = 0.3,
+                     shard: bool = True):
     """One-compilation load sweep: ``vmap`` over the offered-rate scales on
     top of the replication vmap, so every sweep point advances in lock-step
     inside a single jitted program (the ``repro.scenarios.sweep`` backend
-    for the stream engine's arrival-rate axis). Returns stacked arrays with
-    leading dims ``(len(rate_scales), n_reps)``."""
+    for the stream engine's arrival-rate axis). With ``shard`` (default)
+    and more than one visible device, the traced sweep axis is additionally
+    pmap-sharded across devices (mesh plumbing shared with the sharded
+    tick): sweep points are padded to a device multiple, split round-robin,
+    and the pad rows dropped. Returns stacked arrays with leading dims
+    ``(len(rate_scales), n_reps)``."""
     cfg = _as_stream_config(cfg)
     _validate_stream_config(cfg)
     keys = jax.random.split(jax.random.key(seed), n_reps)
     warmup_t = float(warmup_frac * horizon * cfg.dt)
-    out = _run_swept(cfg, int(horizon), keys, warmup_t,
-                     jnp.asarray(rate_scales, jnp.float32))
+    scales = jnp.asarray(rate_scales, jnp.float32)
+    V = int(scales.shape[0])
+    D = jax.local_device_count()
+    if shard and D > 1 and V > 1:
+        pad = (-V) % D
+        if pad:
+            scales = jnp.concatenate(
+                [scales, jnp.broadcast_to(scales[-1:], (pad,))])
+        out = _run_swept_pmap(cfg, int(horizon), keys, warmup_t,
+                              scales.reshape(D, -1))
+        out = jax.tree_util.tree_map(
+            lambda v: v.reshape((V + pad,) + v.shape[2:])[:V], out)
+    else:
+        out = _run_swept(cfg, int(horizon), keys, warmup_t, scales)
+    out = dict(out)
+    out["warmup_t"] = warmup_t
+    out["measured_s"] = horizon * cfg.dt - warmup_t
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _run_capswept(cfg: StreamConfig, horizon: int, keys, warmup_t, caps,
+                  rate_scale):
+    return jax.vmap(lambda c: jax.vmap(
+        lambda k: _run_one(cfg, horizon, k, warmup_t, rate_scale,
+                           cap_eff=c))(keys))(caps)
+
+
+def run_stream_votes_sweep(cfg, horizon: int, votes_caps, *, n_reps: int = 1,
+                           seed: int = 0, warmup_frac: float = 0.3,
+                           rate_scale: float = 1.0):
+    """One-compilation votes-cap sweep via MASKED caps.
+
+    The vote buffers are sized statically at ``max(votes_caps)`` and a
+    traced effective cap gates vote admission, finalization and the
+    outstanding-vote target (``_shard_tick``'s ``cap_eff``), so every
+    swept value shares one jitted program. Columns past a point's
+    effective cap are never written or read, which is why each sweep point
+    is bit-for-bit equal to a standalone ``run_stream`` at that
+    ``votes_cap`` (tests/test_sharding.py pins it). Returns stacked arrays
+    with leading dims ``(len(votes_caps), n_reps)``."""
+    cfg = _as_stream_config(cfg)
+    caps = [int(v) for v in votes_caps]
+    if not caps:
+        raise ValueError("votes_caps must be non-empty")
+    for v in caps:
+        if v < max(1, cfg.policy.min_votes):
+            raise ValueError(
+                f"votes_cap sweep value {v} must be >= max(1, "
+                f"policy.min_votes={cfg.policy.min_votes})")
+    cfg = dataclasses.replace(
+        cfg, policy=dataclasses.replace(cfg.policy, votes_cap=max(caps)))
+    _validate_stream_config(cfg)
+    keys = jax.random.split(jax.random.key(seed), n_reps)
+    warmup_t = float(warmup_frac * horizon * cfg.dt)
+    out = _run_capswept(cfg, int(horizon), keys, warmup_t,
+                        jnp.asarray(caps, jnp.int32), jnp.float32(rate_scale))
     out = dict(out)
     out["warmup_t"] = warmup_t
     out["measured_s"] = horizon * cfg.dt - warmup_t

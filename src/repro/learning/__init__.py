@@ -2,7 +2,7 @@
 
 One learner, two engines (paper §5-§6): the batch simulators
 (``core/simfast.simulate_learning[_batch]``, the scalar event loop through
-the ``core/learner`` shim) and the streaming labelstream router both drive
+the ``compat.LogisticLearner`` wrapper) and the streaming router both drive
 the same pure-pytree :class:`~repro.learning.linear.LinearLearner` —
 ``fit``/``entropy`` are pure array functions, so the identical code path
 runs under jit, scan-over-rounds, vmap-over-replications, and per-tick in

@@ -6,10 +6,9 @@ every operation to ``repro.learning.linear`` so the numerics are shared
 with the vectorized and streaming engines; new code should use the pytree
 :class:`~repro.learning.linear.LinearLearner` directly.
 
-This module lives here (rather than in the deprecated ``repro.core.learner``
-shim) so internal callers can keep using the object API without tripping
-the shim's ``DeprecationWarning`` — the warning is reserved for the legacy
-import path.
+This is the only spelling: the historical ``repro.core.learner`` import
+path went through its one-cycle ``DeprecationWarning`` grace period and
+was removed; import :class:`LogisticLearner` from ``repro.learning``.
 
 Behavioral fix over the historical version: ``select_uncertain`` breaks
 equal-entropy ties by ascending point index (stable argsort) instead of

@@ -20,10 +20,7 @@ The pieces:
     over the events, simfast and stream engines; traced sweep axes compile
     once and vmap across values;
   * ``compile``   — spec -> engine-native config lowering (exact: facade
-    runs are bit-identical to the legacy entry points);
-  * ``adapters``  — DEPRECATED legacy-config -> spec lifts
-    (``from_fast_config`` / ``from_stream_config`` / ``from_cs_config``),
-    kept for one deprecation cycle.
+    runs are bit-identical to the legacy entry points).
 
 Exports resolve lazily (PEP 562), mirroring the other packages, so
 importing ``repro.scenarios`` does not pull jax-heavy engine modules until
@@ -46,6 +43,7 @@ _EXPORTS = {
     "RoutingSpec": "spec",
     "AdmissionSpec": "spec",
     "LearnerSpec": "spec",
+    "ShardingSpec": "spec",
     "override": "spec",
     # registry
     "register_scenario": "registry",
@@ -61,10 +59,6 @@ _EXPORTS = {
     "to_fast_config": "compile",
     "to_stream_config": "compile",
     "to_cs_config": "compile",
-    # deprecated legacy-config adapters
-    "from_fast_config": "adapters",
-    "from_stream_config": "adapters",
-    "from_cs_config": "adapters",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -74,6 +74,13 @@ def _check_batch_engine(spec: ScenarioSpec, engine: str):
         _reject(engine, "difficulty.p_hard",
                 "> 0; the difficulty mixture is modeled by the stream "
                 "engine only")
+    sh = spec.sharding
+    if sh.n_devices != 1 or sh.steal != "none":
+        _reject(engine, "sharding",
+                f"= ShardingSpec(n_devices={sh.n_devices}, "
+                f"steal={sh.steal!r}); device-sharded ticks and cross-shard "
+                "work stealing are stream-engine concepts (the batch "
+                "engines pmap replications instead)")
 
 
 def to_fast_config(spec: ScenarioSpec):
@@ -155,7 +162,9 @@ def to_stream_config(spec: ScenarioSpec):
     """ScenarioSpec -> labelstream.StreamConfig (streaming engine)."""
     from repro.labelstream.arrivals import ArrivalConfig
     from repro.labelstream.policy import PolicyConfig
-    from repro.labelstream.router import StreamConfig, StreamLearnerConfig
+    from repro.labelstream.router import (
+        ShardingConfig, StreamConfig, StreamLearnerConfig,
+    )
     from repro.labelstream.routing import RoutingConfig
 
     if spec.arrivals.kind == "batch":
@@ -240,6 +249,12 @@ def to_stream_config(spec: ScenarioSpec):
         refresh_iters=lr.refresh_iters,
         tis_bins=eng.tis_bins,
         tis_bin_s=eng.tis_bin_s,
+        sharding=ShardingConfig(
+            n_devices=spec.sharding.n_devices,
+            steal=spec.sharding.steal,
+            steal_max=spec.sharding.steal_max,
+            steal_slack=spec.sharding.steal_slack,
+        ),
     )
 
 

@@ -40,6 +40,8 @@ _SIMFAST_AXES = {
 }
 #: stream axes that map onto the traced rate_scale
 _STREAM_AXES = ("arrivals.rate",)
+#: stream axis that maps onto the traced masked votes cap
+_STREAM_VOTES_AXIS = "policy.redundancy.votes"
 
 
 def _resolve_engine(spec: ScenarioSpec, engine):
@@ -180,6 +182,27 @@ def sweep(scenario, axis: str, values, engine: str = None, *, seed: int = 0,
         raw = run_stream_sweep(cfg, horizon if horizon is not None
                                else scenario.horizon, scales, n_reps=n_reps,
                                seed=seed, warmup_frac=warmup_frac)
+        results = [stream_summary(cfg, _slice_point(raw, i))
+                   for i in range(len(values))]
+        return dict(axis=axis, values=values, engine=engine,
+                    vectorized=True, results=results, raw=raw)
+
+    # the votes cap is traced through masked caps: buffers are sized at the
+    # sweep max and a traced effective cap gates votes/finalization, so the
+    # whole grid is one compilation and each point is bit-for-bit the
+    # standalone run at that cap. Each value is still pushed through
+    # override() first so spec validation (min_votes <= votes, adaptive
+    # finiteness) rejects exactly what a per-value run would reject.
+    if engine == "stream" and axis == _STREAM_VOTES_AXIS:
+        from repro.labelstream.router import (
+            run_stream_votes_sweep, stream_summary,
+        )
+        for v in values:
+            override(scenario, {axis: v})
+        cfg = to_stream_config(scenario)
+        raw = run_stream_votes_sweep(
+            cfg, horizon if horizon is not None else scenario.horizon,
+            values, n_reps=n_reps, seed=seed, warmup_frac=warmup_frac)
         results = [stream_summary(cfg, _slice_point(raw, i))
                    for i in range(len(values))]
         return dict(axis=axis, values=values, engine=engine,

@@ -18,7 +18,7 @@ from __future__ import annotations
 from repro.scenarios.spec import (
     AdmissionSpec, ArrivalSpec, DifficultySpec, EngineKnobs, FeatureSpec,
     LearnerSpec, MaintenanceSpec, PolicySpec, PoolSpec, RedundancySpec,
-    RoutingSpec, ScenarioSpec, StragglerSpec, override,
+    RoutingSpec, ScenarioSpec, ShardingSpec, StragglerSpec, override,
 )
 
 _REGISTRY: dict = {}
@@ -207,6 +207,26 @@ def _seed():
         policy=PolicySpec(redundancy=_drip, routing=RoutingSpec(kind="scored"),
                           learner=LearnerSpec(enabled=True,
                                               min_votes_known=1)),
+    ))
+
+    # the device-scaling workload: 8 pool shards so the shard groups
+    # divide evenly across 1/2/4/8 devices, cross-shard pressure stealing
+    # on. Defaults to n_devices=1 (single-device hosts run it unsharded
+    # and bit-identically); the bench scaling section overrides
+    # ``sharding.n_devices`` per probe point.
+    register_scenario("stream_sharded", ScenarioSpec(
+        window=16,
+        pool=PoolSpec(pool_size=16, n_shards=8),
+        arrivals=ArrivalSpec(kind="poisson", rate=0.04),
+        engine=EngineKnobs(dt=5.0, tis_bin_s=16.0),
+        policy=PolicySpec(
+            maintenance=MaintenanceSpec(pm_l=240.0),
+            redundancy=RedundancySpec(adaptive=True, votes=3,
+                                      conf_threshold=0.95, min_votes=1,
+                                      max_outstanding=1),
+        ),
+        sharding=ShardingSpec(n_devices=1, steal="pressure",
+                              steal_max=4, steal_slack=1),
     ))
 
 

@@ -39,6 +39,7 @@ _ARRIVAL_KINDS = ("batch", "poisson", "mmpp", "diurnal")
 _ADMISSION_KINDS = ("fifo", "uncertain", "uncertain_learnable")
 _ROUTING_KINDS = ("uniform", "scored")
 _LEARNER_KINDS = ("AL", "PL", "HL", "NL")
+_STEAL_KINDS = ("none", "pressure")
 
 
 def _fail(cls, field: str, msg: str):
@@ -172,6 +173,43 @@ class PoolSpec:
                f"must be in (0, 1), got {self.est_prior_acc}")
         _check(c, self.est_prior_n > 0, "est_prior_n",
                f"must be > 0, got {self.est_prior_n}")
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class ShardingSpec:
+    """Device topology for the stream engine.
+
+    The pool's ``n_shards`` shards are split into equal per-device groups
+    and the whole tick runs under ``shard_map`` over a 1-D ``("shard",)``
+    mesh (``repro.launch.mesh.make_stream_mesh``); scan state stays
+    device-resident between ticks.  ``steal="pressure"`` turns on
+    cross-shard work stealing: each tick the shards exchange fixed-shape
+    backlog-pressure summaries (all-gather), shards more than
+    ``steal_slack`` tasks above the global mean donate up to ``steal_max``
+    of their oldest backlog entries, and starved shards claim them in
+    deterministic shard order.  The default spec (one device, no stealing)
+    is bit-identical to the unsharded tick.
+    """
+    n_devices: int = 1
+    shards_per_device: Optional[int] = None   # None = n_shards // n_devices
+    steal: str = "none"           # "none" | "pressure"
+    steal_max: int = 4            # max tasks a donor shard exports per tick
+    steal_slack: int = 2          # backlog excess over global mean to donate
+
+    def __post_init__(self):
+        c = ShardingSpec
+        _check(c, self.n_devices >= 1, "n_devices",
+               f"must be >= 1, got {self.n_devices}")
+        _check(c, self.shards_per_device is None
+               or self.shards_per_device >= 1, "shards_per_device",
+               f"must be None or >= 1, got {self.shards_per_device}")
+        _check(c, self.steal in _STEAL_KINDS, "steal",
+               f"must be one of {_STEAL_KINDS}, got {self.steal!r}")
+        _check(c, self.steal_max >= 1, "steal_max",
+               f"must be >= 1, got {self.steal_max}")
+        _check(c, self.steal_slack >= 0, "steal_slack",
+               f"must be >= 0, got {self.steal_slack}")
 
 
 @_static
@@ -419,6 +457,7 @@ class ScenarioSpec:
     pool: PoolSpec = PoolSpec()
     policy: PolicySpec = PolicySpec()
     engine: EngineKnobs = EngineKnobs()
+    sharding: ShardingSpec = ShardingSpec()
 
     def __post_init__(self):
         c = ScenarioSpec
@@ -447,6 +486,23 @@ class ScenarioSpec:
                 and not math.isfinite(self.policy.redundancy.votes):
             _fail(c, "policy.redundancy.votes",
                   "adaptive redundancy needs a finite votes cap")
+        sh = self.sharding
+        if self.pool.n_shards % sh.n_devices != 0:
+            _fail(c, "sharding.n_devices",
+                  f"ShardingSpec.n_devices={sh.n_devices} must divide "
+                  f"PoolSpec.n_shards={self.pool.n_shards} (each device "
+                  "holds an equal group of pool shards)")
+        if sh.shards_per_device is not None \
+                and sh.n_devices * sh.shards_per_device != self.pool.n_shards:
+            _fail(c, "sharding.shards_per_device",
+                  f"ShardingSpec.n_devices={sh.n_devices} x "
+                  f"shards_per_device={sh.shards_per_device} != "
+                  f"PoolSpec.n_shards={self.pool.n_shards}")
+        if sh.steal != "none" and self.policy.admission.kind != "fifo":
+            _fail(c, "sharding.steal",
+                  f"steal={sh.steal!r} rebalances the FIFO backlog ring and "
+                  "requires policy.admission.kind='fifo', got "
+                  f"{self.policy.admission.kind!r}")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,121 @@
+"""Forced-multi-device sharding checks, runnable two ways.
+
+tests/test_sharding.py imports :func:`collect` directly when the current
+process already sees >= 8 XLA devices (the CI multi-device leg exports
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before pytest
+starts); otherwise it re-executes this file as a subprocess, where the
+``__main__`` block sets the flag BEFORE the first jax import and prints
+the collected report as JSON on stdout.
+
+Everything here is a machine-independent deterministic quantity (bitwise
+parity flags, conserved counters) — no timing, so the report is identical
+on any host.
+"""
+import json
+import sys
+
+HORIZON = 300          # 60 ticks at dt=5
+N_REPS = 2
+N_DEV = 8
+
+
+def _tree_equal(a, b):
+    import jax
+    import jax.numpy as jnp
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and \
+        all(bool(jnp.array_equal(x, z)) for x, z in zip(la, lb))
+
+
+def _common(out_a, out_b):
+    keys = sorted(set(out_a) & set(out_b) - {"per_shard"})
+    return ({k: out_a[k] for k in keys}, {k: out_b[k] for k in keys})
+
+
+def collect() -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import scenarios
+    from repro.labelstream.router import run_stream
+    from repro.scenarios.compile import to_stream_config
+
+    D = min(N_DEV, jax.device_count())
+    report = {"devices": int(jax.device_count()), "probe_devices": int(D)}
+
+    # ---- sharded-vs-single bit parity, default stream_sharded policy ----
+    spec1 = scenarios.get_scenario("stream_sharded",
+                                   {"sharding.steal": "none"})
+    specD = scenarios.get_scenario(
+        "stream_sharded", {"sharding.steal": "none",
+                           "sharding.n_devices": D})
+    out1 = run_stream(to_stream_config(spec1), HORIZON, n_reps=N_REPS, seed=3)
+    outD = run_stream(to_stream_config(specD), HORIZON, n_reps=N_REPS, seed=3)
+    a, b = _common(out1, outD)
+    report["parity_default"] = _tree_equal(a, b)
+
+    # ---- parity + activity with cross-shard work stealing on -----------
+    # overload the service (small window, 10x offered rate) so backlogs
+    # actually queue and the pressure-steal path fires every few ticks
+    steal1 = scenarios.get_scenario("stream_sharded", {"window": 8})
+    stealD = scenarios.get_scenario(
+        "stream_sharded", {"window": 8, "sharding.n_devices": D})
+    s1 = run_stream(to_stream_config(steal1), HORIZON, n_reps=N_REPS,
+                    seed=3, rate_scale=10.0)
+    sD = run_stream(to_stream_config(stealD), HORIZON, n_reps=N_REPS,
+                    seed=3, rate_scale=10.0)
+    a, b = _common(s1, sD)
+    report["parity_steal"] = _tree_equal(a, b)
+    report["stolen"] = int(np.asarray(sD["stolen"]).sum())
+    report["donated"] = int(np.asarray(sD["donated"]).sum())
+
+    # ---- conservation across steals: nothing created or lost ----------
+    arrived = np.asarray(sD["arrived"]).sum()
+    accounted = (np.asarray(sD["done_all"]).sum()
+                 + np.asarray(sD["dropped"]).sum()
+                 + np.asarray(sD["backlog_end"]).sum()
+                 + np.asarray(sD["in_flight_end"]).sum())
+    report["arrived"] = int(arrived)
+    report["accounted"] = int(accounted)
+    report["conservation_ok"] = bool(arrived == accounted)
+
+    # ---- steal determinism: same seed -> bitwise-identical runs --------
+    sD2 = run_stream(to_stream_config(stealD), HORIZON, n_reps=N_REPS,
+                     seed=3, rate_scale=10.0)
+    report["determinism_ok"] = _tree_equal(sD, sD2) and \
+        _tree_equal(sD["per_shard"], sD2["per_shard"])
+
+    # ---- simfast pmap shards stay bit-identical ------------------------
+    from repro.core.simfast import (FastConfig, SimScales, simulate,
+                                    simulate_learning_batch, simulate_swept)
+    fcfg = FastConfig(pool_size=12, n_tasks=24, n_records=24)
+    sa = simulate(fcfg, 10, seed=5, shard=True)
+    sb = simulate(fcfg, 10, seed=5, shard=False)
+    report["simfast_parity"] = _tree_equal(sa, sb)
+
+    scl = SimScales(mu=jnp.linspace(0.5, 2.0, 10))
+    wa = simulate_swept(fcfg, 3, scl, seed=5, shard=True)
+    wb = simulate_swept(fcfg, 3, scl, seed=5, shard=False)
+    report["simfast_swept_parity"] = _tree_equal(wa, wb)
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(60, 4)).astype(np.float32)
+    y = (X[:, 0] > 0).astype(np.int32)
+    Xt = rng.normal(size=(30, 4)).astype(np.float32)
+    yt = (Xt[:, 0] > 0).astype(np.int32)
+    la = simulate_learning_batch(fcfg, X, y, Xt, yt, rounds=3, n_reps=10,
+                                 seed=5, shard=True)
+    lb = simulate_learning_batch(fcfg, X, y, Xt, yt, rounds=3, n_reps=10,
+                                 seed=5, shard=False)
+    report["simfast_learning_parity"] = _tree_equal(la, lb)
+    return report
+
+
+if __name__ == "__main__":
+    import os
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={N_DEV}")
+    json.dump(collect(), sys.stdout)
+    sys.stdout.write("\n")

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core.clamshell import ClamShell, CSConfig, time_to_accuracy
-from repro.core.learner import LogisticLearner
+from repro.learning import LogisticLearner
 from repro.data.datasets import (
     make_classification, mnist_like, cifar_like, train_test_split)
 

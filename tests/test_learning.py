@@ -133,7 +133,7 @@ def test_al_select_batched_matches_scalar_bitwise():
 
 
 def test_shim_select_uncertain_ties_deterministic():
-    from repro.core.learner import LogisticLearner
+    from repro.learning import LogisticLearner
     lr = LogisticLearner(5, 2)          # zero weights -> all-equal entropy
     X = np.random.default_rng(0).normal(size=(30, 5)).astype(np.float32)
     cand = np.arange(10, 30)

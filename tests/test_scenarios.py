@@ -9,8 +9,6 @@ calls the same engine functions with the same seeds).
 """
 import dataclasses
 import importlib
-import warnings
-
 import numpy as np
 import pytest
 
@@ -310,40 +308,24 @@ def test_sweep_guards_axes_the_traced_scale_cannot_express():
 
 
 # --------------------------------------------------------------------------
-# deprecation surface
+# deprecation surface: the one-cycle shims are GONE
 # --------------------------------------------------------------------------
 
-def test_core_learner_shim_warns():
-    import repro.core.learner as shim
-    with pytest.warns(DeprecationWarning, match="repro.core.learner"):
-        importlib.reload(shim)
-    assert hasattr(shim, "LogisticLearner")
+def test_core_learner_shim_removed():
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.core.learner")
+    # the supported spelling
+    from repro.learning import LogisticLearner
+    assert LogisticLearner(3, 2) is not None
 
 
-def test_config_adapters_warn_and_round_trip():
-    from repro.core.clamshell import CSConfig
-    from repro.core.simfast import FastConfig
-    from repro.labelstream.router import heterogeneous_stream_config
-
-    cfg = heterogeneous_stream_config()
-    with pytest.warns(DeprecationWarning, match="StreamConfig"):
-        spec = scenarios.from_stream_config(cfg)
-    assert scenarios.to_stream_config(spec) == cfg
-
-    fc = FastConfig(pool_size=9, n_tasks=33, votes_needed=2, pm_l=200.0)
-    with pytest.warns(DeprecationWarning, match="FastConfig"):
-        spec = scenarios.from_fast_config(fc)
-    assert scenarios.to_fast_config(spec) == fc
-
-    cc = CSConfig(pool_size=12, votes_needed=2, learner="AL", al_batch=6)
-    with pytest.warns(DeprecationWarning, match="CSConfig"):
-        spec = scenarios.from_cs_config(cc)
-    assert scenarios.to_cs_config(spec, seed=0) == cc
-
-    with warnings.catch_warnings(), \
-            pytest.raises(ValueError, match="quality_threshold"):
-        warnings.simplefilter("ignore")
-        scenarios.from_cs_config(CSConfig(quality_threshold=0.7))
+def test_config_adapters_removed():
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.scenarios.adapters")
+    for name in ("from_fast_config", "from_stream_config", "from_cs_config"):
+        with pytest.raises(AttributeError):
+            getattr(scenarios, name)
+        assert name not in scenarios.__all__
 
 
 # --------------------------------------------------------------------------
