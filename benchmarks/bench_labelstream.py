@@ -78,7 +78,8 @@ def _sweep(name, spec, scales, horizon, reps, budget=P95_BUDGET_S):
                     engine="stream", horizon=horizon, n_reps=reps, seed=17)
     (sw, us) = timed(lambda: scenarios.sweep(
         spec, axis="arrivals.rate", values=values, engine="stream",
-        horizon=horizon, n_reps=reps, seed=17))
+        horizon=horizon, n_reps=reps, seed=17),
+        name=f"sweep[{name}]")
     best = 0.0
     for sc, s in zip(scales, sw["results"]):
         stable = s["completion_ratio"] >= 0.95

@@ -51,12 +51,19 @@ def _event_loop_rps(spec, n_reps):
 
 def _simfast_rps(spec, n_reps):
     from repro import scenarios
-    jax.block_until_ready(                                     # compile
-        scenarios.run(spec, engine="simfast", n_reps=n_reps, seed=0)["raw"])
+    from repro.obs import timing
+    name = f"simulate[{spec.name}]"
+    # cold (compile) and warm calls both land in the obs wall-clock
+    # registry, so trace artifacts report the compile/execute split
+    timing.timeit(name, lambda: jax.block_until_ready(
+        scenarios.run(spec, engine="simfast", n_reps=n_reps,
+                      seed=0)["raw"]))
     t0 = time.perf_counter()
     res = scenarios.run(spec, engine="simfast", n_reps=n_reps, seed=1)
     jax.block_until_ready(res["raw"])
-    return n_reps / (time.perf_counter() - t0), res
+    dt = time.perf_counter() - t0
+    timing.record(name, dt)
+    return n_reps / dt, res
 
 
 def run(smoke: bool = False):

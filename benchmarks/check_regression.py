@@ -30,9 +30,78 @@ import os
 import sys
 
 
+#: expected schema of FRESHLY produced artifacts (mirrors
+#: benchmarks.common.SCHEMA_VERSION / repro.obs.export.SCHEMA_VERSION —
+#: inlined so this gate imports nothing from the package under test)
+SCHEMA_VERSION = 1
+TRACE_SCHEMA_VERSION = 1
+
+_DIRECTIONS = ("higher", "lower", "info")
+
+
 def _load(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
+
+
+def validate_artifact(doc: dict, path: str = "") -> list:
+    """Schema-check one freshly produced BENCH_*.json document.
+
+    Returns a list of error strings (empty = valid). Only FRESH artifacts
+    are validated — committed baselines may predate ``schema_version``.
+    """
+    errs = []
+    where = path or doc.get("name", "<artifact>")
+    if not isinstance(doc.get("name"), str) or not doc.get("name"):
+        errs.append(f"{where}: 'name' must be a non-empty string")
+    sv = doc.get("schema_version")
+    if sv != SCHEMA_VERSION:
+        errs.append(f"{where}: schema_version {sv!r} != {SCHEMA_VERSION} "
+                    "(re-run the benchmark with the current harness)")
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, dict) or not metrics:
+        errs.append(f"{where}: 'metrics' must be a non-empty dict")
+        return errs
+    for key, m in sorted(metrics.items()):
+        if not isinstance(m, dict):
+            errs.append(f"{where}:{key}: metric must be a dict, got "
+                        f"{type(m).__name__}")
+            continue
+        if not isinstance(m.get("value"), (int, float)) \
+                or isinstance(m.get("value"), bool):
+            errs.append(f"{where}:{key}: 'value' must be a number, got "
+                        f"{m.get('value')!r}")
+        if m.get("direction") not in _DIRECTIONS:
+            errs.append(f"{where}:{key}: 'direction' must be one of "
+                        f"{_DIRECTIONS}, got {m.get('direction')!r}")
+    return errs
+
+
+def validate_traces(artifacts_dir: str) -> list:
+    """Header-check every TRACE_*.jsonl in the artifacts dir (absence is
+    fine — not every run exports traces)."""
+    errs = []
+    for path in sorted(glob.glob(os.path.join(artifacts_dir,
+                                              "TRACE_*.jsonl"))):
+        fname = os.path.basename(path)
+        try:
+            with open(path) as f:
+                first = f.readline()
+            hdr = json.loads(first) if first.strip() else {}
+        except (OSError, json.JSONDecodeError) as e:
+            errs.append(f"{fname}: unreadable trace artifact ({e})")
+            continue
+        if hdr.get("kind") != "header":
+            errs.append(f"{fname}: first line must be kind='header', got "
+                        f"{hdr.get('kind')!r}")
+        elif hdr.get("schema_version") != TRACE_SCHEMA_VERSION:
+            errs.append(f"{fname}: trace schema_version "
+                        f"{hdr.get('schema_version')!r} != "
+                        f"{TRACE_SCHEMA_VERSION}")
+        else:
+            print(f"[ok  ] {fname}: trace header valid "
+                  f"(schema v{hdr['schema_version']})")
+    return errs
 
 
 def compare(baseline: dict, artifact: dict, tol: float):
@@ -95,8 +164,16 @@ def main(argv=None) -> int:
             print(f"[FAIL] {fname}: missing artifact {apath}")
             continue
         art = _load(apath)
+        for err in validate_artifact(art, fname):
+            failures.append(err)
+            print(f"[FAIL] {err}")
         for key, b, n, reg, gated, ok in compare(base, art, args.tol):
             tag = "ok" if ok else "FAIL"
+            # machine-readable per-key delta (one JSON object per line,
+            # greppable as ^DELTA) for dashboards/trend scrapers
+            print("DELTA " + json.dumps(
+                dict(artifact=fname, metric=key, baseline=b, new=n,
+                     regress=reg, gated=gated, ok=ok), sort_keys=True))
             if not gated:
                 print(f"[info] {fname}:{key} baseline={b:g} new="
                       f"{'-' if n is None else f'{n:g}'}")
@@ -122,6 +199,9 @@ def main(argv=None) -> int:
             if not ok:
                 failures.append(f"{fname}:{key} regressed {100 * reg:.1f}% "
                                 f"(baseline {b:g} -> {n:g})")
+    for err in validate_traces(args.artifacts):
+        failures.append(err)
+        print(f"[FAIL] {err}")
     if failures:
         print(f"\n{len(failures)} regression(s) beyond "
               f"{100 * args.tol:.0f}% tolerance:")

@@ -20,6 +20,10 @@ ROWS = []
 #: where BENCH_*.json artifacts are written (CI uploads this directory)
 BENCH_DIR = os.environ.get("BENCH_DIR", "artifacts")
 
+#: artifact schema: bump when the BENCH_*.json document shape changes
+#: (benchmarks.check_regression validates fresh artifacts against this)
+SCHEMA_VERSION = 1
+
 
 def label_spec(*, n_tasks=60, pool_size=15, batch_ratio=1.0, n_records=1,
                votes=1, straggler=True, pm_l=float("inf"), use_termest=True,
@@ -52,10 +56,18 @@ def emit(name: str, us_per_call: float, derived: str):
     print(row, flush=True)
 
 
-def timed(fn, *args, **kw):
+def timed(fn, *args, name=None, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)
-    return out, (time.perf_counter() - t0) * 1e6
+    dt = time.perf_counter() - t0
+    try:
+        # feed the obs wall-clock registry so trace artifacts can report
+        # compile-vs-execute splits per bench call site
+        from repro.obs import timing
+        timing.record(name or getattr(fn, "__name__", repr(fn)), dt)
+    except ImportError:
+        pass
+    return out, dt * 1e6
 
 
 def write_bench_json(name: str, metrics: dict, meta: dict = None) -> str:
@@ -74,7 +86,7 @@ def write_bench_json(name: str, metrics: dict, meta: dict = None) -> str:
         else:
             val, direction = v, "info"
         norm[k] = {"value": float(val), "direction": direction}
-    doc = {"name": name, "metrics": norm}
+    doc = {"name": name, "schema_version": SCHEMA_VERSION, "metrics": norm}
     if meta:
         doc["meta"] = meta
     os.makedirs(BENCH_DIR, exist_ok=True)

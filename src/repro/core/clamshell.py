@@ -124,7 +124,11 @@ class ClamShell:
 
     # -------------------------------------------------------- labeling ----
     def run_labeling(self, n_tasks: int, *, true_labels=None, n_classes=2,
-                     max_time: float = 10 * 3600.0) -> LabelResult:
+                     max_time: float = 10 * 3600.0,
+                     trace=None) -> LabelResult:
+        """``trace`` takes a :class:`repro.obs.EventsTrace`: a purely
+        observational host-side recorder fed after each completed batch
+        (the simulation itself is bit-identical with or without it)."""
         res = LabelResult()
         batch_size = max(1, int(round(self.cfg.pool_size / self.cfg.batch_ratio)))
         labels = (true_labels if true_labels is not None
@@ -151,6 +155,8 @@ class ClamShell:
             res.emp_mpl_per_batch.append(float(np.mean(emp)))
             res.n_labels += len(batch) * self.cfg.n_records
             correct += sum(1 for t in batch if t.result == t.true_label)
+            if trace is not None:
+                trace.record_batch(batch, t0=t0, t_end=self.loop.now)
 
         res.total_time = self.loop.now - t_start
         res.cost_wait = self.pool.cost_wait

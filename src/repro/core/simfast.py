@@ -67,6 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.crowd import SWITCH_DELAY_S, WAIT_PAY_PER_S, WORK_PAY_PER_RECORD
+from repro.obs.trace import TraceConfig
 
 INF = jnp.inf
 
@@ -135,6 +136,12 @@ class FastConfig:
     # pre-drawn replacement workers per slot (churn/eviction backfill);
     # beta/gamma sampling inside the hot loop is pathologically slow on CPU
     bank: int = 16
+    # in-loop observability (repro.obs): None compiles the exact historical
+    # program; a TraceConfig adds per-batch event counters (ticks, votes,
+    # straggler duplications, churn) to the scan outputs. Trace counters
+    # are deterministic functions of existing state and consume no extra
+    # randomness, so shared outputs stay bit-identical either way
+    trace: Optional[TraceConfig] = None
 
     @property
     def eff_batch(self) -> int:
@@ -186,7 +193,7 @@ def _init_workers(cfg: FastConfig, key, scales=None):
     else:                                    # Base-NR: workers trickle in
         blocked = (jax.random.exponential(k_cold, (P,)) * cold_mean)
     banks = dict(mu=mu_b, sigma=sigma_b, acc=acc_b)
-    return dict(
+    ws = dict(
         mu=mu_b[:, 0], sigma=sigma_b[:, 0], acc=acc_b[:, 0],
         repl_idx=jnp.zeros((P,), jnp.int32),
         busy_until=jnp.full((P,), INF),
@@ -204,7 +211,13 @@ def _init_workers(cfg: FastConfig, key, scales=None):
         cost_work=jnp.zeros(()),
         n_evicted=jnp.zeros((), jnp.int32),
         n_churned=jnp.zeros((), jnp.int32),
-    ), banks
+    )
+    if cfg.trace is not None:
+        # cumulative assignment/duplication counters: scalars like the cost
+        # accumulators, so slot churn/backfill never resets them
+        ws["tr_assigned"] = jnp.zeros((), jnp.int32)
+        ws["tr_dups"] = jnp.zeros((), jnp.int32)
+    return ws, banks
 
 
 def _termest(cfg: FastConfig, ws):
@@ -487,6 +500,12 @@ def _tick(cfg: FastConfig, ws, ts, banks, true_label, t0, t, seed_u32, step,
     ws["busy_until"] = jnp.where(take, start + lat_new, ws["busy_until"])
     ws["start_t"] = jnp.where(take, start, ws["start_t"])
     ws["n_started"] = ws["n_started"] + take
+    if cfg.trace is not None:
+        # tier-2 takes are straggler duplications (a worker doubling onto
+        # an already-staffed task) — the maintenance-churn counterpart of
+        # the stream trace's steal stats
+        ws["tr_assigned"] = ws["tr_assigned"] + take.sum()
+        ws["tr_dups"] = ws["tr_dups"] + (take & ~took_unass).sum()
 
     # ---- event jump: hop to the next completion/arrival/session end ----
     busy_min = ws["busy_until"].min()
@@ -536,7 +555,7 @@ def _run_batch(cfg: FastConfig, ws, banks, t0, seed_u32, true_labels, valid,
                                seed_u32, step, scales)
         return step + 1, ws, ts, t_next
 
-    _, ws, ts, _ = jax.lax.while_loop(
+    steps, ws, ts, _ = jax.lax.while_loop(
         cond, body, (jnp.zeros((), jnp.int32), ws, ts, t0 + cfg.dt))
     t_end = jnp.maximum(ts["completed"].max(), t0)
     # a batch that hit its time/step budget can leave workers mid-task;
@@ -545,7 +564,7 @@ def _run_batch(cfg: FastConfig, ws, banks, t0, seed_u32, true_labels, valid,
     still = ws["assigned"] >= 0
     ws["assigned"] = jnp.where(still, -1, ws["assigned"])
     ws["busy_until"] = jnp.where(still, INF, ws["busy_until"])
-    return ws, ts, t_end
+    return ws, ts, t_end, steps
 
 
 def _simulate_one(cfg: FastConfig, key, true_labels, scales=None):
@@ -565,12 +584,27 @@ def _simulate_one(cfg: FastConfig, key, true_labels, scales=None):
         lab, val = xs
         seed_b = _lowbias32(seed ^ (i.astype(jnp.uint32) + 1)
                             * jnp.uint32(0x9E3779B9))
-        ws, ts, t_end = _run_batch(cfg, ws, banks, t, seed_b, lab, val,
-                                   scales)
+        ws, ts, t_end, steps = _run_batch(cfg, ws, banks, t, seed_b, lab,
+                                          val, scales)
         fin = ts["done"] & val
         out = dict(latency=jnp.where(fin, ts["completed"] - t, 0.0),
                    done=fin,
                    result=ts["votes"].argmax(-1))
+        if cfg.trace is not None:
+            # per-batch event/activity series (the scan axis is the batch
+            # axis — simfast's analogue of the stream per-tick series).
+            # Counter keys are CUMULATIVE snapshots; the exporter diffs
+            # them into per-batch deltas host-side
+            out.update(
+                trace_ticks=steps,
+                trace_votes=ts["votes"].sum(),
+                trace_done=fin.sum(),
+                trace_assigned=ws["tr_assigned"],
+                trace_dups=ws["tr_dups"],
+                trace_churned=ws["n_churned"],
+                trace_evicted=ws["n_evicted"],
+                trace_batch_end=t_end,
+            )
         return (ws, t_end, i + 1), out
 
     (ws, t_end, _), outs = jax.lax.scan(
@@ -579,7 +613,7 @@ def _simulate_one(cfg: FastConfig, key, true_labels, scales=None):
     done = outs["done"].reshape(-1)
     result = outs["result"].reshape(-1)
     lab_f = labels.reshape(-1)
-    return dict(
+    res = dict(
         latency=outs["latency"].reshape(-1)[:T],
         result=result[:T],
         done=done[:T],
@@ -594,6 +628,13 @@ def _simulate_one(cfg: FastConfig, key, true_labels, scales=None):
         n_churned=ws["n_churned"],
         mean_pool_mu=ws["mu"].mean(),
     )
+    if cfg.trace is not None:
+        # FLAT (n_batches,) arrays, never a nested dict: the pmap shard
+        # path reshapes every output value directly
+        for k in outs:
+            if k.startswith("trace_"):
+                res[k] = outs[k]
+    return res
 
 
 @functools.partial(jax.jit, static_argnums=0)

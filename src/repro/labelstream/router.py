@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +68,8 @@ from repro.core.simfast import (
     FastConfig, INF, _init_workers, _uniform_block, churn_and_maintain,
     draw_latency, priority_match,
 )
+from repro.obs.trace import PHASES as TRACE_PHASES
+from repro.obs.trace import TraceConfig
 from repro.labelstream.arrivals import (
     ArrivalConfig, init_arrival_state, sample_arrivals,
 )
@@ -206,6 +209,13 @@ class StreamConfig:
     tis_bin_s: float = 4.0
     # device topology: shard groups + cross-shard work stealing
     sharding: ShardingConfig = ShardingConfig()
+    # in-loop observability (repro.obs): None compiles the exact historical
+    # program; a TraceConfig threads per-phase latency histograms and
+    # per-tick activity series through the scan carry. Trace state records
+    # only deterministic functions of existing state and consumes no extra
+    # uniform blocks, so every shared output key stays bit-identical with
+    # tracing on or off (tests/test_obs.py pins both)
+    trace: Optional[TraceConfig] = None
 
     @property
     def fast(self) -> FastConfig:
@@ -262,6 +272,15 @@ def _init_window(cfg: StreamConfig):
     )
     if cfg.learner.enabled:
         win["feat"] = jnp.zeros((Ws, cfg.learner.n_features))
+    if cfg.trace is not None and cfg.trace.phases:
+        # per-slot phase accounting for the latency-source decomposition:
+        # admission instant, accumulated staffed ("work") vs unstaffed
+        # ("wait") tick time, and the instant of the last posterior
+        # evidence (admission or credited vote) for the finalize lag
+        win["admit_t"] = jnp.zeros((Ws,))
+        win["work_s"] = jnp.zeros((Ws,))
+        win["wait_s"] = jnp.zeros((Ws,))
+        win["last_evt_t"] = jnp.zeros((Ws,))
     return win
 
 
@@ -426,6 +445,13 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
     win["logpost"] = jnp.where(admit[:, None], 0.0, win["logpost"])
     if L.enabled:
         win["feat"] = jnp.where(admit[:, None], featw, win["feat"])
+    tr = cfg.trace
+    tr_ph = tr is not None and tr.phases
+    if tr_ph:
+        win["admit_t"] = jnp.where(admit, t, win["admit_t"])
+        win["work_s"] = jnp.where(admit, 0.0, win["work_s"])
+        win["wait_s"] = jnp.where(admit, 0.0, win["wait_s"])
+        win["last_evt_t"] = jnp.where(admit, t, win["last_evt_t"])
 
     # ---- completions -> votes -> online posterior -----------------------
     ws = dict(ws)
@@ -464,6 +490,14 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
     win["n_votes"] = (jnp.concatenate([win["n_votes"], jnp.zeros((1,),
                                                                  jnp.int32)])
                       .at[tid_k].add(keep.astype(jnp.int32)))[:Ws]
+    if tr_ph:
+        # completion instant of this tick's credited votes (busy_until
+        # still holds it here; the slot is reset to INF only after the
+        # worker-bookkeeping block below) — the finalize lag measures
+        # from the LAST evidence the posterior saw
+        win["last_evt_t"] = (jnp.concatenate(
+            [win["last_evt_t"], jnp.zeros((1,))])
+            .at[tid_k].max(jnp.where(keep, ws["busy_until"], -INF)))[:Ws]
 
     # ---- periodic offline full-confusion Dawid-Skene refresh ------------
     # every refresh_every ticks, re-run the exact batched EM (aggregate.py)
@@ -521,6 +555,25 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
     corr_d = (wfin & (result == win["true_label"])).sum()
     tis_d = (tis * wfin).sum()
     votesfin_d = (win["n_votes"] * wfin).sum()
+    if tr_ph:
+        # latency-source decomposition at finalize time (paper §2's
+        # taxonomy, Table-1-style): backlog_wait + window_wait + work_time
+        # == time-in-system exactly (tick accounting below), finalize_lag
+        # is the overlapping tail past the last posterior evidence
+        ph_vals = dict(
+            backlog_wait=win["admit_t"] - win["arrival_t"],
+            window_wait=win["wait_s"],
+            work_time=win["work_s"],
+            finalize_lag=jnp.clip(t - win["last_evt_t"], 0.0, None),
+        )
+        ph_hist = {}
+        ph_sum = {}
+        for pk in TRACE_PHASES:
+            pb = jnp.clip((ph_vals[pk] / cfg.tis_bin_s).astype(jnp.int32),
+                          0, nbin - 1)
+            ph_hist[pk] = jnp.zeros((nbin + 1,), jnp.int32).at[
+                jnp.where(wfin, pb, nbin)].add(1)[:nbin]
+            ph_sum[pk] = (ph_vals[pk] * wfin).sum()
     # credit voters of finalized tasks by agreement with the final label
     # (incremental hard-EM M-step for the online accuracy estimates)
     vmask = (jnp.arange(cap)[None, :] < win["n_votes"][:Ws, None]) \
@@ -622,6 +675,21 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
     waiting = avail & ~take
     ws["cost_wait"] = ws["cost_wait"] + waiting.sum() * cfg.dt * WAIT_PAY_PER_S
 
+    if tr_ph:
+        # attribute this tick to work vs wait for every still-active task:
+        # staffed (>= 1 assigned worker after this tick's matching) ticks
+        # count as work time, active-but-unstaffed ticks as window wait.
+        # A task admitted at tick k and finalized at tick k+m accumulates
+        # exactly m ticks here (its finalize tick doesn't count: the slot
+        # already left "active" above), so backlog_wait + window_wait +
+        # work_time == time-in-system exactly
+        n_asg_post = jnp.zeros((Ws + 1,), jnp.int32).at[
+            jnp.where(ws["assigned"] >= 0, ws["assigned"], Ws)].add(1)[:Ws]
+        staffed = win["active"] & (n_asg_post > 0)
+        win["work_s"] = win["work_s"] + jnp.where(staffed, cfg.dt, 0.0)
+        win["wait_s"] = win["wait_s"] + jnp.where(
+            win["active"] & ~staffed, cfg.dt, 0.0)
+
     metrics = dict(hist=hist_d, done=done_d, correct=corr_d, sum_tis=tis_d,
                    votes_fin=votesfin_d,
                    completions=(comp & (win["arrival_t"][a_idx]
@@ -629,6 +697,19 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
                    done_all=fin.sum(), dropped=dropped,
                    backlog=bl_count, in_flight=win["active"].sum(),
                    model_known=(wfin & known).sum())
+    if tr_ph:
+        for pk in TRACE_PHASES:
+            metrics["ph_" + pk] = ph_hist[pk]
+            metrics["ps_" + pk] = ph_sum[pk]
+    if tr is not None and tr.per_tick:
+        metrics["votes"] = keep.sum()
+        metrics["busy_workers"] = (ws["assigned"] >= 0).sum()
+        metrics["idle_workers"] = waiting.sum()
+        if R.admission != "fifo":
+            # mean admission score over the queued backlog (routing
+            # quality: how uncertain is what we are still admitting)
+            metrics["adm_score"] = (jnp.where(admit_bl, adm_key, 0.0).sum()
+                                    / jnp.maximum(admit_bl.sum(), 1))
     if L.enabled:
         # finalized (features, label) pairs feed the replay buffer the
         # driver trains on. Training labels come from the CROWD-ONLY
@@ -797,6 +878,13 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
         arrived_warm=jnp.zeros((), jnp.int32),
         model_known=zi(),
     )
+    tr = cfg.trace
+    tr_ph = tr is not None and tr.phases
+    tr_pt = tr is not None and tr.per_tick
+    if tr_ph:
+        for pk in TRACE_PHASES:
+            state["ph_" + pk] = jnp.zeros((Sl, cfg.tis_bins), jnp.int32)
+            state["ps_" + pk] = jnp.zeros((Sl,))
     if L.enabled:
         # one learner per replication, shared across shards; finalized
         # (features, label) pairs land in a replay ring (+1 dump row)
@@ -928,8 +1016,24 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
             arrived_warm=state["arrived_warm"] + jnp.where(warm, n_new, 0),
             model_known=state["model_known"] + m["model_known"],
         )
+        if tr_ph:
+            new.update({"ph_" + pk: state["ph_" + pk] + m["ph_" + pk]
+                        for pk in TRACE_PHASES})
+            new.update({"ps_" + pk: state["ps_" + pk] + m["ps_" + pk]
+                        for pk in TRACE_PHASES})
         ys = dict(arrivals=n_new, finalized=_gsum(m["done_all"]),
                   backlog=_gsum(m["backlog"]), in_flight=_gsum(m["in_flight"]))
+        if tr_pt:
+            # per-tick activity series (cross-shard reduced, so the series
+            # is identical at any device count)
+            ys["votes"] = _gsum(m["votes"])
+            ys["busy_workers"] = _gsum(m["busy_workers"])
+            ys["idle_workers"] = _gsum(m["idle_workers"])
+            ys["dropped"] = _gsum(m["dropped"])
+            ys["stolen"] = _gsum(got)
+            ys["donated"] = _gsum(gave)
+            if cfg.routing.admission != "fifo":
+                ys["adm_score"] = _gsum(m["adm_score"]) / S
         return new, ys
 
     state, ys = jax.lax.scan(tick, state, None, length=horizon)
@@ -939,6 +1043,14 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
              ("hist", "done", "correct", "sum_tis", "votes_fin",
               "completions", "done_all", "dropped", "stolen", "donated",
               "model_known")}
+    if tr_ph:
+        # per-phase histograms/sums ride the same gather-then-reduce path
+        # as every other per-shard accumulator, so the sharded trace is
+        # all-gathered to canonical shard order and bit-identical to the
+        # single-device reduction
+        for pk in TRACE_PHASES:
+            local["ph_" + pk] = state["ph_" + pk]
+            local["ps_" + pk] = state["ps_" + pk]
     local["cost_wait"] = state["ws"]["cost_wait"]      # (S_local,) scalars
     local["cost_work"] = state["ws"]["cost_work"]
     local["n_churned"] = state["ws"]["n_churned"]
@@ -1219,7 +1331,7 @@ def stream_summary(cfg, out) -> dict:
     pipe_cap = 2.0 * cfg.n_shards * cfg.window * reps
     holdover = min(float(np.asarray(out["in_flight_end"]).sum()
                          + np.asarray(out["backlog_end"]).sum()), pipe_cap)
-    return dict(
+    s = dict(
         n_reps=reps,
         offered_rate=offered / max(dur, 1e-9),
         sustained_rate=done / max(dur, 1e-9),
@@ -1240,4 +1352,24 @@ def stream_summary(cfg, out) -> dict:
         in_flight_end=float(np.asarray(out["in_flight_end"]).sum()) / reps,
         cost=float(np.asarray(out["cost_wait"] + out["cost_work"]).sum())
         / reps,
+        # a percentile landing in the clipped top bin reports inf; this
+        # flag distinguishes "genuinely slow" from "tis histogram too
+        # short for this workload" (resize tis_bins/tis_bin_s if set)
+        hist_saturated=bool(hist.size and hist[-1] > 0),
     )
+    if "ph_backlog_wait" in out:
+        # per-phase latency-source breakdown (TraceConfig.phases): the
+        # paper's Table-1-style decomposition of where time-in-system goes
+        phases = {}
+        for pk in TRACE_PHASES:
+            ph = np.asarray(out["ph_" + pk])
+            ph = ph.reshape(-1, ph.shape[-1]).sum(0)
+            phases[pk] = dict(
+                mean=float(np.asarray(out["ps_" + pk]).sum()) / max(done,
+                                                                    1.0),
+                p50=_hist_percentile(ph, 50, cfg.tis_bin_s),
+                p95=_hist_percentile(ph, 95, cfg.tis_bin_s),
+                hist_saturated=bool(ph.size and ph[-1] > 0),
+            )
+        s["phases"] = phases
+    return s

@@ -1,0 +1,54 @@
+"""Process-wide wall-clock registry: compile vs execute per entry point.
+
+jax entry points pay tracing+lowering+compilation on their first call and
+run from cache afterwards, so the registry models every named call site as
+``cold`` (first call: compile + execute) vs ``warm`` (subsequent calls:
+execute only) and reports ``compile_s ~= cold - mean(warm)`` — an
+approximation that is exact up to run-to-run execute variance, which is
+all a text dashboard needs. ``benchmarks.common.timed`` feeds this
+registry automatically; ``repro.obs.export`` snapshots it into the trace
+artifact's ``wallclock`` section.
+"""
+from __future__ import annotations
+
+import time
+
+_CALLS: dict = {}      # name -> [seconds, ...] in call order
+
+
+def record(name: str, seconds: float):
+    _CALLS.setdefault(name, []).append(float(seconds))
+
+
+def timeit(name: str, fn, *args, **kw):
+    """Run ``fn`` and record its wall-clock under ``name``.
+    Returns ``(result, seconds)``."""
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    dt = time.perf_counter() - t0
+    record(name, dt)
+    return out, dt
+
+
+def clear():
+    _CALLS.clear()
+
+
+def entries() -> dict:
+    """Raw per-name call durations (copy)."""
+    return {k: list(v) for k, v in _CALLS.items()}
+
+
+def summary() -> list:
+    """One dict per name: calls, total_s, cold_s (first call), warm_s
+    (mean of later calls, None if single-call) and the compile-time
+    estimate ``compile_s = cold_s - warm_s`` (None if single-call)."""
+    out = []
+    for name, xs in _CALLS.items():
+        warm = sum(xs[1:]) / (len(xs) - 1) if len(xs) > 1 else None
+        out.append(dict(
+            name=name, calls=len(xs), total_s=sum(xs), cold_s=xs[0],
+            warm_s=warm,
+            compile_s=max(xs[0] - warm, 0.0) if warm is not None else None,
+        ))
+    return out

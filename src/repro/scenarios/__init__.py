@@ -44,6 +44,7 @@ _EXPORTS = {
     "AdmissionSpec": "spec",
     "LearnerSpec": "spec",
     "ShardingSpec": "spec",
+    "TraceSpec": "spec",
     "override": "spec",
     # registry
     "register_scenario": "registry",

@@ -43,6 +43,16 @@ def _reject(engine: str, field: str, why: str):
                      f"{field} {why}")
 
 
+def _trace_config(spec: ScenarioSpec):
+    """Lower ``spec.trace`` to the engines' TraceConfig (None = off, the
+    exact pre-trace program)."""
+    if not spec.trace.enabled:
+        return None
+    from repro.obs.trace import TraceConfig
+    return TraceConfig(phases=spec.trace.phases,
+                       per_tick=spec.trace.per_tick)
+
+
 def _check_batch_engine(spec: ScenarioSpec, engine: str):
     if spec.arrivals.kind != "batch":
         _reject(engine, "arrivals.kind",
@@ -120,6 +130,7 @@ def to_fast_config(spec: ScenarioSpec):
         max_batch_time=eng.max_batch_time,
         latency_floor=pool.latency_floor,
         bank=pool.bank if pool.bank is not None else _FAST_BANK,
+        trace=_trace_config(spec),
     )
 
 
@@ -255,6 +266,7 @@ def to_stream_config(spec: ScenarioSpec):
             steal_max=spec.sharding.steal_max,
             steal_slack=spec.sharding.steal_slack,
         ),
+        trace=_trace_config(spec),
     )
 
 

@@ -82,6 +82,16 @@ def _label_metrics(results) -> dict:
     )
 
 
+def _attach_trace(out: dict, scenario: ScenarioSpec) -> dict:
+    """When ``scenario.trace.enabled``, build the versioned trace-artifact
+    lines (``repro.obs.export.trace_doc``) from the engine's raw output and
+    attach them as ``out["trace"]`` — ready for ``write_trace``."""
+    if scenario.trace.enabled:
+        from repro.obs.export import trace_doc
+        out["trace"] = trace_doc(out)
+    return out
+
+
 def run(scenario, engine: str = None, *, seed: int = 0, n_reps: int = 1,
         horizon: int = None, rate_scale: float = 1.0,
         warmup_frac: float = 0.3, true_labels=None, max_time: float = None,
@@ -111,7 +121,7 @@ def run(scenario, engine: str = None, *, seed: int = 0, n_reps: int = 1,
                          else scenario.horizon, n_reps=n_reps, seed=seed,
                          warmup_frac=warmup_frac, rate_scale=rate_scale)
         out.update(config=cfg, metrics=stream_summary(cfg, raw), raw=raw)
-        return out
+        return _attach_trace(out, scenario)
 
     if engine == "simfast":
         from repro.core.simfast import simulate
@@ -121,11 +131,15 @@ def run(scenario, engine: str = None, *, seed: int = 0, n_reps: int = 1,
                        shard=shard)
         out.update(config=cfg, metrics=dataclasses.asdict(summarize(raw)),
                    raw=raw)
-        return out
+        return _attach_trace(out, scenario)
 
     # events: the scalar reference engine, one replication per seed
     from repro.core.clamshell import ClamShell
     cfg = to_cs_config(scenario, seed=seed)
+    rec = None
+    if scenario.trace.enabled:
+        from repro.obs.trace import EventsTrace
+        rec = EventsTrace()
     results = []
     for r in range(n_reps):
         cs = ClamShell(to_cs_config(scenario, seed=seed + r))
@@ -133,9 +147,13 @@ def run(scenario, engine: str = None, *, seed: int = 0, n_reps: int = 1,
         if true_labels is not None:
             kw["true_labels"] = true_labels
             kw["n_classes"] = scenario.n_classes
+        if rec is not None:
+            kw["trace"] = rec
         results.append(cs.run_labeling(scenario.n_tasks, **kw))
     out.update(config=cfg, metrics=_label_metrics(results), raw=results)
-    return out
+    if rec is not None:
+        out["events_trace"] = rec
+    return _attach_trace(out, scenario)
 
 
 def _slice_point(raw, i):

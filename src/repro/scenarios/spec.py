@@ -214,6 +214,31 @@ class ShardingSpec:
 
 @_static
 @dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """In-loop observability (``repro.obs``): lowered to the engines'
+    ``TraceConfig``. Disabled (the default) compiles the exact pre-trace
+    program on every engine; enabled, the trace buffers record only
+    deterministic functions of existing state and consume no extra
+    randomness, so all shared outputs stay bit-identical either way
+    (tests/test_obs.py pins both properties).
+
+    ``phases``   — per-phase latency decomposition of time-in-system
+    (backlog wait, window wait, work time, finalize lag);
+    ``per_tick`` — per-tick/-batch activity series (votes, pool
+    occupancy, drops, steals, admission scores).
+    """
+    enabled: bool = False
+    phases: bool = True
+    per_tick: bool = True
+
+    def __post_init__(self):
+        _check(TraceSpec, not self.enabled or self.phases or self.per_tick,
+               "enabled",
+               "= True needs at least one of phases/per_tick on")
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
 class EngineKnobs:
     """Discretization/measurement knobs that belong to the simulation, not
     the workload. ``dt=None`` uses the engine default (2 s batch tick /
@@ -458,6 +483,7 @@ class ScenarioSpec:
     policy: PolicySpec = PolicySpec()
     engine: EngineKnobs = EngineKnobs()
     sharding: ShardingSpec = ShardingSpec()
+    trace: TraceSpec = TraceSpec()
 
     def __post_init__(self):
         c = ScenarioSpec

@@ -87,6 +87,32 @@ def collect() -> dict:
     report["determinism_ok"] = _tree_equal(sD, sD2) and \
         _tree_equal(sD["per_shard"], sD2["per_shard"])
 
+    # ---- trace buffers under the sharded tick --------------------------
+    # (a) trace-ENABLED sharded vs unsharded: the per-phase accumulators
+    # ride the same all-gather-then-reduce path as every other metric, so
+    # the traced run must stay bit-identical across device counts too
+    tr1 = scenarios.get_scenario("stream_sharded", {"trace.enabled": True})
+    trD = scenarios.get_scenario(
+        "stream_sharded", {"trace.enabled": True, "sharding.n_devices": D})
+    t1 = run_stream(to_stream_config(tr1), HORIZON, n_reps=N_REPS, seed=3)
+    tD = run_stream(to_stream_config(trD), HORIZON, n_reps=N_REPS, seed=3)
+    a, b = _common(t1, tD)
+    report["trace_parity_sharded"] = _tree_equal(a, b)
+
+    # (b) trace-enabled vs trace=None on the SHARDED tick: tracing must
+    # not perturb any pre-existing output (no extra randomness, no state
+    # the untraced program reads)
+    base_D = scenarios.get_scenario("stream_sharded",
+                                    {"sharding.n_devices": D})
+    u = run_stream(to_stream_config(base_D), HORIZON, n_reps=N_REPS, seed=3)
+
+    def _restrict(big, ref):
+        if isinstance(ref, dict):
+            return {k: _restrict(big[k], ref[k]) for k in ref}
+        return big
+
+    report["trace_parity_none"] = _tree_equal(_restrict(tD, u), u)
+
     # ---- simfast pmap shards stay bit-identical ------------------------
     from repro.core.simfast import (FastConfig, SimScales, simulate,
                                     simulate_learning_batch, simulate_swept)

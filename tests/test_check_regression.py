@@ -6,14 +6,19 @@ import pathlib
 import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
-from benchmarks.check_regression import compare, main  # noqa: E402
+from benchmarks.check_regression import (  # noqa: E402
+    SCHEMA_VERSION, compare, main, validate_artifact,
+)
 
 
-def _write(tmp_path, sub, name, metrics):
+def _write(tmp_path, sub, name, metrics, schema_version=SCHEMA_VERSION):
     d = tmp_path / sub
     d.mkdir(exist_ok=True)
     p = d / f"BENCH_{name}.json"
-    p.write_text(json.dumps({"name": name, "metrics": metrics}))
+    doc = {"name": name, "metrics": metrics}
+    if schema_version is not None:
+        doc["schema_version"] = schema_version
+    p.write_text(json.dumps(doc))
     return str(d)
 
 
@@ -81,6 +86,68 @@ def test_missing_artifact_file_fails(tmp_path, capsys):
     rc = main(["--baseline", base, "--artifacts", str(tmp_path / "art2")])
     assert rc == 1
     assert "artifact missing" in capsys.readouterr().out
+
+
+def test_fresh_artifact_without_schema_version_fails(tmp_path, capsys):
+    """Baselines may predate schema_version, but a FRESH artifact missing
+    it means the benchmark ran with a stale harness — hard failure."""
+    base = _write(tmp_path, "base", "x", BASE, schema_version=None)
+    art = _write(tmp_path, "art", "x",
+                 {"a": {"value": 1.0, "direction": "higher"},
+                  "b": {"value": 2.0, "direction": "info"}},
+                 schema_version=None)
+    rc = main(["--baseline", base, "--artifacts", art])
+    assert rc == 1
+    assert "schema_version" in capsys.readouterr().out
+
+
+def test_validate_artifact_catches_malformed_metrics():
+    errs = validate_artifact({"name": "x", "schema_version": SCHEMA_VERSION,
+                              "metrics": {"a": {"value": "fast",
+                                                "direction": "sideways"}}})
+    assert any("'value' must be a number" in e for e in errs)
+    assert any("'direction'" in e for e in errs)
+    assert validate_artifact(
+        {"name": "x", "schema_version": SCHEMA_VERSION,
+         "metrics": {"a": {"value": 1.0, "direction": "higher"}}}) == []
+
+
+def test_delta_lines_are_machine_readable(tmp_path, capsys):
+    rc, out = _run(tmp_path, {"a": {"value": 0.9, "direction": "higher"},
+                              "b": {"value": 5.0, "direction": "info"}},
+                   capsys)
+    assert rc == 0
+    deltas = [json.loads(ln[len("DELTA "):]) for ln in out.splitlines()
+              if ln.startswith("DELTA ")]
+    by_key = {d["metric"]: d for d in deltas}
+    assert by_key["a"]["baseline"] == 1.0 and by_key["a"]["new"] == 0.9
+    assert by_key["a"]["gated"] and by_key["a"]["ok"]
+    assert not by_key["b"]["gated"]
+
+
+def test_bad_trace_artifact_fails(tmp_path, capsys):
+    base = _write(tmp_path, "base", "x", BASE)
+    art = _write(tmp_path, "art", "x",
+                 {"a": {"value": 1.0, "direction": "higher"},
+                  "b": {"value": 2.0, "direction": "info"}})
+    (pathlib.Path(art) / "TRACE_bad.jsonl").write_text(
+        json.dumps({"kind": "header", "schema_version": 999}) + "\n")
+    rc = main(["--baseline", base, "--artifacts", art])
+    assert rc == 1
+    assert "trace schema_version" in capsys.readouterr().out
+
+
+def test_valid_trace_artifact_passes(tmp_path, capsys):
+    base = _write(tmp_path, "base", "x", BASE)
+    art = _write(tmp_path, "art", "x",
+                 {"a": {"value": 1.0, "direction": "higher"},
+                  "b": {"value": 2.0, "direction": "info"}})
+    (pathlib.Path(art) / "TRACE_ok.jsonl").write_text(
+        json.dumps({"kind": "header", "schema_version": 1,
+                    "engine": "stream", "scenario": "s"}) + "\n")
+    rc = main(["--baseline", base, "--artifacts", art])
+    assert rc == 0
+    assert "trace header valid" in capsys.readouterr().out
 
 
 def test_compare_rows_shape():

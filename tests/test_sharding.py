@@ -79,6 +79,14 @@ def test_steal_determinism_fixed_seed(report):
     assert report["determinism_ok"] is True
 
 
+def test_trace_buffers_sharded_parity(report):
+    """Trace-enabled runs stay bit-identical across device counts, and
+    tracing must not perturb any pre-existing output of the sharded tick
+    (trace=None vs TraceConfig agree on every shared key)."""
+    assert report["trace_parity_sharded"] is True
+    assert report["trace_parity_none"] is True
+
+
 def test_simfast_pmap_paths_bit_identical(report):
     assert report["simfast_parity"] is True
     assert report["simfast_swept_parity"] is True
