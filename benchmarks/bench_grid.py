@@ -1,0 +1,131 @@
+"""Grid engine vs per-cell runs: compile-cost amortization (repro.grid).
+
+The paper-table workflow runs a Scenario×Policy cartesian product. Every
+distinct static config (each straggler setting, each votes cap, each
+offered rate...) that goes through ``scenarios.run`` pays its own jax
+trace + XLA compile of the whole tick program — for a 24-cell table that
+is 24 compilations of a program whose compile time dwarfs its execute
+time at paper sizes. ``repro.grid.run_grid`` partitions the cells into
+static-config equivalence classes (traced axes — rate, votes cap, the
+Beta accuracy prior — are carried as vmapped traced leaves) and compiles
+once per class: the 24-cell ``paper_stream`` grid is 2 compilations.
+
+Sections (one GRID_<name>.jsonl artifact + BENCH_grid.json):
+
+  1. grid run — ``run_grid`` wall-clock, with per-class compile/execute
+     split from ``repro.obs.timing``;
+  2. per-cell baseline — the same cells through ``scenarios.run`` in a
+     fresh-compile-per-static-config loop (the pre-grid cost), which
+     doubles as the bit-parity reference: every cell's summary metrics
+     must equal the standalone run's exactly.
+
+Gated: ``speedup_x`` (grid vs per-cell wall-clock; the full 24-cell grid
+must clear the >=5x acceptance target, the smoke baseline is committed
+conservatively below the smoke measurement), ``cell_parity`` (fraction of
+cells bit-identical to their standalone run — 1.0 or bust) and
+``cells_per_compile_x`` (cells amortized per compilation). Absolute
+wall-clocks are info-only (machine-dependent).
+"""
+from __future__ import annotations
+
+import math
+import time
+
+from benchmarks.common import emit, timed, write_bench_json
+
+#: full-mode grid: 24 cells in 2 static classes (see registry)
+FULL_GRID = "paper_stream"
+FULL_HORIZON = 400
+#: smoke-mode grid dims (one static class; six cells, one compile)
+SMOKE_AXES = (("arrivals.rate", (0.008, 0.010, 0.012)),
+              ("policy.redundancy.votes", (1, 3)))
+SMOKE_HORIZON = 120
+SMOKE_DIMS = {"pool.pool_size": 6, "window": 16}
+
+
+def _percell_baseline(grid, horizon, reps):
+    """The pre-grid paper-table loop: one ``scenarios.run`` per cell, a
+    fresh XLA compile per distinct static config. Returns (metrics per
+    cell, wall seconds)."""
+    from repro import scenarios
+    t0 = time.perf_counter()
+    rows = []
+    for _idx, _values, spec in grid.cells():
+        rows.append(scenarios.run(spec, engine="stream", horizon=horizon,
+                                  n_reps=reps, seed=0)["metrics"])
+    return rows, time.perf_counter() - t0
+
+
+def _parity(grid_res, percell_rows) -> float:
+    """Fraction of cells whose grid-run summary metrics equal the
+    standalone per-cell run's EXACTLY (the traced bundles reproduce the
+    static constants bit-for-bit, so any drift here is a real bug)."""
+    def eq(a, b):
+        return a == b or (isinstance(a, float) and isinstance(b, float)
+                          and math.isnan(a) and math.isnan(b))
+
+    ok = 0
+    for cell, ref in zip(grid_res["cells"], percell_rows):
+        got = cell["metrics"]
+        if all(eq(got[k], v) for k, v in ref.items() if k != "phases"):
+            ok += 1
+    return ok / max(len(percell_rows), 1)
+
+
+def run(smoke: bool = False):
+    from repro import scenarios
+    from repro.grid import run_grid
+    from repro.obs.export import grid_doc, write_grid
+
+    if smoke:
+        grid = scenarios.GridSpec(
+            base=scenarios.get_scenario("stream_default", SMOKE_DIMS),
+            axes=SMOKE_AXES, name="grid_bench_smoke")
+        horizon, reps = SMOKE_HORIZON, 2
+    else:
+        grid = scenarios.get_grid(FULL_GRID)
+        horizon, reps = FULL_HORIZON, 2
+
+    res, us_grid = timed(
+        lambda: run_grid(grid, n_reps=reps, horizon=horizon),
+        name=f"grid[{grid.name}]")
+    grid_s = us_grid / 1e6
+    compile_s = sum(c["compile_s"] or 0.0 for c in res["classes"])
+    execute_s = sum(c["execute_s"] or 0.0 for c in res["classes"])
+    for c in res["classes"]:
+        emit(f"grid_class{c['class_id']}", 0.0,
+             f"n_cells={c['n_cells']};"
+             f"compile_s={(c['compile_s'] or 0.0):.2f};"
+             f"execute_s={(c['execute_s'] or 0.0):.2f};"
+             f"batched={int(c['batched'])}")
+
+    percell_rows, percell_s = _percell_baseline(grid, horizon, reps)
+    speedup = percell_s / max(grid_s, 1e-9)
+    parity = _parity(res, percell_rows)
+    amort = res["n_cells"] / max(res["n_classes"], 1)
+    emit("grid_vs_percell", us_grid,
+         f"n_cells={res['n_cells']};n_classes={res['n_classes']};"
+         f"grid_s={grid_s:.1f};percell_s={percell_s:.1f};"
+         f"speedup_x={speedup:.1f};cell_parity={parity:.3f};"
+         f"target_x=5")
+
+    # the regression gate's 30% tolerance would let a fractional parity
+    # through; bit-parity is all-or-nothing, so fail the bench run itself
+    if parity != 1.0:
+        raise RuntimeError(
+            f"grid/per-cell parity broke: only {parity:.3f} of "
+            f"{res['n_cells']} cells matched their standalone run")
+
+    path = write_grid(grid_doc(res))
+    emit("grid_artifact", 0.0, f"path={path}")
+    write_bench_json("grid", {
+        "speedup_x": (speedup, "higher"),
+        "cell_parity": (parity, "higher"),
+        "cells_per_compile_x": (amort, "higher"),
+        "grid_wall_s": grid_s,
+        "percell_wall_s": percell_s,
+        "grid_compile_s": compile_s,
+        "grid_execute_s": execute_s,
+    }, meta={"grid": grid.name, "horizon": horizon, "reps": reps,
+             "smoke": smoke, "n_cells": res["n_cells"],
+             "n_classes": res["n_classes"]})

@@ -3,7 +3,10 @@
 Compares every artifact produced by the benchmark run (``artifacts/``, or
 ``$BENCH_DIR``) against the committed baseline in ``benchmarks/baselines/``
 and exits non-zero when any shared metric regresses more than ``--tol``
-(default 30%). Direction comes from the artifact: ``higher`` means the
+(default 30%). Also schema-validates the sidecar JSONL artifacts:
+``TRACE_*.jsonl`` (run traces) and ``GRID_*.jsonl`` (grid runs, whose
+per-class compile/execute wall-clocks are surfaced as ungated DELTA
+lines). Direction comes from the artifact: ``higher`` means the
 value must not drop below ``baseline * (1 - tol)``, ``lower`` means it must
 not rise above ``baseline * (1 + tol)``; ``info`` metrics are reported but
 never gated.
@@ -104,6 +107,63 @@ def validate_traces(artifacts_dir: str) -> list:
     return errs
 
 
+def validate_grids(artifacts_dir: str) -> list:
+    """Schema-check every GRID_*.jsonl in the artifacts dir (absence is
+    fine — not every run executes a grid). A valid grid artifact has a
+    versioned ``artifact='grid'`` header whose cell/class counts match
+    the lines it carries; per-class compile/execute wall-clocks are
+    emitted as ungated DELTA lines for trend scrapers."""
+    errs = []
+    for path in sorted(glob.glob(os.path.join(artifacts_dir,
+                                              "GRID_*.jsonl"))):
+        fname = os.path.basename(path)
+        try:
+            with open(path) as f:
+                lines = [json.loads(ln) for ln in f if ln.strip()]
+        except (OSError, json.JSONDecodeError) as e:
+            errs.append(f"{fname}: unreadable grid artifact ({e})")
+            continue
+        hdr = lines[0] if lines else {}
+        if hdr.get("kind") != "header" or hdr.get("artifact") != "grid":
+            errs.append(f"{fname}: first line must be kind='header' with "
+                        f"artifact='grid', got kind={hdr.get('kind')!r} "
+                        f"artifact={hdr.get('artifact')!r}")
+            continue
+        if hdr.get("schema_version") != TRACE_SCHEMA_VERSION:
+            errs.append(f"{fname}: grid schema_version "
+                        f"{hdr.get('schema_version')!r} != "
+                        f"{TRACE_SCHEMA_VERSION}")
+            continue
+        cells = [ln for ln in lines if ln.get("kind") == "cell"]
+        classes = [ln for ln in lines if ln.get("kind") == "class"]
+        if len(cells) != hdr.get("n_cells"):
+            errs.append(f"{fname}: header says {hdr.get('n_cells')} cells "
+                        f"but the artifact carries {len(cells)} cell lines")
+            continue
+        if len(classes) != hdr.get("n_classes"):
+            errs.append(f"{fname}: header says {hdr.get('n_classes')} "
+                        f"classes but the artifact carries "
+                        f"{len(classes)} class lines")
+            continue
+        bad = [c for c in cells if not isinstance(c.get("metrics"), dict)
+               or not c["metrics"]]
+        if bad:
+            errs.append(f"{fname}: {len(bad)} cell line(s) without a "
+                        "metrics dict")
+            continue
+        for c in classes:
+            for key in ("compile_s", "execute_s"):
+                print("DELTA " + json.dumps(
+                    dict(artifact=fname,
+                         metric=f"class{c.get('class_id')}.{key}",
+                         baseline=None, new=c.get(key), regress=None,
+                         gated=False, ok=True), sort_keys=True))
+        print(f"[ok  ] {fname}: grid artifact valid "
+              f"({hdr['n_cells']} cells / {hdr['n_classes']} classes, "
+              f"schema v{hdr['schema_version']})")
+    return errs
+
+
 def compare(baseline: dict, artifact: dict, tol: float):
     """Yield (metric, base, new, regress_frac, gated, ok) rows.
 
@@ -200,6 +260,9 @@ def main(argv=None) -> int:
                 failures.append(f"{fname}:{key} regressed {100 * reg:.1f}% "
                                 f"(baseline {b:g} -> {n:g})")
     for err in validate_traces(args.artifacts):
+        failures.append(err)
+        print(f"[FAIL] {err}")
+    for err in validate_grids(args.artifacts):
         failures.append(err)
         print(f"[FAIL] {err}")
     if failures:

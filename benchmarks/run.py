@@ -16,8 +16,9 @@ def main() -> None:
     # anything initializes jax so the flag takes effect
     from benchmarks import bench_simfast
     from benchmarks import (bench_workers, bench_straggler, bench_pool,
-                            bench_combined, bench_hybrid, bench_e2e,
-                            bench_kernels, bench_labelstream, roofline)
+                            bench_combined, bench_grid, bench_hybrid,
+                            bench_e2e, bench_kernels, bench_labelstream,
+                            roofline)
     print("name,us_per_call,derived")
     t0 = time.time()
     if smoke:
@@ -33,6 +34,9 @@ def main() -> None:
         print("# --- smoke: labelstream service (repro.scenarios registry; "
               "worker-aware routing + admission sections) ---", flush=True)
         bench_labelstream.run(smoke=True)
+        print("# --- smoke: grid engine (one compile per static class "
+              "vs per-cell runs) ---", flush=True)
+        bench_grid.run(smoke=True)
         print(f"# total {time.time()-t0:.1f}s", flush=True)
         return
     for mod, tag in ((bench_workers, "worker latency CDFs (Fig 2)"),
@@ -45,6 +49,9 @@ def main() -> None:
                      (bench_kernels, "pallas kernels"),
                      (bench_labelstream,
                       "labelstream streaming service + worker-aware routing"),
+                     (bench_grid,
+                      "grid engine: Scenario×Policy table, one compile "
+                      "per static class"),
                      (roofline, "roofline (dry-run artifacts)")):
         print(f"# --- {tag} ---", flush=True)
         mod.run()

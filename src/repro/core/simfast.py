@@ -89,6 +89,34 @@ class SimScales(NamedTuple):
     recruit: jnp.ndarray = 1.0   # scales recruitment delay means
 
 
+class PopTraced(NamedTuple):
+    """Traced ABSOLUTE overrides on the static population parameters.
+
+    Each leaf replaces the same-named ``FastConfig`` field with a traced
+    value; ``0.0`` is the "not overridden" sentinel (every real value is
+    validated positive by the spec layer, so 0 is out of domain) and falls
+    back to the static field via ``jnp.where``. Because the override is the
+    *absolute* target value — not a multiplier — a cell whose traced value
+    equals the static literal is bit-for-bit the unswept program, which is
+    what lets ``repro.grid`` batch heterogeneous cells into one compilation
+    while pinning per-cell parity against independent runs. The Beta
+    accuracy params ride through ``jax.random.beta`` with traced parameters
+    (same sampling path as the static draw, bit-identical when equal).
+    """
+    median_mu: jnp.ndarray = 0.0
+    session_mean_s: jnp.ndarray = 0.0
+    recruit_mean_s: jnp.ndarray = 0.0
+    cold_recruit_mean_s: jnp.ndarray = 0.0
+    acc_a: jnp.ndarray = 0.0
+    acc_b: jnp.ndarray = 0.0
+
+
+def _ov(traced, static):
+    """Absolute-override resolve: the traced value unless it is the 0
+    sentinel, else the static config literal."""
+    return jnp.where(traced > 0, traced, static)
+
+
 @dataclasses.dataclass(frozen=True)
 class FastConfig:
     """Static (hashable) configuration for the vectorized engine.
@@ -164,29 +192,32 @@ class FastConfig:
 # population draws (match workers.Population.draw distributions)
 # --------------------------------------------------------------------------
 
-def _draw_workers(cfg: FastConfig, key, shape, scales=None):
+def _draw_workers(cfg: FastConfig, key, shape, pop=None):
     k_mu, k_cv, k_acc = jax.random.split(key, 3)
-    med = cfg.median_mu if scales is None else cfg.median_mu * scales.mu
+    med = cfg.median_mu if pop is None else _ov(pop.median_mu, cfg.median_mu)
     mu = med * jnp.exp(cfg.sigma_ln * jax.random.normal(k_mu, shape))
     mu = jnp.maximum(15.0, mu)
     sigma = mu * jax.random.uniform(k_cv, shape, minval=cfg.cv_lo,
                                     maxval=cfg.cv_hi)
-    acc = jnp.clip(jax.random.beta(k_acc, cfg.acc_a, cfg.acc_b, shape),
-                   0.55, 0.995)
+    # reparameterized accuracy draw: beta params may be traced overrides,
+    # so worker accuracy is a sweep/grid axis without recompiling
+    a = cfg.acc_a if pop is None else _ov(pop.acc_a, cfg.acc_a)
+    b = cfg.acc_b if pop is None else _ov(pop.acc_b, cfg.acc_b)
+    acc = jnp.clip(jax.random.beta(k_acc, a, b, shape), 0.55, 0.995)
     return mu, sigma, acc
 
 
-def _init_workers(cfg: FastConfig, key, scales=None):
+def _init_workers(cfg: FastConfig, key, pop=None):
     """Dense worker-pool state; everything is a fixed-shape array."""
     P = cfg.pool_size
     k_pop, k_sess, k_cold = jax.random.split(key, 3)
     # column 0 of the bank seeds the initial pool; later columns are the
     # fresh workers consumed by churn/eviction backfill
-    mu_b, sigma_b, acc_b = _draw_workers(cfg, k_pop, (P, cfg.bank), scales)
-    sess_mean = cfg.session_mean_s if scales is None \
-        else cfg.session_mean_s * scales.session
-    cold_mean = cfg.cold_recruit_mean_s if scales is None \
-        else cfg.cold_recruit_mean_s * scales.recruit
+    mu_b, sigma_b, acc_b = _draw_workers(cfg, k_pop, (P, cfg.bank), pop)
+    sess_mean = cfg.session_mean_s if pop is None \
+        else _ov(pop.session_mean_s, cfg.session_mean_s)
+    cold_mean = cfg.cold_recruit_mean_s if pop is None \
+        else _ov(pop.cold_recruit_mean_s, cfg.cold_recruit_mean_s)
     session = jax.random.exponential(k_sess, (P,)) * sess_mean
     if cfg.retainer:
         blocked = jnp.zeros((P,))           # synchronous fill (paper §6.1)
@@ -392,7 +423,7 @@ def churn_and_maintain(cfg: FastConfig, ws, banks, t, u_delay, u_sess,
 # --------------------------------------------------------------------------
 
 def _tick(cfg: FastConfig, ws, ts, banks, true_label, t0, t, seed_u32, step,
-          scales=None):
+          pop=None):
     """Process all events at/before time t and make new assignments in
     O(P + B) work (padded scatters + cumsum/searchsorted matching, one
     hashed uniform block). ``banks`` and ``true_label`` are loop-invariant
@@ -463,9 +494,10 @@ def _tick(cfg: FastConfig, ws, ts, banks, true_label, t0, t, seed_u32, step,
     # matching RetainerPool._recruit_async drawing from pool.recruit_mean)
     rm = cfg.recruit_mean_s if cfg.retainer else cfg.cold_recruit_mean_s
     sm = None
-    if scales is not None:
-        rm = rm * scales.recruit
-        sm = cfg.session_mean_s * scales.session
+    if pop is not None:
+        rm = _ov(pop.recruit_mean_s if cfg.retainer
+                 else pop.cold_recruit_mean_s, rm)
+        sm = _ov(pop.session_mean_s, cfg.session_mean_s)
     ws, _ = churn_and_maintain(cfg, ws, banks, t, up[2], up[3], rm, sm)
 
     # ---- assignment (priority routing + straggler duplication) ---------
@@ -533,7 +565,7 @@ def _tick(cfg: FastConfig, ws, ts, banks, true_label, t0, t, seed_u32, step,
 # --------------------------------------------------------------------------
 
 def _run_batch(cfg: FastConfig, ws, banks, t0, seed_u32, true_labels, valid,
-               scales=None):
+               pop=None):
     """Label one batch to completion (event-jumping while_loop)."""
     B = cfg.eff_batch
     true_labels = true_labels.astype(jnp.int32)
@@ -552,7 +584,7 @@ def _run_batch(cfg: FastConfig, ws, banks, t0, seed_u32, true_labels, valid,
     def body(carry):
         step, ws, ts, t = carry
         ws, ts, t_next = _tick(cfg, ws, ts, banks, true_labels, t0, t,
-                               seed_u32, step, scales)
+                               seed_u32, step, pop)
         return step + 1, ws, ts, t_next
 
     steps, ws, ts, _ = jax.lax.while_loop(
@@ -567,9 +599,9 @@ def _run_batch(cfg: FastConfig, ws, banks, t0, seed_u32, true_labels, valid,
     return ws, ts, t_end, steps
 
 
-def _simulate_one(cfg: FastConfig, key, true_labels, scales=None):
+def _simulate_one(cfg: FastConfig, key, true_labels, pop=None):
     k_init, k_run = jax.random.split(key)
-    ws, banks = _init_workers(cfg, k_init, scales)
+    ws, banks = _init_workers(cfg, k_init, pop)
     seed = jax.random.bits(k_run, (), jnp.uint32)
     B, T = cfg.eff_batch, cfg.n_tasks
     pad = cfg.n_batches * B - T
@@ -585,7 +617,7 @@ def _simulate_one(cfg: FastConfig, key, true_labels, scales=None):
         seed_b = _lowbias32(seed ^ (i.astype(jnp.uint32) + 1)
                             * jnp.uint32(0x9E3779B9))
         ws, ts, t_end, steps = _run_batch(cfg, ws, banks, t, seed_b, lab,
-                                          val, scales)
+                                          val, pop)
         fin = ts["done"] & val
         out = dict(latency=jnp.where(fin, ts["completed"] - t, 0.0),
                    done=fin,
@@ -703,16 +735,16 @@ def simulate(cfg, n_reps: int, *, seed: int = 0,
 
 
 @functools.partial(jax.jit, static_argnums=0)
-def _simulate_swept(cfg: FastConfig, keys, true_labels, scales):
-    return jax.vmap(lambda sc: jax.vmap(
-        lambda k: _simulate_one(cfg, k, true_labels, sc))(keys))(scales)
+def _simulate_swept(cfg: FastConfig, keys, true_labels, pop):
+    return jax.vmap(lambda p: jax.vmap(
+        lambda k: _simulate_one(cfg, k, true_labels, p))(keys))(pop)
 
 
 @functools.partial(jax.pmap, static_broadcasted_argnums=0,
                    in_axes=(None, None, None, 0))
-def _simulate_swept_pmap(cfg: FastConfig, keys, true_labels, scales):
-    return jax.vmap(lambda sc: jax.vmap(
-        lambda k: _simulate_one(cfg, k, true_labels, sc))(keys))(scales)
+def _simulate_swept_pmap(cfg: FastConfig, keys, true_labels, pop):
+    return jax.vmap(lambda p: jax.vmap(
+        lambda k: _simulate_one(cfg, k, true_labels, p))(keys))(pop)
 
 
 def simulate_swept(cfg, n_reps: int, scales: SimScales, *, seed: int = 0,
@@ -727,31 +759,86 @@ def simulate_swept(cfg, n_reps: int, scales: SimScales, *, seed: int = 0,
     ``(V, n_reps)``. This is the ``repro.scenarios.sweep`` backend for
     the simfast engine's continuous pool axes.
 
+    Thin wrapper over :func:`simulate_swept_pop`: the multipliers are
+    resolved against the static config into the absolute traced values the
+    generalized bundle carries (the products are the same f32 arithmetic
+    the pre-bundle tick performed, so results are unchanged bit for bit).
+    """
+    cfg = _as_fast_config(cfg)
+    mu = jnp.asarray(scales.mu, jnp.float32)
+    se = jnp.asarray(scales.session, jnp.float32)
+    re = jnp.asarray(scales.recruit, jnp.float32)
+    pop = PopTraced(
+        median_mu=cfg.median_mu * mu,
+        session_mean_s=cfg.session_mean_s * se,
+        recruit_mean_s=cfg.recruit_mean_s * re,
+        cold_recruit_mean_s=cfg.cold_recruit_mean_s * re)
+    return simulate_swept_pop(cfg, n_reps, pop, seed=seed,
+                              true_labels=true_labels, shard=shard)
+
+
+def simulate_swept_pop(cfg, n_reps: int, pop: PopTraced, *, seed: int = 0,
+                       true_labels=None, shard: bool = True,
+                       timing_name: str = None):
+    """Multi-axis one-compilation sweep over a :class:`PopTraced` bundle.
+
+    ``pop`` leaves share a leading sweep axis ``(V,)`` (scalars broadcast);
+    each sweep point runs the tick with that point's absolute population
+    overrides — any subset of {median_mu, session/recruit means, Beta
+    accuracy params} varies across points under ONE compilation. This is
+    the ``repro.grid`` backend for the simfast engine.
+
     With multiple local devices and ``shard=True`` the sweep axis is
     additionally pmapped: sweep points are padded to a device multiple
     (repeating the last point), split ``(D, V/D)`` across devices, and the
     padding dropped on the way out — every device traces the same program,
     so results are bit-identical to the single-device path.
+
+    ``timing_name`` routes an explicit AOT lower/compile + execute split
+    through the ``repro.obs.timing`` registry (entries
+    ``<timing_name>.compile`` / ``<timing_name>.execute``).
     """
     cfg = _as_fast_config(cfg)
     if true_labels is None:
         true_labels = np.zeros(cfg.n_tasks, dtype=np.int32)
     true_labels = jnp.asarray(true_labels, jnp.int32)
-    V = max([int(np.asarray(leaf).shape[0]) for leaf in scales
+    V = max([int(np.asarray(leaf).shape[0]) for leaf in pop
              if np.ndim(leaf) > 0] or [1])
-    scales = SimScales(*[jnp.broadcast_to(jnp.asarray(leaf, jnp.float32), (V,))
-                         for leaf in scales])
+    pop = PopTraced(*[jnp.broadcast_to(jnp.asarray(leaf, jnp.float32), (V,))
+                      for leaf in pop])
     keys = jax.random.split(jax.random.key(seed), n_reps)
     D = jax.local_device_count()
     if shard and D > 1 and V >= D:
         pad = (-V) % D
-        padded = SimScales(*[
+        padded = PopTraced(*[
             jnp.concatenate([leaf, jnp.broadcast_to(leaf[-1:], (pad,))])
-            .reshape(D, -1) for leaf in scales])
-        out = _simulate_swept_pmap(cfg, keys, true_labels, padded)
+            .reshape(D, -1) for leaf in pop])
+        out = _aot_timed(_simulate_swept_pmap, timing_name, 1,
+                         cfg, keys, true_labels, padded)
         return {k: v.reshape(V + pad, *v.shape[2:])[:V]
                 for k, v in out.items()}
-    return _simulate_swept(cfg, keys, true_labels, scales)
+    return _aot_timed(_simulate_swept, timing_name, 1,
+                      cfg, keys, true_labels, pop)
+
+
+def _aot_timed(fn, timing_name, n_static, *args):
+    """Call a jitted/pmapped entry point, optionally through the AOT
+    ``lower().compile()`` path with the compile and execute wall-clocks
+    recorded separately in ``repro.obs.timing`` (entries
+    ``<timing_name>.compile`` / ``<timing_name>.execute``). The first
+    ``n_static`` args are static and not passed to the compiled
+    executable. Shared by the simfast and stream grid backends."""
+    if timing_name is None:
+        return fn(*args)
+    import time
+    from repro.obs import timing
+    t0 = time.perf_counter()
+    compiled = fn.lower(*args).compile()
+    timing.record(f"{timing_name}.compile", time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(compiled(*args[n_static:]))
+    timing.record(f"{timing_name}.execute", time.perf_counter() - t0)
+    return out
 
 
 # --------------------------------------------------------------------------

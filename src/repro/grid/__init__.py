@@ -1,0 +1,12 @@
+"""Batched Scenario×Policy grid runs with compile-cost amortization.
+
+    from repro import grid, scenarios
+    res = grid.run_grid(scenarios.get_grid("paper_stream"), n_reps=2)
+    res["n_classes"]   # compilations paid, vs res["n_cells"] cells run
+
+``python -m repro.grid <grid-name>`` runs a registered grid and writes
+its ``GRID_<name>.jsonl`` artifact.
+"""
+from repro.grid.engine import GridClass, partition_grid, run_grid
+
+__all__ = ["GridClass", "partition_grid", "run_grid"]

@@ -39,29 +39,39 @@ def init_arrival_state(cfg: ArrivalConfig):
     return dict(mode=jnp.zeros((), jnp.int32))   # mmpp state; unused otherwise
 
 
-def rate_at(cfg: ArrivalConfig, state, t):
-    """Instantaneous offered rate (tasks/s) at time t."""
+def rate_at(cfg: ArrivalConfig, state, t, rate=None):
+    """Instantaneous offered rate (tasks/s) at time t.
+
+    ``rate`` optionally replaces ``cfg.rate`` (the poisson rate / mmpp calm
+    rate / diurnal mean) with a traced absolute value, so the base rate is a
+    grid axis without recompilation; the mmpp burst rate stays static.
+    """
+    base = jnp.float32(cfg.rate) if rate is None else rate
     if cfg.kind == "poisson":
-        return jnp.full((), cfg.rate)
+        return jnp.full((), base)
     if cfg.kind == "mmpp":
-        return jnp.where(state["mode"] == 0, cfg.rate, cfg.rate_hi)
+        return jnp.where(state["mode"] == 0, base, cfg.rate_hi)
     if cfg.kind == "diurnal":
-        return cfg.rate * (1.0 + cfg.amplitude
-                           * jnp.sin(2.0 * jnp.pi * t / cfg.period_s))
+        return base * (1.0 + cfg.amplitude
+                       * jnp.sin(2.0 * jnp.pi * t / cfg.period_s))
     raise ValueError(f"unknown arrival kind: {cfg.kind}")
 
 
-def sample_arrivals(cfg: ArrivalConfig, state, key, t, dt, scale=1.0):
+def sample_arrivals(cfg: ArrivalConfig, state, key, t, dt, scale=1.0,
+                    rate_abs=None):
     """Draw the number of arrivals in [t, t+dt).
 
     Returns ``(n, state, rate)``; jit-safe (``cfg.kind`` is static). The
     mmpp mode flips with probability ``1 - exp(-dt/dwell)`` per tick — the
     discretized 2-state chain. ``scale`` multiplies the offered rate and may
     be a traced scalar, so load sweeps share one compilation of the
-    streaming tick instead of recompiling per sweep point.
+    streaming tick instead of recompiling per sweep point. ``rate_abs``
+    instead *replaces* the base rate with a traced absolute value — exact
+    for mmpp too (only the calm rate is overridden), matching the
+    semantics of overriding ``arrivals.rate`` in the spec layer.
     """
     k_n, k_sw = jax.random.split(key)
-    rate = rate_at(cfg, state, t) * scale
+    rate = rate_at(cfg, state, t, rate_abs) * scale
     n = jax.random.poisson(k_n, jnp.maximum(rate, 0.0) * dt).astype(jnp.int32)
     if cfg.kind == "mmpp":
         p_switch = 1.0 - jnp.exp(-dt / cfg.dwell_mean_s)

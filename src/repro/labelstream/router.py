@@ -57,7 +57,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,8 +65,8 @@ import numpy as np
 
 from repro.core.crowd import SWITCH_DELAY_S, WAIT_PAY_PER_S, WORK_PAY_PER_RECORD
 from repro.core.simfast import (
-    FastConfig, INF, _init_workers, _uniform_block, churn_and_maintain,
-    draw_latency, priority_match,
+    FastConfig, INF, PopTraced, _aot_timed, _init_workers, _uniform_block,
+    churn_and_maintain, draw_latency, priority_match,
 )
 from repro.obs.trace import PHASES as TRACE_PHASES
 from repro.obs.trace import TraceConfig
@@ -253,6 +253,27 @@ def heterogeneous_stream_config(**overrides) -> StreamConfig:
     return StreamConfig(**base)
 
 
+class StreamTraced(NamedTuple):
+    """Traced ABSOLUTE overrides on the static stream knobs — the stream
+    engine's multi-axis sweep bundle (``repro.grid`` backend).
+
+    Like :class:`repro.core.simfast.PopTraced`, each leaf replaces the
+    same-named static value with a traced absolute; ``0``/``0.0`` is the
+    "not overridden" sentinel. ``rate`` replaces ``arrivals.rate`` (the
+    poisson rate / mmpp calm rate / diurnal mean — exact override, unlike
+    the multiplicative ``rate_scale``, which also scales the mmpp burst
+    rate). ``votes_cap`` is the masked effective cap of
+    ``run_stream_votes_sweep`` (buffers stay sized at the static cap);
+    the Beta accuracy params reach the worker-bank init via the
+    reparameterized draw. A bundle whose values equal the static config
+    reproduces ``run_stream`` bit for bit.
+    """
+    rate: jnp.ndarray = 0.0
+    votes_cap: jnp.ndarray = 0
+    acc_a: jnp.ndarray = 0.0
+    acc_b: jnp.ndarray = 0.0
+
+
 # --------------------------------------------------------------------------
 # state init
 # --------------------------------------------------------------------------
@@ -284,8 +305,8 @@ def _init_window(cfg: StreamConfig):
     return win
 
 
-def _init_shard(cfg: StreamConfig, key):
-    ws, banks = _init_workers(cfg.fast, key)
+def _init_shard(cfg: StreamConfig, key, pop=None):
+    ws, banks = _init_workers(cfg.fast, key, pop)
     P, Q = cfg.pool_size, cfg.backlog
     ws["est_correct"] = jnp.zeros((P,))
     ws["est_n"] = jnp.zeros((P,))
@@ -823,7 +844,7 @@ def _steal_rebalance(cfg: StreamConfig, bl, lo, axis_name):
 # --------------------------------------------------------------------------
 
 def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
-             cap_eff=None, axis_name=None):
+             cap_eff=None, axis_name=None, traced=None):
     """One replication of the streaming service.
 
     ``axis_name`` switches on device sharding: the function then runs
@@ -835,8 +856,21 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
     canonical shard order before the final reduction — so the reduction
     code (and its float summation order) is IDENTICAL for every device
     count, which is what pins single-device bit-parity. ``cap_eff`` is the
-    traced effective vote budget for the masked votes-cap sweep."""
+    traced effective vote budget for the masked votes-cap sweep;
+    ``traced`` is a :class:`StreamTraced` bundle of absolute overrides
+    (grid path) — it subsumes ``cap_eff`` and the arrival rate and routes
+    the Beta accuracy params into the worker-bank init."""
     from repro.learning import linear
+
+    rate_abs, pop = None, None
+    if traced is not None:
+        cap_eff = jnp.where(traced.votes_cap > 0,
+                            traced.votes_cap,
+                            cfg.policy.votes_cap).astype(jnp.int32)
+        rate_abs = jnp.where(traced.rate > 0, traced.rate,
+                             jnp.float32(cfg.arrivals.rate))
+        pop = PopTraced(acc_a=jnp.asarray(traced.acc_a, jnp.float32),
+                        acc_b=jnp.asarray(traced.acc_b, jnp.float32))
 
     S, L, sh = cfg.n_shards, cfg.learner, cfg.sharding
     D = sh.n_devices if axis_name is not None else 1
@@ -862,7 +896,8 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
         init_kd = jax.lax.dynamic_slice_in_dim(init_kd, lo, Sl)
         seeds = jax.lax.dynamic_slice_in_dim(seeds, lo, Sl)
     ws, banks, win, bl = jax.vmap(
-        lambda kd: _init_shard(cfg, jax.random.wrap_key_data(kd)))(init_kd)
+        lambda kd: _init_shard(cfg, jax.random.wrap_key_data(kd),
+                               pop))(init_kd)
     zi = lambda: jnp.zeros((Sl,), jnp.int32)
     state = dict(
         t=jnp.zeros(()), step=jnp.zeros((), jnp.int32), key=k_run,
@@ -909,7 +944,8 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
         # samples the same stream from the same key); each device then
         # slices out its own shard group's arrival counts
         n_new, arr, _rate = sample_arrivals(cfg.arrivals, state["arr"],
-                                            k_arr, t, cfg.dt, rate_scale)
+                                            k_arr, t, cfg.dt, rate_scale,
+                                            rate_abs)
         n_cap = jnp.minimum(n_new, cap_total)
         sid = jax.random.randint(k_sid, (cap_total,), 0, S)
         valid = jnp.arange(cap_total) < n_cap
@@ -1280,6 +1316,88 @@ def run_stream_votes_sweep(cfg, horizon: int, votes_caps, *, n_reps: int = 1,
     warmup_t = float(warmup_frac * horizon * cfg.dt)
     out = _run_capswept(cfg, int(horizon), keys, warmup_t,
                         jnp.asarray(caps, jnp.int32), jnp.float32(rate_scale))
+    out = dict(out)
+    out["warmup_t"] = warmup_t
+    out["measured_s"] = horizon * cfg.dt - warmup_t
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _run_grid_jit(cfg: StreamConfig, horizon: int, keys, warmup_t, traced):
+    return jax.vmap(lambda tr: jax.vmap(
+        lambda k: _run_one(cfg, horizon, k, warmup_t, jnp.float32(1.0),
+                           traced=tr))(keys))(traced)
+
+
+@functools.partial(jax.pmap, static_broadcasted_argnums=(0, 1),
+                   in_axes=(None, None, None, None, 0))
+def _run_grid_pmap(cfg: StreamConfig, horizon: int, keys, warmup_t, traced):
+    return jax.vmap(lambda tr: jax.vmap(
+        lambda k: _run_one(cfg, horizon, k, warmup_t, jnp.float32(1.0),
+                           traced=tr))(keys))(traced)
+
+
+def run_stream_grid(cfg, horizon: int, traced: StreamTraced, *,
+                    n_reps: int = 1, seed: int = 0,
+                    warmup_frac: float = 0.3, shard: bool = True,
+                    timing_name: str = None):
+    """Multi-axis one-compilation grid over a :class:`StreamTraced` bundle.
+
+    ``traced`` leaves share a leading cell axis ``(V,)`` (scalars
+    broadcast); each cell runs the full streaming service with that cell's
+    absolute overrides — any subset of {arrival rate, votes cap, Beta
+    accuracy params} varies across cells under ONE compilation. This is
+    the ``repro.grid`` backend for the stream engine: a cell whose traced
+    values equal the static config is bit-for-bit a standalone
+    ``run_stream`` (vote buffers are sized at the static ``votes_cap``,
+    exactly the masked-cap program of ``run_stream_votes_sweep``).
+
+    With multiple local devices and ``shard=True`` the cell axis is
+    pmapped (cells padded to a device multiple repeating the last cell,
+    split ``(D, V/D)``, padding dropped on the way out). Device-sharded
+    single runs (``sharding.n_devices > 1``) are rejected — the mesh is
+    spent on grid cells here. ``timing_name`` routes an AOT
+    lower/compile + execute split through ``repro.obs.timing``. Returns
+    stacked arrays with leading dims ``(V, n_reps)``.
+    """
+    cfg = _as_stream_config(cfg)
+    _validate_stream_config(cfg)
+    if cfg.sharding.n_devices > 1:
+        raise ValueError(
+            "run_stream_grid batches grid cells across devices and cannot "
+            "also shard_map single runs; use sharding.n_devices=1 (run "
+            "device-sharded scenarios per-cell via run_stream)")
+    lo = max(1, cfg.policy.min_votes)
+    for v in np.atleast_1d(np.asarray(traced.votes_cap)):
+        if v != 0 and not lo <= int(v) <= cfg.policy.votes_cap:
+            raise ValueError(
+                f"grid votes_cap value {int(v)} must be 0 (unset) or in "
+                f"[max(1, policy.min_votes)={lo}, "
+                f"policy.votes_cap={cfg.policy.votes_cap}]")
+    V = max([int(np.asarray(leaf).shape[0]) for leaf in traced
+             if np.ndim(leaf) > 0] or [1])
+    dt_ = dict(rate=jnp.float32, votes_cap=jnp.int32,
+               acc_a=jnp.float32, acc_b=jnp.float32)
+    traced = StreamTraced(**{
+        f: jnp.broadcast_to(jnp.asarray(getattr(traced, f), dt_[f]), (V,))
+        for f in StreamTraced._fields})
+    keys = jax.random.split(jax.random.key(seed), n_reps)
+    warmup_t = float(warmup_frac * horizon * cfg.dt)
+    D = jax.local_device_count()
+    if shard and D > 1 and V >= D:
+        pad = (-V) % D
+        padded = StreamTraced(*[
+            jnp.concatenate([leaf, jnp.broadcast_to(leaf[-1:], (pad,))])
+            .reshape(D, -1) for leaf in traced])
+        out = _aot_timed(_run_grid_pmap, timing_name, 2,
+                         cfg, int(horizon), keys, jnp.float32(warmup_t),
+                         padded)
+        out = jax.tree_util.tree_map(
+            lambda v: v.reshape((V + pad,) + v.shape[2:])[:V], out)
+    else:
+        out = _aot_timed(_run_grid_jit, timing_name, 2,
+                         cfg, int(horizon), keys, jnp.float32(warmup_t),
+                         traced)
     out = dict(out)
     out["warmup_t"] = warmup_t
     out["measured_s"] = horizon * cfg.dt - warmup_t

@@ -215,6 +215,56 @@ def read_trace(path: str) -> dict:
     return doc
 
 
+def grid_doc(res: dict) -> list:
+    """Build ``GRID_<name>.jsonl`` artifact lines from a
+    :func:`repro.grid.run_grid` result dict. Same JSONL-with-header shape
+    as the trace artifact, tagged ``artifact='grid'``: one ``class`` line
+    per compilation (with its compile/execute wall-clock split), one
+    ``cell`` line per grid cell (axis values + scalar summary metrics),
+    and a trailing ``summary`` line with the total wall-clock."""
+    lines = [dict(kind="header", schema_version=SCHEMA_VERSION,
+                  artifact="grid", name=res["name"], engine=res["engine"],
+                  axes=_jsonable(res["axes"]), n_cells=res["n_cells"],
+                  n_classes=res["n_classes"])]
+    for c in res["classes"]:
+        lines.append(dict(kind="class", **_jsonable(c)))
+    for c in res["cells"]:
+        lines.append(dict(kind="cell", idx=c["idx"],
+                          class_id=c["class_id"],
+                          values=_jsonable(c["values"]),
+                          metrics=_jsonable(c["metrics"])))
+    lines.append(dict(kind="summary", wallclock_s=res["wallclock_s"]))
+    return lines
+
+
+def write_grid(lines: list, *, path: str = None, directory: str = None,
+               name: str = None) -> str:
+    """Write grid-artifact ``lines``; default path is
+    ``$BENCH_DIR/GRID_<name>.jsonl``."""
+    if path is None:
+        directory = directory or os.environ.get("BENCH_DIR", "artifacts")
+        if name is None:
+            name = (lines[0].get("name") if lines else None) or "grid"
+        path = os.path.join(directory, f"GRID_{name}.jsonl")
+    return write_trace(lines, path=path)
+
+
+def read_grid(path: str) -> dict:
+    """Parse + validate a grid artifact. Returns ``{"header": <line1>,
+    "class": [...], "cell": [...], "summary": [...]}``."""
+    doc = read_trace(path)
+    hdr = doc["header"]
+    if hdr.get("artifact") != "grid":
+        raise ValueError(f"{path}: not a grid artifact (header artifact="
+                         f"{hdr.get('artifact')!r})")
+    n_cells = hdr.get("n_cells")
+    got = len(doc.get("cell", []))
+    if got != n_cells:
+        raise ValueError(f"{path}: header says {n_cells} cells but the "
+                         f"artifact carries {got} cell lines")
+    return doc
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs.export",

@@ -45,11 +45,15 @@ _EXPORTS = {
     "LearnerSpec": "spec",
     "ShardingSpec": "spec",
     "TraceSpec": "spec",
+    "GridSpec": "spec",
     "override": "spec",
     # registry
     "register_scenario": "registry",
     "get_scenario": "registry",
     "list_scenarios": "registry",
+    "register_grid": "registry",
+    "get_grid": "registry",
+    "list_grids": "registry",
     # facade
     "run": "facade",
     "sweep": "facade",

@@ -21,6 +21,22 @@ from repro.scenarios.spec import ScenarioSpec
 
 ENGINES = ("events", "simfast", "stream")
 
+#: dotted spec paths each engine can carry as TRACED values inside one
+#: compiled program (the multi-axis bundles: simfast ``PopTraced``, stream
+#: ``StreamTraced``). ``repro.grid`` partitions grid cells into static-
+#: config equivalence classes by overriding exactly these paths back to
+#: the base value before lowering + hashing — cells that then lower to
+#: equal configs share one compilation. The scalar events engine traces
+#: nothing (it recompiles nothing either).
+TRACED_AXES = {
+    "events": (),
+    "simfast": ("pool.median_mu", "pool.session_mean_s",
+                "pool.recruit_mean_s", "pool.cold_recruit_mean_s",
+                "pool.acc_a", "pool.acc_b"),
+    "stream": ("arrivals.rate", "policy.redundancy.votes",
+               "pool.acc_a", "pool.acc_b"),
+}
+
 # engine defaults the spec layer must not silently change
 _FAST_DT = 2.0
 _STREAM_DT = 5.0

@@ -42,6 +42,10 @@ _SIMFAST_AXES = {
 _STREAM_AXES = ("arrivals.rate",)
 #: stream axis that maps onto the traced masked votes cap
 _STREAM_VOTES_AXIS = "policy.redundancy.votes"
+#: Beta accuracy-prior axes, traced through the reparameterized worker
+#: draw on BOTH jitted engines (simfast ``PopTraced`` / stream
+#: ``StreamTraced``)
+_ACC_AXES = ("pool.acc_a", "pool.acc_b")
 
 
 def _resolve_engine(spec: ScenarioSpec, engine):
@@ -222,6 +226,57 @@ def sweep(scenario, axis: str, values, engine: str = None, *, seed: int = 0,
             cfg, horizon if horizon is not None else scenario.horizon,
             values, n_reps=n_reps, seed=seed, warmup_frac=warmup_frac)
         results = [stream_summary(cfg, _slice_point(raw, i))
+                   for i in range(len(values))]
+        return dict(axis=axis, values=values, engine=engine,
+                    vectorized=True, results=results, raw=raw)
+
+    # Beta accuracy params trace through the worker draw (the draw is
+    # reparameterized on (a, b), so a traced absolute value reproduces the
+    # static-config draw bit-for-bit); one compilation per acc sweep on
+    # either jitted engine. Device-sharded stream ticks keep their pmap
+    # program and fall through to the per-value path.
+    if engine == "stream" and axis in _ACC_AXES \
+            and scenario.sharding.n_devices == 1:
+        from repro.labelstream.router import (
+            StreamTraced, run_stream_grid, stream_summary,
+        )
+        for v in values:
+            override(scenario, {axis: v})
+        cfg = to_stream_config(scenario)
+        V = len(values)
+        tr = StreamTraced(
+            rate=np.full((V,), cfg.arrivals.rate, np.float32),
+            votes_cap=np.full((V,), cfg.policy.votes_cap, np.int32),
+            acc_a=np.full((V,), cfg.acc_a, np.float32),
+            acc_b=np.full((V,), cfg.acc_b, np.float32),
+        )._replace(**{axis.split(".")[1]: np.asarray(values, np.float32)})
+        raw = run_stream_grid(cfg, horizon if horizon is not None
+                              else scenario.horizon, tr, n_reps=n_reps,
+                              seed=seed, warmup_frac=warmup_frac)
+        results = [stream_summary(cfg, _slice_point(raw, i))
+                   for i in range(len(values))]
+        return dict(axis=axis, values=values, engine=engine,
+                    vectorized=True, results=results, raw=raw)
+
+    if engine == "simfast" and axis in _ACC_AXES:
+        from repro.core.simfast import PopTraced, simulate_swept_pop
+        from repro.core.simfast_stats import summarize
+        for v in values:
+            override(scenario, {axis: v})
+        cfg = to_fast_config(scenario)
+        V = len(values)
+        pool = scenario.pool
+        leaves = dict(median_mu=pool.median_mu,
+                      session_mean_s=pool.session_mean_s,
+                      recruit_mean_s=pool.recruit_mean_s,
+                      cold_recruit_mean_s=pool.cold_recruit_mean_s,
+                      acc_a=pool.acc_a, acc_b=pool.acc_b)
+        leaves = {k: np.full((V,), val, np.float32)
+                  for k, val in leaves.items()}
+        leaves[axis.split(".")[1]] = np.asarray(values, np.float32)
+        raw = simulate_swept_pop(cfg, n_reps, PopTraced(**leaves),
+                                 seed=seed, true_labels=true_labels)
+        results = [dataclasses.asdict(summarize(_slice_point(raw, i)))
                    for i in range(len(values))]
         return dict(axis=axis, values=values, engine=engine,
                     vectorized=True, results=results, raw=raw)

@@ -15,13 +15,17 @@ every touched node.
 """
 from __future__ import annotations
 
+import dataclasses
+
 from repro.scenarios.spec import (
     AdmissionSpec, ArrivalSpec, DifficultySpec, EngineKnobs, FeatureSpec,
-    LearnerSpec, MaintenanceSpec, PolicySpec, PoolSpec, RedundancySpec,
-    RoutingSpec, ScenarioSpec, ShardingSpec, StragglerSpec, override,
+    GridSpec, LearnerSpec, MaintenanceSpec, PolicySpec, PoolSpec,
+    RedundancySpec, RoutingSpec, ScenarioSpec, ShardingSpec, StragglerSpec,
+    override,
 )
 
 _REGISTRY: dict = {}
+_GRIDS: dict = {}
 
 
 def register_scenario(name: str, spec: ScenarioSpec, *,
@@ -58,6 +62,40 @@ def get_scenario(name: str, overrides: dict = None) -> ScenarioSpec:
 def list_scenarios() -> list:
     """Sorted registered scenario names."""
     return sorted(_REGISTRY)
+
+
+def register_grid(name: str, grid: GridSpec, *,
+                  overwrite: bool = False) -> GridSpec:
+    """Register a :class:`GridSpec` under ``name`` (same replacement rule
+    as :func:`register_scenario` — committed GRID artifacts reference
+    these names)."""
+    if not name:
+        raise ValueError("register_grid: name must be non-empty")
+    if name in _GRIDS and not overwrite:
+        raise ValueError(f"grid {name!r} is already registered "
+                         "(pass overwrite=True to replace it)")
+    if not isinstance(grid, GridSpec):
+        raise TypeError("register_grid: grid must be a GridSpec, got "
+                        f"{type(grid).__name__}")
+    if grid.name != name:
+        grid = dataclasses.replace(grid, name=name)
+    _GRIDS[name] = grid
+    return grid
+
+
+def get_grid(name: str) -> GridSpec:
+    """Fetch a registered grid by name."""
+    try:
+        return _GRIDS[name]
+    except KeyError:
+        known = ", ".join(sorted(_GRIDS)) or "<empty>"
+        raise KeyError(f"unknown grid {name!r}; registered: {known}") \
+            from None
+
+
+def list_grids() -> list:
+    """Sorted registered grid names."""
+    return sorted(_GRIDS)
 
 
 # ---------------------------------------------------------------------------
@@ -230,4 +268,45 @@ def _seed():
     ))
 
 
+def _seed_grids():
+    # the paper-table grid: mitigation on/off x redundancy x offered load
+    # over the canonical streaming workload. The two straggler settings
+    # are static configs (2 compilations); redundancy and rate are traced,
+    # so all 24 cells run as 2 compiled batches.
+    register_grid("paper_stream", GridSpec(
+        base=get_scenario("stream_default"),
+        axes=(
+            ("policy.straggler.enabled", (False, True)),
+            ("policy.redundancy.votes", (1, 3, 5)),
+            ("arrivals.rate", (0.006, 0.009, 0.012, 0.015)),
+        ),
+    ))
+    # batch-engine counterpart: mitigation x worker speed x accuracy skew
+    # (the pool axes ride the simfast PopTraced bundle -> 2 compilations)
+    register_grid("paper_fast", GridSpec(
+        base=get_scenario("smallR1"),
+        axes=(
+            ("policy.straggler.enabled", (False, True)),
+            ("pool.median_mu", (30.0, 60.0, 90.0)),
+            ("pool.acc_a", (5.0, 8.0, 11.0)),
+        ),
+    ))
+    # CI smoke grids: one class each, small enough for a laptop/CI leg
+    register_grid("grid_smoke_stream", GridSpec(
+        base=get_scenario("stream_default"),
+        axes=(
+            ("arrivals.rate", (0.008, 0.012)),
+            ("policy.redundancy.votes", (1, 2, 3)),
+        ),
+    ))
+    register_grid("grid_smoke_simfast", GridSpec(
+        base=get_scenario("smallR1"),
+        axes=(
+            ("pool.median_mu", (30.0, 60.0)),
+            ("pool.acc_a", (5.0, 8.0, 11.0)),
+        ),
+    ))
+
+
 _seed()
+_seed_grids()

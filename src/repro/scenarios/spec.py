@@ -532,6 +532,89 @@ class ScenarioSpec:
 
 
 # ---------------------------------------------------------------------------
+# grids
+# ---------------------------------------------------------------------------
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """A Scenario x Policy grid: one base scenario plus dotted-path axes
+    whose cross product defines the cells — the declarative form of a
+    paper table (straggler x maintenance x redundancy x ...).
+
+    ``axes`` is a tuple of ``(path, values)`` pairs where ``path`` is a
+    dotted :func:`override` path into ``base`` and ``values`` a non-empty
+    value tuple. Cells enumerate row-major with the LAST axis fastest
+    (``itertools.product`` order). Axis paths are resolved against the
+    base at construction; per-cell value validation happens in
+    :meth:`cells` where axis combinations are applied jointly (a value
+    can be valid only in combination, e.g. votes and min_votes swept
+    together).
+
+    Executed by ``repro.grid.run_grid``, which partitions the cells into
+    static-config equivalence classes and compiles one program per class.
+    """
+    base: ScenarioSpec = ScenarioSpec()
+    axes: tuple = ()
+    name: str = ""
+
+    def __post_init__(self):
+        c = GridSpec
+        _check(c, isinstance(self.base, ScenarioSpec), "base",
+               f"must be a ScenarioSpec, got {type(self.base).__name__}")
+        try:
+            axes = tuple((str(p), tuple(vs)) for p, vs in self.axes)
+        except (TypeError, ValueError):
+            _fail(c, "axes", "must be ((path, (values...)), ...) pairs, "
+                  f"got {self.axes!r}")
+        object.__setattr__(self, "axes", axes)
+        seen = set()
+        for p, vs in axes:
+            _check(c, p not in seen, "axes", f"duplicate axis {p!r}")
+            seen.add(p)
+            _check(c, len(vs) >= 1, "axes",
+                   f"axis {p!r} needs at least one value")
+            _get_path(self.base, p)      # raises naming the bad segment
+
+    @property
+    def shape(self) -> tuple:
+        return tuple(len(vs) for _, vs in self.axes)
+
+    @property
+    def n_cells(self) -> int:
+        return math.prod(self.shape) if self.axes else 1
+
+    def cells(self) -> list:
+        """``[(idx, values, spec), ...]`` — the cell's N-dim index tuple,
+        its ``{path: value}`` override dict, and the fully-overridden
+        (re-validated) ScenarioSpec."""
+        import itertools
+        paths = [p for p, _ in self.axes]
+        out = []
+        for idx in itertools.product(*(range(len(vs))
+                                       for _, vs in self.axes)):
+            values = {p: self.axes[a][1][i]
+                      for a, (p, i) in enumerate(zip(paths, idx))}
+            out.append((idx, values, override(self.base, values)))
+        return out
+
+
+def _get_path(spec, path: str):
+    """Resolve a dotted field path, raising ``ValueError`` naming the bad
+    segment (same error contract as :func:`override`)."""
+    node = spec
+    for head in path.split("."):
+        if not dataclasses.is_dataclass(node):
+            raise ValueError(f"path {path!r}: {type(node).__name__} "
+                             "is not a spec dataclass")
+        if head not in {f.name for f in dataclasses.fields(node)}:
+            raise ValueError(f"path {path!r}: {type(node).__name__} "
+                             f"has no field {head!r}")
+        node = getattr(node, head)
+    return node
+
+
+# ---------------------------------------------------------------------------
 # dotted-path override helper
 # ---------------------------------------------------------------------------
 

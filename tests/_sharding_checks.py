@@ -136,6 +136,34 @@ def collect() -> dict:
     lb = simulate_learning_batch(fcfg, X, y, Xt, yt, rounds=3, n_reps=10,
                                  seed=5, shard=False)
     report["simfast_learning_parity"] = _tree_equal(la, lb)
+
+    # ---- grid engine: RAGGED class padded across the forced mesh -------
+    # 10 cells on 8 devices pad to 16 (repeat-last); the pmapped class
+    # batch must stay bit-identical to the pure-vmap run of the same grid
+    from repro.grid import run_grid
+    from repro.scenarios.spec import GridSpec
+    gspec = GridSpec(
+        base=scenarios.get_scenario("stream_default",
+                                    {"pool.pool_size": 6, "window": 16}),
+        axes=(("arrivals.rate", (0.006, 0.008, 0.010, 0.012, 0.014)),
+              ("policy.redundancy.votes", (1, 3))),
+        name="shardgrid")
+    ga = run_grid(gspec, n_reps=2, horizon=120, shard=True, keep_raw=True)
+    gb = run_grid(gspec, n_reps=2, horizon=120, shard=False, keep_raw=True)
+    report["grid_n_cells"] = ga["n_cells"]
+    report["grid_n_classes"] = ga["n_classes"]
+    report["grid_ragged_pad_parity"] = all(
+        _tree_equal({k: v for k, v in a["raw"].items() if k != "per_shard"},
+                    {k: v for k, v in b["raw"].items() if k != "per_shard"})
+        for a, b in zip(ga["cells"], gb["cells"]))
+
+    # the simfast population bundle takes the same pad-to-device-multiple
+    # path (10 traced points, 8 devices)
+    from repro.core.simfast import PopTraced, simulate_swept_pop
+    pop = PopTraced(acc_a=jnp.linspace(2.0, 8.0, 10))
+    pa = simulate_swept_pop(fcfg, 3, pop, seed=5, shard=True)
+    pb = simulate_swept_pop(fcfg, 3, pop, seed=5, shard=False)
+    report["simfast_pop_pad_parity"] = _tree_equal(pa, pb)
     return report
 
 

@@ -1,0 +1,278 @@
+"""repro.grid: GridSpec, static-config class partition, batched execution.
+
+The acceptance property of the grid engine is *exactness*: partitioning a
+Scenario×Policy grid into static-config equivalence classes and running
+each class as one compiled vmapped batch must reproduce the standalone
+``scenarios.run`` of every cell bit-for-bit (the traced bundles carry
+absolute per-cell values that ``where``-select over the static config).
+Partition correctness — two cells share a class iff their traced-axis-
+reset specs lower to hash-equal engine configs — is tested without
+running anything; the compile-heavy parity runs use the smallest configs
+that still exercise both engines.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.grid import partition_grid, run_grid
+from repro.scenarios.spec import GridSpec, ScenarioSpec, override
+
+SMALL = {"pool.pool_size": 6, "window": 16}
+
+
+def _stream_base(extra=None):
+    ov = dict(SMALL)
+    ov.update(extra or {})
+    return scenarios.get_scenario("stream_default", ov)
+
+
+# --------------------------------------------------------------------------
+# GridSpec validation + cell enumeration
+# --------------------------------------------------------------------------
+
+def test_gridspec_validates():
+    base = scenarios.get_scenario("smallR1")
+    with pytest.raises(ValueError, match="GridSpec.base"):
+        GridSpec(base="smallR1")
+    with pytest.raises(ValueError, match="duplicate"):
+        GridSpec(base=base, axes=(("pool.acc_a", (2.0,)),
+                                  ("pool.acc_a", (3.0,))))
+    with pytest.raises(ValueError, match="at least one value"):
+        GridSpec(base=base, axes=(("pool.acc_a", ()),))
+    with pytest.raises(ValueError, match="no_such"):
+        GridSpec(base=base, axes=(("pool.no_such", (1,)),))
+
+
+def test_gridspec_cells_product_order_and_overrides():
+    base = scenarios.get_scenario("smallR1")
+    g = GridSpec(base=base, axes=(("pool.median_mu", (30.0, 60.0)),
+                                  ("pool.acc_a", (5.0, 8.0, 11.0))))
+    assert g.shape == (2, 3)
+    assert g.n_cells == 6
+    cells = g.cells()
+    assert len(cells) == 6
+    # last axis fastest (row-major over the axis order)
+    assert [idx for idx, _, _ in cells] == \
+        [(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)]
+    idx, values, spec = cells[4]
+    assert values == {"pool.median_mu": 60.0, "pool.acc_a": 8.0}
+    assert spec.pool.median_mu == 60.0 and spec.pool.acc_a == 8.0
+    # cell specs go through override(): invalid cell values raise at
+    # enumeration, exactly like a per-cell run would
+    bad = GridSpec(base=base, axes=(("pool.acc_a", (5.0, -1.0)),))
+    with pytest.raises(ValueError):
+        bad.cells()
+
+
+# --------------------------------------------------------------------------
+# class partition: traced axes fold away, static axes split
+# --------------------------------------------------------------------------
+
+def test_partition_traced_axes_share_one_class():
+    g = GridSpec(base=_stream_base(),
+                 axes=(("arrivals.rate", (0.008, 0.012)),
+                       ("policy.redundancy.votes", (1, 2, 3)),
+                       ("pool.acc_a", (6.0, 9.0))))
+    engine, cells, classes = partition_grid(g)
+    assert engine == "stream"
+    assert len(classes) == 1
+    assert classes[0].cells == tuple(range(12))
+
+
+def test_partition_static_axis_splits_classes():
+    g = GridSpec(base=_stream_base(),
+                 axes=(("policy.straggler.enabled", (False, True)),
+                       ("arrivals.rate", (0.008, 0.010, 0.012))))
+    _, cells, classes = partition_grid(g)
+    assert len(classes) == 2
+    # membership follows the static axis exactly: cells 0-2 have
+    # straggler off, cells 3-5 on
+    assert classes[0].cells == (0, 1, 2)
+    assert classes[1].cells == (3, 4, 5)
+    # and two cells share a class iff their traced-reset configs are
+    # hash-equal
+    from repro.scenarios.compile import to_stream_config
+    base_rate = g.base.arrivals.rate
+    keys = [to_stream_config(override(spec,
+                                      {"arrivals.rate": base_rate}))
+            for _, _, spec in cells]
+    for cls in classes:
+        ref = keys[cls.cells[0]]
+        assert all(hash(keys[i]) == hash(ref) and keys[i] == ref
+                   for i in cls.cells)
+
+
+def test_partition_events_engine_collapses_hash_equal_cells():
+    # the scalar events engine traces nothing: distinct static configs
+    # get distinct classes, while axis values that lower to the SAME
+    # config share one (hash-equality is the whole criterion)
+    base = scenarios.get_scenario("smallR1")
+    g = GridSpec(base=base, axes=(("n_tasks", (40, 40, 80)),))
+    engine, _, classes = partition_grid(g, "events")
+    assert engine == "events"
+    assert [cls.cells for cls in classes] == [(0, 1), (2,)]
+
+
+def test_partition_invalid_reset_falls_back_to_own_class():
+    # resetting the traced votes axis back to the base cap (2) would put
+    # it below each cell's swept min_votes (3) — such cells must become
+    # singleton classes, not a partition error
+    g = GridSpec(base=_stream_base({"policy.redundancy.votes": 2,
+                                    "policy.redundancy.min_votes": 2}),
+                 axes=(("policy.redundancy.votes", (3, 5)),
+                       ("policy.redundancy.min_votes", (3,))))
+    _, cells, classes = partition_grid(g)
+    assert len(cells) == 2
+    assert [cls.cells for cls in classes] == [(0,), (1,)]
+
+
+def test_partition_respects_horizon_argument():
+    g = GridSpec(base=_stream_base(),
+                 axes=(("arrivals.rate", (0.008, 0.012)),))
+    _, _, classes = partition_grid(g, horizon=100)
+    assert len(classes) == 1
+
+
+# --------------------------------------------------------------------------
+# batched execution: bit-identical to standalone per-cell runs
+# --------------------------------------------------------------------------
+
+def _tree_equal(a, b, skip=("per_shard", "series", "warmup_t",
+                            "measured_s")):
+    import jax.tree_util as tu
+    a = {k: v for k, v in a.items() if k not in skip}
+    b = {k: v for k, v in b.items() if k not in skip}
+    la = tu.tree_flatten_with_path(a)[0]
+    lb = tu.tree_flatten_with_path(b)[0]
+    assert len(la) == len(lb)
+    for (pa, va), (pb, vb) in zip(la, lb):
+        np.testing.assert_array_equal(
+            np.asarray(va), np.asarray(vb),
+            err_msg=f"key {tu.keystr(pa)}")
+    return True
+
+
+def test_run_grid_simfast_bitwise_matches_per_cell():
+    base = scenarios.get_scenario("smallR1")
+    g = GridSpec(base=base, name="t_fast",
+                 axes=(("pool.median_mu", (30.0, 60.0)),
+                       ("pool.acc_b", (1.0, 3.0))))
+    res = run_grid(g, n_reps=3, keep_raw=True)
+    assert res["engine"] == "simfast"
+    assert res["n_classes"] == 1
+    for cell in res["cells"]:
+        ref = scenarios.run(override(base, cell["values"]), "simfast",
+                            n_reps=3, seed=0)
+        _tree_equal(cell["raw"], ref["raw"])
+        for k, v in ref["metrics"].items():
+            got = cell["metrics"][k]
+            assert got == v or (np.isnan(got) and np.isnan(v)), \
+                (cell["values"], k, got, v)
+
+
+def test_run_grid_stream_bitwise_matches_per_cell():
+    base = _stream_base()
+    g = GridSpec(base=base, name="t_stream",
+                 axes=(("policy.redundancy.votes", (1, 3)),))
+    res = run_grid(g, n_reps=2, horizon=80, keep_raw=True)
+    assert res["engine"] == "stream"
+    assert res["n_classes"] == 1
+    for cell in res["cells"]:
+        ref = scenarios.run(override(base, cell["values"]), "stream",
+                            n_reps=2, horizon=80, seed=0)
+        _tree_equal(cell["raw"], ref["raw"])
+        # the per-tick series tree rides the same masked program
+        import jax.tree_util as tu
+        for (pa, va), (_, vb) in zip(
+                tu.tree_flatten_with_path(cell["raw"]["series"])[0],
+                tu.tree_flatten_with_path(ref["raw"]["series"])[0]):
+            np.testing.assert_array_equal(
+                np.asarray(va), np.asarray(vb),
+                err_msg=f"series{tu.keystr(pa)}")
+        for k, v in ref["metrics"].items():
+            if k == "phases":
+                continue
+            assert cell["metrics"][k] == v, (cell["values"], k)
+    # compile/execute wall-clock split recorded per class
+    cls = res["classes"][0]
+    assert cls["batched"] is True
+    assert cls["compile_s"] > 0 and cls["execute_s"] > 0
+
+
+def test_run_stream_grid_validates():
+    from repro.labelstream.router import StreamTraced, run_stream_grid
+    from repro.scenarios.compile import to_stream_config
+    cfg = to_stream_config(_stream_base())
+    with pytest.raises(ValueError, match="votes_cap"):
+        run_stream_grid(cfg, 50, StreamTraced(
+            votes_cap=np.asarray([1, 99], np.int32)))
+    sharded = to_stream_config(scenarios.get_scenario(
+        "stream_sharded", {"sharding.n_devices": 2}))
+    with pytest.raises(ValueError, match="n_devices"):
+        run_stream_grid(sharded, 50, StreamTraced())
+
+
+# --------------------------------------------------------------------------
+# artifact + registry + facade integration
+# --------------------------------------------------------------------------
+
+def test_registered_grids_partition_as_documented():
+    g = scenarios.get_grid("paper_stream")
+    _, _, classes = partition_grid(g)
+    assert g.n_cells == 24 and len(classes) == 2
+    g = scenarios.get_grid("paper_fast")
+    _, _, classes = partition_grid(g)
+    assert g.n_cells == 18 and len(classes) == 2
+    for name in ("grid_smoke_stream", "grid_smoke_simfast"):
+        g = scenarios.get_grid(name)
+        _, _, classes = partition_grid(g)
+        assert len(classes) == 1, name
+
+
+def test_grid_artifact_roundtrip(tmp_path):
+    from repro.obs.export import grid_doc, read_grid, write_grid
+    base = scenarios.get_scenario("smallR1")
+    g = GridSpec(base=base, name="t_art",
+                 axes=(("pool.acc_a", (5.0, 9.0)),))
+    res = run_grid(g, n_reps=2)
+    path = write_grid(grid_doc(res), directory=str(tmp_path))
+    assert path.endswith("GRID_t_art.jsonl")
+    doc = read_grid(path)
+    assert doc["header"]["artifact"] == "grid"
+    assert doc["header"]["n_cells"] == 2
+    assert len(doc["cell"]) == 2
+    assert len(doc["class"]) == res["n_classes"]
+    assert doc["cell"][0]["metrics"]["n_reps"] == 2
+    json.dumps(doc)   # everything JSON-native
+    # the regression gate validates grid artifacts in the same pass
+    import benchmarks.check_regression as cr
+    assert cr.validate_grids(str(tmp_path)) == []
+    # ...and rejects a header/cell-count mismatch
+    lines = path and open(path).read().splitlines()
+    hdr = json.loads(lines[0])
+    hdr["n_cells"] = 5
+    (tmp_path / "GRID_bad.jsonl").write_text(
+        "\n".join([json.dumps(hdr)] + lines[1:]) + "\n")
+    errs = cr.validate_grids(str(tmp_path))
+    assert any("GRID_bad" in e for e in errs)
+
+
+def test_sweep_facade_acc_axis_vectorized():
+    spec = scenarios.get_scenario("smallR1")
+    sw = scenarios.sweep(spec, axis="pool.acc_a", values=[4.0, 9.0],
+                         engine="simfast", n_reps=4, seed=2)
+    assert sw["vectorized"] is True
+    ref = scenarios.run(override(spec, {"pool.acc_a": 9.0}), "simfast",
+                        n_reps=4, seed=2)
+    for k, v in ref["metrics"].items():
+        got = sw["results"][1][k]
+        assert got == v or (np.isnan(got) and np.isnan(v)), k
+
+
+def test_run_grid_rejects_non_gridspec():
+    with pytest.raises(TypeError, match="GridSpec"):
+        partition_grid(scenarios.get_scenario("smallR1"))
+    with pytest.raises(KeyError, match="unknown grid"):
+        scenarios.get_grid("no_such_grid")

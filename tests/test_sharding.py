@@ -93,6 +93,16 @@ def test_simfast_pmap_paths_bit_identical(report):
     assert report["simfast_learning_parity"] is True
 
 
+def test_grid_ragged_class_pmap_bit_identical(report):
+    """A 10-cell single-class grid on the forced 8-device mesh pads to 16
+    (repeat-last) — dropping the padding must leave every cell bitwise
+    equal to the unsharded vmap run, on both grid backends."""
+    assert report["grid_n_cells"] == 10
+    assert report["grid_n_classes"] == 1
+    assert report["grid_ragged_pad_parity"] is True
+    assert report["simfast_pop_pad_parity"] is True
+
+
 @pytest.mark.tpu
 def test_sharded_parity_mosaic():
     """Same parity invariant on real TPU devices (Mosaic lowering): the
