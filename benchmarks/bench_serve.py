@@ -1,0 +1,130 @@
+"""Live serving front end under open-loop offered load: wall-clock answer
+latency (p50/p95) and answered tasks/sec through the jitted serve tick.
+
+Unlike the other labelstream benches (simulated-time quantities through
+``scenarios.run``), this one measures the *real* request path: an
+in-process :class:`repro.serving.server.LabelServer` on the
+``serve_default`` registry scenario, driven by concurrent HTTP clients
+over loopback. Each load row is an open-loop arrival schedule — task i
+is submitted at ``i / rate`` seconds regardless of completions — with
+``wait=True`` long-polling, so the measured latency is submission to
+finalized-label answer including HTTP framing, micro-batching into the
+tick, device execution and the srv_* transfer back.
+
+Two offered loads (≥2 per the acceptance criteria) share one server, so
+the second row also demonstrates steady-state reuse of the compiled tick;
+the compile-vs-execute split comes from the ``repro.obs.timing`` registry
+("serve.tick" rows: cold first call vs warm mean).
+
+Gated metrics are machine-independent: conservation (submitted ==
+answered + pending + in-system + dropped + shutdown) and the answered
+fraction per load. Wall-clock rates and latencies vary with runner
+hardware and are info-only.
+"""
+from __future__ import annotations
+
+import asyncio
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+
+#: offered loads (tasks/sec, wall-clock) — open-loop submission schedules
+LOADS_TPS = (20.0, 80.0)
+
+#: generous long-poll timeout: the gate is "everything answers", not speed
+WAIT_TIMEOUT_S = 120.0
+
+
+async def _drive_load(srv, rate_tps, n_tasks):
+    """Open-loop: submit task i at i/rate seconds on its own connection,
+    long-poll until the label finalizes. Returns (answers, wall_s)."""
+    from repro.serving.server import ServeClient
+
+    results = []
+
+    async def one(i):
+        await asyncio.sleep(i / rate_tps)
+        c = await ServeClient(srv.host, srv.port).connect()
+        try:
+            status, r = await c.submit(wait=True, timeout_s=WAIT_TIMEOUT_S)
+            results.append((status, r))
+        finally:
+            await c.aclose()
+
+    t0 = time.perf_counter()
+    await asyncio.gather(*[one(i) for i in range(n_tasks)])
+    return results, time.perf_counter() - t0
+
+
+async def _bench(smoke):
+    from repro import scenarios
+    from repro.serving.server import LabelServer, ServeClient
+
+    n_tasks = 32 if smoke else 240
+    spec = scenarios.get_scenario("serve_default")
+    srv = LabelServer(spec, seed=0, port=0, tick_interval_s=0.0)
+    await srv.start()
+    bench = {}
+    try:
+        # warm-up: the first tick compiles the serve program; one waited
+        # submission outside the timed loads so every load row is warm
+        c = await ServeClient(srv.host, srv.port).connect()
+        status, r = await c.submit(wait=True, timeout_s=WAIT_TIMEOUT_S)
+        await c.aclose()
+        assert status == 200 and r["status"] == "done", (status, r)
+
+        for li, rate in enumerate(LOADS_TPS, start=1):
+            results, wall = await _drive_load(srv, rate, n_tasks)
+            done = [r for s, r in results if s == 200
+                    and r["status"] == "done"]
+            frac = len(done) / n_tasks
+            lat = np.asarray([r["latency_s"] for r in done]) \
+                if done else np.zeros((0,))
+            p50 = float(np.percentile(lat, 50)) if lat.size else float("nan")
+            p95 = float(np.percentile(lat, 95)) if lat.size else float("nan")
+            tps = len(done) / wall
+            emit(f"serve_load{rate:g}", wall * 1e6 / max(n_tasks, 1),
+                 f"offered_tps={rate:g};answered_tps={tps:.1f};"
+                 f"p50_ms={1e3 * p50:.1f};p95_ms={1e3 * p95:.1f};"
+                 f"answered={len(done)}/{n_tasks};"
+                 f"answered_frac={frac:.3f}")
+            bench[f"answered_frac_load{li}"] = (frac, "higher")
+            bench[f"answered_tps_load{li}"] = tps
+            bench[f"p50_latency_s_load{li}"] = p50
+            bench[f"p95_latency_s_load{li}"] = p95
+
+        stats = srv.stats()
+    finally:
+        await srv.close()
+
+    bench["conservation_ok"] = (float(stats["conservation"]), "higher")
+    bench["dropped"] = (float(stats["dropped"]), "lower")
+    row = next((t for t in stats["timing"] if t["name"] == "serve.tick"),
+               None)
+    if row:
+        emit("serve_tick_split", 1e6 * row["warm_s"],
+             f"ticks={row['calls']};cold_s={row['cold_s']:.2f};"
+             f"warm_ms={1e3 * row['warm_s']:.2f};"
+             f"compile_s={row['compile_s']:.2f}")
+        bench["tick_compile_s"] = row["compile_s"]
+        bench["tick_warm_ms"] = 1e3 * row["warm_s"]
+        bench["ticks"] = float(row["calls"])
+    return bench, stats
+
+
+def run(smoke: bool = False):
+    bench, stats = asyncio.run(_bench(smoke))
+    emit("serve_conservation", 0.0,
+         f"submitted={stats['submitted']};answered={stats['answered']};"
+         f"dropped={stats['dropped']};"
+         f"conservation={int(stats['conservation'])};"
+         f"ticks={stats['ticks']};t_sim={stats['t_sim']:.0f}")
+    write_bench_json("serve", bench,
+                     meta={"loads_tps": list(LOADS_TPS), "smoke": smoke})
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

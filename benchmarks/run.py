@@ -18,7 +18,7 @@ def main() -> None:
     from benchmarks import (bench_workers, bench_straggler, bench_pool,
                             bench_combined, bench_grid, bench_hybrid,
                             bench_e2e, bench_kernels, bench_labelstream,
-                            roofline)
+                            bench_serve, roofline)
     print("name,us_per_call,derived")
     t0 = time.time()
     if smoke:
@@ -37,6 +37,9 @@ def main() -> None:
         print("# --- smoke: grid engine (one compile per static class "
               "vs per-cell runs) ---", flush=True)
         bench_grid.run(smoke=True)
+        print("# --- smoke: live serving front end (wall-clock answer "
+              "latency through the jitted serve tick) ---", flush=True)
+        bench_serve.run(smoke=True)
         print(f"# total {time.time()-t0:.1f}s", flush=True)
         return
     for mod, tag in ((bench_workers, "worker latency CDFs (Fig 2)"),
@@ -52,6 +55,8 @@ def main() -> None:
                      (bench_grid,
                       "grid engine: Scenario×Policy table, one compile "
                       "per static class"),
+                     (bench_serve,
+                      "live serving front end (wall-clock SLOs)"),
                      (roofline, "roofline (dry-run artifacts)")):
         print(f"# --- {tag} ---", flush=True)
         mod.run()

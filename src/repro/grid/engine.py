@@ -127,6 +127,8 @@ def _run_class_stream(cls, name, *, horizon, n_reps, seed, warmup_frac,
         votes_cap=np.asarray([c.policy.votes_cap for c in cfgs], np.int32),
         acc_a=np.asarray([c.acc_a for c in cfgs], np.float32),
         acc_b=np.asarray([c.acc_b for c in cfgs], np.float32),
+        p_hard=np.asarray([c.p_hard for c in cfgs], np.float32),
+        hard_scale=np.asarray([c.hard_scale for c in cfgs], np.float32),
     )
     raw = run_stream_grid(cls_cfg, horizon, tr, n_reps=n_reps, seed=seed,
                           warmup_frac=warmup_frac, shard=shard,

@@ -204,6 +204,13 @@ class StreamConfig:
     # window (finalized tasks have left the system and keep their label).
     refresh_every: int = 0
     refresh_iters: int = 8
+    # live serving mode (repro.serving.server): arrivals are INJECTED as
+    # per-shard counts instead of sampled, and every backlog/window slot
+    # carries a per-shard request uid so finalized labels can be matched
+    # back to the submitting HTTP request. The Python-level gate keeps the
+    # default (simulator) program bit-identical — no uid buffers exist
+    # unless serve=True
+    serve: bool = False
     # time-in-system histogram (steady-state percentiles)
     tis_bins: int = 512
     tis_bin_s: float = 4.0
@@ -267,11 +274,17 @@ class StreamTraced(NamedTuple):
     the Beta accuracy params reach the worker-bank init via the
     reparameterized draw. A bundle whose values equal the static config
     reproduces ``run_stream`` bit for bit.
+
+    ``p_hard``/``hard_scale`` override the task-difficulty mixture; their
+    valid range includes 0.0, so their "not overridden" sentinel is any
+    NEGATIVE value (-1.0 by default), not 0.
     """
     rate: jnp.ndarray = 0.0
     votes_cap: jnp.ndarray = 0
     acc_a: jnp.ndarray = 0.0
     acc_b: jnp.ndarray = 0.0
+    p_hard: jnp.ndarray = -1.0
+    hard_scale: jnp.ndarray = -1.0
 
 
 # --------------------------------------------------------------------------
@@ -293,6 +306,9 @@ def _init_window(cfg: StreamConfig):
     )
     if cfg.learner.enabled:
         win["feat"] = jnp.zeros((Ws, cfg.learner.n_features))
+    if cfg.serve:
+        # per-slot request uid (serve mode): -1 marks "no request here"
+        win["uid"] = jnp.full((Ws,), -1, jnp.int32)
     if cfg.trace is not None and cfg.trace.phases:
         # per-slot phase accounting for the latency-source decomposition:
         # admission instant, accumulated staffed ("work") vs unstaffed
@@ -323,10 +339,14 @@ def _init_shard(cfg: StreamConfig, key, pop=None):
                   feat=jnp.zeros((Q + 1, cfg.learner.n_features)),
                   occ=jnp.zeros((Q,), bool),
                   count=jnp.zeros((), jnp.int32))
+        if cfg.serve:
+            bl["uid"] = jnp.full((Q + 1,), -1, jnp.int32)
     else:
         bl = dict(times=jnp.zeros((Q + 1,)),
                   head=jnp.zeros((), jnp.int32),
                   count=jnp.zeros((), jnp.int32))
+        if cfg.serve:
+            bl["uid"] = jnp.full((Q + 1,), -1, jnp.int32)
     return ws, banks, _init_window(cfg), bl
 
 
@@ -361,7 +381,8 @@ def _task_features(u1, u2, tl, diff, L: StreamLearnerConfig, C: int):
     return base + nrm
 
 def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
-                warmup_t, lW, lb, fuse_w, gW, gb, cap_eff=None):
+                warmup_t, lW, lb, fuse_w, gW, gb, cap_eff=None,
+                p_hard_t=None, hard_scale_t=None, uid_base=None):
     P, Ws, C = cfg.pool_size, cfg.window, cfg.n_classes
     Q, M, cap = cfg.backlog, cfg.max_arrivals_per_tick, cfg.policy.votes_cap
     # cap_eff is the (possibly traced) EFFECTIVE vote budget for the masked
@@ -369,6 +390,10 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
     # max), the effective cap gates vote admission / finalization /
     # outstanding targets, and columns past it are never touched or read
     cap_t = cap if cap_eff is None else cap_eff
+    # traced difficulty-mixture overrides (grid/sweep axes); None keeps the
+    # static Python-float draw, bit-identical to the historical program
+    ph = cfg.p_hard if p_hard_t is None else p_hard_t
+    hs = cfg.hard_scale if hard_scale_t is None else hard_scale_t
     pol, fast, L, R = cfg.policy, cfg.fast, cfg.learner, cfg.routing
     up = _uniform_block(seed, step, 8 * P).reshape(8, P)
 
@@ -402,7 +427,7 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
         dstw = jnp.where(ok, dst, Q)          # row Q is the dump row
         ua = _uniform_block(seed ^ jnp.uint32(0x0BAD5EED), step,
                             (2 + 2 * F) * M).reshape(2 + 2 * F, M)
-        diff_a = jnp.where(ua[0] < cfg.p_hard, cfg.hard_scale, 1.0)
+        diff_a = jnp.where(ua[0] < ph, hs, 1.0)
         tl_a = jnp.floor(ua[1] * C).astype(jnp.int32).clip(0, C - 1)
         feat_a = _task_features(ua[2:2 + F].T, ua[2 + F:2 + 2 * F].T,
                                 tl_a, diff_a, L, C)
@@ -410,6 +435,8 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
         bl_diff = bl["diff"].at[dstw].set(diff_a)
         bl_tlab = bl["tlab"].at[dstw].set(tl_a)
         bl_feat = bl["feat"].at[dstw].set(feat_a)
+        if cfg.serve:
+            bl_uid = bl["uid"].at[dstw].set(uid_base + slot)
         occ = jnp.concatenate([occ, jnp.zeros((1,), bool)]
                               ).at[dstw].set(True)[:Q]
         n_adm = jnp.where(gate, jnp.minimum(occ.sum(), free.sum()), 0
@@ -430,6 +457,9 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
         occ = occ & ~admit_bl
         bl = dict(times=bl_times, diff=bl_diff, tlab=bl_tlab, feat=bl_feat,
                   occ=occ, count=occ.sum().astype(jnp.int32))
+        if cfg.serve:
+            uid_w = bl_uid[src]
+            bl["uid"] = bl_uid
         bl_count = bl["count"]
     else:
         # FIFO ring of arrival times (PR-2 semantics, bit-for-bit)
@@ -439,18 +469,25 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
         slot = jnp.arange(M, dtype=jnp.int32)
         pos = (bl["head"] + bl["count"] + slot) % Q
         bl_times = bl["times"].at[jnp.where(slot < n_push, pos, Q)].set(t)
+        if cfg.serve:
+            bl_uid = bl["uid"].at[jnp.where(slot < n_push, pos, Q)].set(
+                uid_base + slot)
         bl_count = bl["count"] + n_push
         n_adm = jnp.where(gate, jnp.minimum(bl_count, free.sum()), 0
                           ).astype(jnp.int32)
         admit = free & (frank < n_adm)
         arr_t = bl_times[jnp.where(admit, (bl["head"] + frank) % Q, Q)]
+        if cfg.serve:
+            uid_w = bl_uid[jnp.where(admit, (bl["head"] + frank) % Q, Q)]
         bl = dict(times=bl_times, head=(bl["head"] + n_adm) % Q,
                   count=bl_count - n_adm)
+        if cfg.serve:
+            bl["uid"] = bl_uid
         bl_count = bl["count"]
         # fresh-task draws at ADMISSION (difficulty mixture + true label)
         uw = _uniform_block(seed ^ jnp.uint32(0x33CC33CC), step, 2 * Ws
                             ).reshape(2, Ws)
-        diff = jnp.where(uw[0] < cfg.p_hard, cfg.hard_scale, 1.0)
+        diff = jnp.where(uw[0] < ph, hs, 1.0)
         tl = jnp.floor(uw[1] * C).astype(jnp.int32).clip(0, C - 1)
         if L.enabled:
             F = L.n_features
@@ -466,6 +503,8 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
     win["logpost"] = jnp.where(admit[:, None], 0.0, win["logpost"])
     if L.enabled:
         win["feat"] = jnp.where(admit[:, None], featw, win["feat"])
+    if cfg.serve:
+        win["uid"] = jnp.where(admit, uid_w, win["uid"])
     tr = cfg.trace
     tr_ph = tr is not None and tr.phases
     if tr_ph:
@@ -718,6 +757,17 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
                    done_all=fin.sum(), dropped=dropped,
                    backlog=bl_count, in_flight=win["active"].sum(),
                    model_known=(wfin & known).sum())
+    if cfg.serve:
+        # per-slot finalization outputs for the live serving front end:
+        # which slots finalized this tick, their request uids, fused-label
+        # answers and posterior confidence — the ONLY arrays that leave the
+        # device each tick (the router state itself stays resident)
+        metrics["srv_fin"] = fin
+        metrics["srv_uid"] = win["uid"]
+        metrics["srv_label"] = result.astype(jnp.int32)
+        metrics["srv_votes"] = win["n_votes"]
+        metrics["srv_conf"] = conf
+        metrics["srv_tis"] = tis
     if tr_ph:
         for pk in TRACE_PHASES:
             metrics["ph_" + pk] = ph_hist[pk]
@@ -835,13 +885,105 @@ def _steal_rebalance(cfg: StreamConfig, bl, lo, axis_name):
     posr = (head[:, None] + count[:, None] + k[None, :]) % Q
     times = bl["times"].at[rows, jnp.where(validc, posr, Q)].set(
         jnp.where(validc, incoming, 0.0))
-    bl = dict(times=times, head=head, count=count + take_l)
-    return bl, take_l, give_l
+    new_bl = dict(times=times, head=head, count=count + take_l)
+    if "uid" in bl:
+        # serve mode: the request uid ring rides the identical donation
+        # plan so a stolen backlog entry keeps its submitting request
+        don_u = _gat(jnp.take_along_axis(bl["uid"][:, :Q], pos, axis=1))
+        pool_u = jnp.full((S * K + 1,), -1, jnp.int32).at[
+            ranks.reshape(-1)].set(
+            jnp.where(validd, don_u, -1).reshape(-1))[:S * K]
+        inc_u = pool_u[jnp.where(validc, tcum_l[:, None] + k[None, :], 0)]
+        new_bl["uid"] = bl["uid"].at[rows, jnp.where(validc, posr, Q)].set(
+            jnp.where(validc, inc_u, -1))
+    return new_bl, take_l, give_l
 
 
 # --------------------------------------------------------------------------
 # driver
 # --------------------------------------------------------------------------
+
+def _learner_tick_params(cfg: StreamConfig, state):
+    """Per-tick learner parameters read from the replicated driver state
+    (shared by the simulator scan tick and the live serve tick so the two
+    compile the identical fusion program)."""
+    L = cfg.learner
+    if L.enabled:
+        lW, lb = state["learn"].W, state["learn"].b
+        # fusion weight ramps with the training-set size so an
+        # untrained model contributes nothing to finalization
+        fuse_w = L.prior_scale * jnp.minimum(
+            1.0, state["buf_n"].astype(jnp.float32) / L.ramp_n)
+    else:
+        lW = jnp.zeros((1, cfg.n_classes))
+        lb = jnp.zeros((cfg.n_classes,))
+        fuse_w = jnp.zeros(())
+    if cfg.routing.admission == "uncertain_learnable":
+        gW, gb = state["learn2"].W, state["learn2"].b
+    else:
+        gW = jnp.zeros((2, 2))
+        gb = jnp.zeros((2,))
+    return lW, lb, fuse_w, gW, gb
+
+
+def _learner_push_fit(cfg: StreamConfig, state, train, step, gat):
+    """Push this tick's finalized examples into the replay ring and run the
+    cadenced online fit; returns the dict of state updates (empty when the
+    learner is off). The learner is SHARED across shards: the training tree
+    is all-gathered into canonical shard order first, so every device
+    pushes the identical examples and fits the identical replicated model.
+    Shared by the scan tick and the serve tick."""
+    from repro.learning import linear
+
+    L = cfg.learner
+    if not L.enabled:
+        return {}
+    B = L.buffer
+    train = jax.tree_util.tree_map(gat, train)
+    tm = train["mask"].reshape(-1)
+    tf = train["feat"].reshape(-1, L.n_features)
+    tl = train["label"].reshape(-1)
+    rank = (jnp.cumsum(tm) - 1).astype(jnp.int32)
+    pos = jnp.where(tm, (state["buf_n"] + rank) % B, B)
+    buf_X = state["buf_X"].at[pos].set(
+        jnp.where(tm[:, None], tf, state["buf_X"][pos]))
+    buf_y = state["buf_y"].at[pos].set(
+        jnp.where(tm, tl, state["buf_y"][pos]))
+    buf_n = state["buf_n"] + tm.sum()
+    learn = jax.lax.cond(
+        (step % L.fit_every == 0) & (buf_n > 0),
+        lambda l: linear.fit(
+            l, buf_X[:B], buf_y[:B],
+            (jnp.arange(B) < buf_n).astype(jnp.float32),
+            steps=L.fit_steps, lr=L.lr, l2=L.l2, fresh_opt=False),
+        lambda l: l, state["learn"])
+    upd = dict(learn=learn, buf_X=buf_X, buf_y=buf_y, buf_n=buf_n)
+    if cfg.routing.admission == "uncertain_learnable":
+        # learnability head trains on the SAME ring positions with
+        # the binary finalized-confident target, square-augmented
+        # features, identical cadence
+        tt = train["learnable"].reshape(-1)
+        buf_t = state["buf_t"].at[pos].set(
+            jnp.where(tm, tt, state["buf_t"][pos]))
+        # the head is tiny (2F x 2) and its score gates every
+        # admission, so unlike the main learner it is REFIT FROM
+        # SCRATCH on the current ring each cadence: its target
+        # distribution shifts hard at cold start (nothing is
+        # model-known, every target 0) and Adam momentum carried
+        # across that shift leaves the online head stuck far from
+        # the batch optimum. A fresh 60-step fit on <= buffer
+        # examples costs microseconds per cadence tick
+        learn2 = jax.lax.cond(
+            (step % L.fit_every == 0) & (buf_n > 0),
+            lambda l: linear.fit(
+                linear.init(2 * L.n_features, 2),
+                learnability_features(buf_X[:B]), buf_t[:B],
+                (jnp.arange(B) < buf_n).astype(jnp.float32),
+                steps=60, lr=L.lr, l2=L.l2),
+            lambda l: l, state["learn2"])
+        upd.update(learn2=learn2, buf_t=buf_t)
+    return upd
+
 
 def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
              cap_eff=None, axis_name=None, traced=None):
@@ -862,7 +1004,7 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
     the Beta accuracy params into the worker-bank init."""
     from repro.learning import linear
 
-    rate_abs, pop = None, None
+    rate_abs, pop, ph_t, hs_t = None, None, None, None
     if traced is not None:
         cap_eff = jnp.where(traced.votes_cap > 0,
                             traced.votes_cap,
@@ -871,6 +1013,13 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
                              jnp.float32(cfg.arrivals.rate))
         pop = PopTraced(acc_a=jnp.asarray(traced.acc_a, jnp.float32),
                         acc_b=jnp.asarray(traced.acc_b, jnp.float32))
+        # difficulty mixture overrides use a NEGATIVE sentinel (0.0 is a
+        # valid p_hard); resolved here so each grid cell traces its own
+        # hard fraction / score scale through the admission draws
+        ph_t = jnp.where(traced.p_hard >= 0, traced.p_hard,
+                         jnp.float32(cfg.p_hard))
+        hs_t = jnp.where(traced.hard_scale >= 0, traced.hard_scale,
+                         jnp.float32(cfg.hard_scale))
 
     S, L, sh = cfg.n_shards, cfg.learner, cfg.sharding
     D = sh.n_devices if axis_name is not None else 1
@@ -956,25 +1105,12 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
         if axis_name is not None:
             n_arr = jax.lax.dynamic_slice_in_dim(n_arr, lo, Sl)
 
-        if L.enabled:
-            lW, lb = state["learn"].W, state["learn"].b
-            # fusion weight ramps with the training-set size so an
-            # untrained model contributes nothing to finalization
-            fuse_w = L.prior_scale * jnp.minimum(
-                1.0, state["buf_n"].astype(jnp.float32) / L.ramp_n)
-        else:
-            lW = jnp.zeros((1, cfg.n_classes))
-            lb = jnp.zeros((cfg.n_classes,))
-            fuse_w = jnp.zeros(())
-        if cfg.routing.admission == "uncertain_learnable":
-            gW, gb = state["learn2"].W, state["learn2"].b
-        else:
-            gW = jnp.zeros((2, 2))
-            gb = jnp.zeros((2,))
+        lW, lb, fuse_w, gW, gb = _learner_tick_params(cfg, state)
         ws, win, bl, m, train = jax.vmap(
             lambda w, bk, wi, b, na, sd: _shard_tick(
                 cfg, w, bk, wi, b, na, t, step, sd, warmup_t, lW, lb,
-                fuse_w, gW, gb, cap_eff=cap_eff),
+                fuse_w, gW, gb, cap_eff=cap_eff,
+                p_hard_t=ph_t, hard_scale_t=hs_t),
         )(state["ws"], state["banks"], state["win"], state["bl"],
           n_arr, seeds)
 
@@ -984,56 +1120,7 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
             got = gave = jnp.zeros((Sl,), jnp.int32)
 
         new = dict(state)
-        if L.enabled:
-            # push this tick's finalized examples into the replay ring.
-            # The learner is SHARED across shards: the training tree is
-            # all-gathered into canonical shard order first, so every
-            # device pushes the identical examples and fits the identical
-            # replicated model
-            B = L.buffer
-            train = jax.tree_util.tree_map(_gat, train)
-            tm = train["mask"].reshape(-1)
-            tf = train["feat"].reshape(-1, L.n_features)
-            tl = train["label"].reshape(-1)
-            rank = (jnp.cumsum(tm) - 1).astype(jnp.int32)
-            pos = jnp.where(tm, (state["buf_n"] + rank) % B, B)
-            buf_X = state["buf_X"].at[pos].set(
-                jnp.where(tm[:, None], tf, state["buf_X"][pos]))
-            buf_y = state["buf_y"].at[pos].set(
-                jnp.where(tm, tl, state["buf_y"][pos]))
-            buf_n = state["buf_n"] + tm.sum()
-            learn = jax.lax.cond(
-                (step % L.fit_every == 0) & (buf_n > 0),
-                lambda l: linear.fit(
-                    l, buf_X[:B], buf_y[:B],
-                    (jnp.arange(B) < buf_n).astype(jnp.float32),
-                    steps=L.fit_steps, lr=L.lr, l2=L.l2, fresh_opt=False),
-                lambda l: l, state["learn"])
-            new.update(learn=learn, buf_X=buf_X, buf_y=buf_y, buf_n=buf_n)
-            if cfg.routing.admission == "uncertain_learnable":
-                # learnability head trains on the SAME ring positions with
-                # the binary finalized-confident target, square-augmented
-                # features, identical cadence
-                tt = train["learnable"].reshape(-1)
-                buf_t = state["buf_t"].at[pos].set(
-                    jnp.where(tm, tt, state["buf_t"][pos]))
-                # the head is tiny (2F x 2) and its score gates every
-                # admission, so unlike the main learner it is REFIT FROM
-                # SCRATCH on the current ring each cadence: its target
-                # distribution shifts hard at cold start (nothing is
-                # model-known, every target 0) and Adam momentum carried
-                # across that shift leaves the online head stuck far from
-                # the batch optimum. A fresh 60-step fit on <= buffer
-                # examples costs microseconds per cadence tick
-                learn2 = jax.lax.cond(
-                    (step % L.fit_every == 0) & (buf_n > 0),
-                    lambda l: linear.fit(
-                        linear.init(2 * L.n_features, 2),
-                        learnability_features(buf_X[:B]), buf_t[:B],
-                        (jnp.arange(B) < buf_n).astype(jnp.float32),
-                        steps=60, lr=L.lr, l2=L.l2),
-                    lambda l: l, state["learn2"])
-                new.update(learn2=learn2, buf_t=buf_t)
+        new.update(_learner_push_fit(cfg, state, train, step, _gat))
         new.update(
             t=t + cfg.dt, step=step + 1, key=key, arr=arr,
             ws=ws, win=win, bl=bl,
@@ -1169,6 +1256,11 @@ def _as_stream_config(cfg) -> StreamConfig:
 
 
 def _validate_stream_config(cfg: StreamConfig):
+    if cfg.serve:
+        raise ValueError(
+            "StreamConfig.serve=True is the live-injection mode: drive it "
+            "one tick at a time via serve_init/serve_tick (repro.serving."
+            "server), not through the run_stream* simulators")
     if cfg.learner.enabled and cfg.learner.n_features < cfg.n_classes:
         raise ValueError("learner.n_features must be >= n_classes "
                          "(one-hot class means)")
@@ -1374,10 +1466,16 @@ def run_stream_grid(cfg, horizon: int, traced: StreamTraced, *,
                 f"grid votes_cap value {int(v)} must be 0 (unset) or in "
                 f"[max(1, policy.min_votes)={lo}, "
                 f"policy.votes_cap={cfg.policy.votes_cap}]")
+    for v in np.atleast_1d(np.asarray(traced.p_hard)):
+        if v > 1.0:
+            raise ValueError(
+                f"grid p_hard value {float(v)} must be negative (unset) "
+                "or in [0, 1]")
     V = max([int(np.asarray(leaf).shape[0]) for leaf in traced
              if np.ndim(leaf) > 0] or [1])
     dt_ = dict(rate=jnp.float32, votes_cap=jnp.int32,
-               acc_a=jnp.float32, acc_b=jnp.float32)
+               acc_a=jnp.float32, acc_b=jnp.float32,
+               p_hard=jnp.float32, hard_scale=jnp.float32)
     traced = StreamTraced(**{
         f: jnp.broadcast_to(jnp.asarray(getattr(traced, f), dt_[f]), (V,))
         for f in StreamTraced._fields})
@@ -1491,3 +1589,184 @@ def stream_summary(cfg, out) -> dict:
             )
         s["phases"] = phases
     return s
+
+
+# --------------------------------------------------------------------------
+# live serving: single-tick stepping with injected arrivals
+# --------------------------------------------------------------------------
+#
+# ``repro.serving.server`` drives the router ONE tick at a time: pending
+# HTTP submissions are micro-batched into per-shard injected arrival
+# counts (``StreamConfig.serve`` replaces the sampled arrival process with
+# exact counts and threads a request uid through backlog ring, window slot
+# and steal transfers), the donated device state never round-trips to host
+# between ticks, and the only arrays leaving the device per tick are the
+# small ``srv_*`` finalization outputs.
+
+_SERVE_SHARDED_KEYS = ("ws", "banks", "win", "bl", "seeds")
+
+
+def _as_serve_config(cfg) -> StreamConfig:
+    """Accept a serve-mode StreamConfig or a declarative ScenarioSpec
+    (lowered through ``to_serve_config``, which flips ``serve=True``)."""
+    if isinstance(cfg, StreamConfig):
+        return cfg
+    from repro.scenarios.compile import to_serve_config
+    return to_serve_config(cfg)
+
+
+def _validate_serve_config(cfg: StreamConfig):
+    _validate_stream_config(dataclasses.replace(cfg, serve=False))
+    if not cfg.serve:
+        raise ValueError(
+            "serve_init/serve_tick require StreamConfig.serve=True "
+            "(compile the scenario through "
+            "repro.scenarios.compile.to_serve_config)")
+
+
+def serve_init(cfg, seed: int = 0):
+    """Build the device-resident state for :func:`serve_tick`.
+
+    ``cfg`` is a StreamConfig with ``serve=True`` (or a ScenarioSpec,
+    compiled via ``to_serve_config``). The state is a pytree of device
+    arrays; pass it to ``serve_tick`` and keep ONLY the returned state —
+    the input buffers are donated. ``seed`` fixes worker-pool init and
+    every per-tick draw (task identity, vote latencies, churn), so the
+    label stream for a given injection schedule is deterministic."""
+    cfg = _as_serve_config(cfg)
+    _validate_serve_config(cfg)
+    from repro.learning import linear
+
+    S, L = cfg.n_shards, cfg.learner
+    k_init, k_seed = jax.random.split(jax.random.key(seed))
+    init_kd = jax.random.key_data(jax.random.split(k_init, S))
+    seeds = jax.random.bits(k_seed, (S,), jnp.uint32)
+    ws, banks, win, bl = jax.vmap(
+        lambda kd: _init_shard(cfg, jax.random.wrap_key_data(kd)))(init_kd)
+    state = dict(t=jnp.zeros(()), step=jnp.zeros((), jnp.int32),
+                 seeds=seeds, ws=ws, banks=banks, win=win, bl=bl)
+    if L.enabled:
+        state["learn"] = linear.init(L.n_features, cfg.n_classes)
+        state["buf_X"] = jnp.zeros((L.buffer + 1, L.n_features))
+        state["buf_y"] = jnp.zeros((L.buffer + 1,), jnp.int32)
+        state["buf_n"] = jnp.zeros((), jnp.int32)
+    if cfg.routing.admission == "uncertain_learnable":
+        state["learn2"] = linear.init(2 * L.n_features, 2)
+        state["buf_t"] = jnp.zeros((L.buffer + 1,), jnp.int32)
+    # strip weak types (scalar-filled buffers like busy_until=inf): the
+    # post-tick state is strongly typed, and an aval mismatch between the
+    # init state and tick-1's output would recompile the tick once more
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.convert_element_type(x, x.dtype), state)
+
+
+def _serve_tick_impl(cfg: StreamConfig, state, n_arr, uid_base,
+                     axis_name=None):
+    """One serve tick: mirrors ``_run_one``'s scan body with injected
+    arrival counts in place of the sampled arrival process (no warmup —
+    every finalization is reported). Returns ``(new_state, out)``."""
+    S, sh = cfg.n_shards, cfg.sharding
+    D = sh.n_devices if axis_name is not None else 1
+    Sl = S // D
+    di = jax.lax.axis_index(axis_name) if axis_name is not None else 0
+    lo = di * Sl
+
+    def _gat(x):
+        if axis_name is None:
+            return x
+        return jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
+
+    t, step = state["t"], state["step"]
+    lW, lb, fuse_w, gW, gb = _learner_tick_params(cfg, state)
+    ws, win, bl, m, train = jax.vmap(
+        lambda w, bk, wi, b, na, ub, sd: _shard_tick(
+            cfg, w, bk, wi, b, na, t, step, sd, jnp.float32(0.0), lW, lb,
+            fuse_w, gW, gb, uid_base=ub),
+    )(state["ws"], state["banks"], state["win"], state["bl"],
+      n_arr, uid_base, state["seeds"])
+
+    if sh.steal != "none":
+        bl, got, gave = _steal_rebalance(cfg, bl, lo, axis_name)
+    else:
+        got = gave = jnp.zeros((Sl,), jnp.int32)
+
+    new = dict(state)
+    new.update(_learner_push_fit(cfg, state, train, step, _gat))
+    new.update(t=t + cfg.dt, step=step + 1, ws=ws, win=win, bl=bl)
+    out = dict(
+        fin=_gat(m["srv_fin"]), uid=_gat(m["srv_uid"]),
+        label=_gat(m["srv_label"]), votes=_gat(m["srv_votes"]),
+        conf=_gat(m["srv_conf"]), tis=_gat(m["srv_tis"]),
+        dropped=_gat(m["dropped"]),
+        backlog=_gat(bl["count"]),
+        in_flight=_gat(win["active"].sum(-1)),
+        stolen=_gat(got), donated=_gat(gave),
+        t=t + cfg.dt)
+    return new, out
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _serve_tick_jit(cfg: StreamConfig, state, n_arr, uid_base):
+    return _serve_tick_impl(cfg, state, n_arr, uid_base)
+
+
+@functools.lru_cache(maxsize=None)
+def _serve_tick_sharded_jit(cfg: StreamConfig):
+    """Compiled shard_map-partitioned serve tick for
+    ``cfg.sharding.n_devices`` (same mesh plumbing as ``_run_sharded_jit``:
+    per-shard state subtrees live sharded over the "shard" axis, the
+    gathered ``srv_*`` outputs come out replicated, and the state buffers
+    are donated tick over tick)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as Pspec
+
+    from repro.launch.mesh import check_stream_sharding, make_stream_mesh
+
+    D = cfg.sharding.n_devices
+    check_stream_sharding(cfg.n_shards, D)
+    mesh = make_stream_mesh(D)
+
+    def body(state, n_arr, uid_base):
+        return _serve_tick_impl(cfg, state, n_arr, uid_base,
+                                axis_name="shard")
+
+    state_shapes = jax.eval_shape(functools.partial(serve_init, cfg, 0))
+    state_specs = {
+        k: jax.tree_util.tree_map(
+            lambda _: Pspec("shard") if k in _SERVE_SHARDED_KEYS
+            else Pspec(), v)
+        for k, v in state_shapes.items()}
+    arr_sh = jax.ShapeDtypeStruct((cfg.n_shards,), jnp.int32)
+    out_shapes = jax.eval_shape(
+        lambda s, na, ub: _serve_tick_impl(cfg, s, na, ub),
+        state_shapes, arr_sh, arr_sh)
+    rep_specs = jax.tree_util.tree_map(lambda _: Pspec(), out_shapes[1])
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(state_specs, Pspec("shard"), Pspec("shard")),
+                   out_specs=(state_specs, rep_specs), check_rep=False)
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def serve_tick(cfg, state, n_arr, uid_base):
+    """Advance the live service by ONE tick with injected arrivals.
+
+    ``n_arr[s]`` tasks enter shard ``s`` this tick carrying uids
+    ``uid_base[s] .. uid_base[s] + n_arr[s] - 1`` (the caller's per-shard
+    monotonic counters; every injected uid consumes a counter slot whether
+    or not it survives). Each ``n_arr[s]`` must be <=
+    ``cfg.max_arrivals_per_tick``; injections beyond free backlog capacity
+    are dropped from the TAIL of this tick's batch — ``out["dropped"][s]``
+    counts them, so the dropped uids are exactly the last ``dropped[s]``
+    of shard ``s``'s injection. ``state`` is DONATED: keep only the
+    returned state. Returns ``(state, out)`` where ``out["fin"]`` masks
+    the window slots finalized this tick and ``uid``/``label``/``votes``/
+    ``conf``/``tis`` give their request uid, fused label, vote count,
+    posterior confidence and time-in-system (leading dim n_shards), plus
+    per-shard ``backlog``/``in_flight``/``stolen``/``donated`` occupancy
+    and the post-tick clock ``t``."""
+    cfg = _as_serve_config(cfg)
+    n_arr = jnp.asarray(n_arr, jnp.int32)
+    uid_base = jnp.asarray(uid_base, jnp.int32)
+    if cfg.sharding.n_devices > 1:
+        return _serve_tick_sharded_jit(cfg)(state, n_arr, uid_base)
+    return _serve_tick_jit(cfg, state, n_arr, uid_base)

@@ -1,63 +1,98 @@
-"""Serving launcher: batched prefill + decode with request-level straggler
-mitigation (speculative re-dispatch of slow preprocessing/fetch work — the
-paper's Mitigator applied to the serving data path).
+"""Launcher for the live labeling service: serve any registry stream
+scenario over HTTP (``repro.serving.server.LabelServer``).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b --requests 8
+    PYTHONPATH=src python -m repro.launch.serve --scenario serve_default
+    PYTHONPATH=src python -m repro.launch.serve --scenario serve_default \\
+        --port 8787 --tick-interval-s 0.02
+
+``--smoke`` runs the CI leg: start the server on an ephemeral port,
+submit a small workload from concurrent clients, assert every submission
+is answered with conservation intact, then shut down cleanly.
 """
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import ARCHS, reduced
-from repro.models.model import model_template
-from repro.models.params import init_params
-from repro.models.stepfn import make_prefill_step, make_decode_step
+import asyncio
+import json
+import sys
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="h2o-danube-1.8b", choices=sorted(ARCHS))
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--max-tokens", type=int, default=16)
-    args = ap.parse_args()
+async def _serve_forever(args):
+    from repro.scenarios import get_scenario
+    from repro.serving.server import LabelServer
 
-    cfg = reduced(ARCHS[args.arch])
-    params = init_params(model_template(cfg), jax.random.key(0))
-    prefill = jax.jit(make_prefill_step(cfg))
-    decode = jax.jit(make_decode_step(cfg))
-    rng = np.random.default_rng(0)
+    spec = get_scenario(args.scenario)
+    srv = LabelServer(spec, seed=args.seed, host=args.host, port=args.port,
+                      tick_interval_s=args.tick_interval_s)
+    await srv.start()
+    print(f"serving scenario {args.scenario!r} on "
+          f"http://{srv.host}:{srv.port}  (POST /tasks, GET /labels/<id>, "
+          "GET /stats, POST /shutdown)", flush=True)
+    try:
+        while not srv._closed:
+            await asyncio.sleep(0.2)
+    finally:
+        await srv.close()
 
-    done = 0
-    t0 = time.time()
-    while done < args.requests:
-        B = min(args.batch, args.requests - done)
-        B = args.batch  # fixed batch: pad the tail (static shapes)
-        toks = jnp.asarray(rng.integers(
-            0, cfg.vocab_size, (B, args.prompt_len)), jnp.int32)
-        batch = {"tokens": toks}
-        if cfg.is_encoder_decoder:
-            batch["cross_src"] = jnp.zeros(
-                (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
-        elif cfg.n_img_tokens:
-            batch["cross_src"] = jnp.zeros(
-                (B, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
-        logits, cache = prefill(params, batch)
-        tok = jnp.argmax(logits, -1)[:, None]
-        for i in range(args.max_tokens):
-            pos = jnp.full((B,), args.prompt_len + i, jnp.int32)
-            logits, cache = decode(params, cache, tok, pos)
-            tok = jnp.argmax(logits, -1)[:, None]
-        done += B
-    dt = time.time() - t0
-    print(f"served {done} requests x {args.max_tokens} tokens "
-          f"in {dt:.2f}s ({done*args.max_tokens/dt:.1f} tok/s)")
+
+async def _smoke(args):
+    from repro.scenarios import get_scenario
+    from repro.serving.server import LabelServer, ServeClient
+
+    spec = get_scenario(args.scenario)
+    srv = LabelServer(spec, seed=args.seed, host=args.host, port=0,
+                      tick_interval_s=0.0)
+    await srv.start()
+    print(f"smoke: serving {args.scenario!r} on port {srv.port}", flush=True)
+
+    n_clients, per_client = 4, 8
+
+    async def client(i):
+        c = await ServeClient(srv.host, srv.port).connect()
+        out = []
+        for _ in range(per_client):
+            status, r = await c.submit(wait=True, timeout_s=60.0)
+            out.append((status, r))
+        await c.aclose()
+        return out
+
+    results = await asyncio.gather(*[client(i) for i in range(n_clients)])
+    answered = [r for out in results for (status, r) in out
+                if status == 200 and r["status"] == "done"]
+    stats = srv.stats()
+    c = await ServeClient(srv.host, srv.port).connect()
+    await c.shutdown()
+    await c.aclose()
+    await srv.close()
+    n = n_clients * per_client
+    ok = (len(answered) == n and stats["conservation"]
+          and stats["answered"] == n)
+    print(json.dumps(dict(
+        submitted=n, answered=len(answered),
+        conservation=stats["conservation"],
+        p50_latency_s=stats["p50_latency_s"],
+        p95_latency_s=stats["p95_latency_s"],
+        ticks=stats["ticks"], ok=ok)))
+    if not ok:
+        raise SystemExit("serve smoke FAILED: "
+                         f"{len(answered)}/{n} answered, stats={stats}")
+    print("serve smoke OK", flush=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", default="serve_default")
+    ap.add_argument("--host", default=None)
+    ap.add_argument("--port", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tick-interval-s", type=float, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the CI smoke workload and exit")
+    args = ap.parse_args(argv)
+    try:
+        asyncio.run(_smoke(args) if args.smoke else _serve_forever(args))
+    except KeyboardInterrupt:
+        print("interrupted", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -45,6 +45,7 @@ _EXPORTS = {
     "LearnerSpec": "spec",
     "ShardingSpec": "spec",
     "TraceSpec": "spec",
+    "ServeSpec": "spec",
     "GridSpec": "spec",
     "override": "spec",
     # registry
@@ -63,6 +64,7 @@ _EXPORTS = {
     "compile_for": "compile",
     "to_fast_config": "compile",
     "to_stream_config": "compile",
+    "to_serve_config": "compile",
     "to_cs_config": "compile",
 }
 

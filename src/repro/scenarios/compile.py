@@ -34,7 +34,8 @@ TRACED_AXES = {
                 "pool.recruit_mean_s", "pool.cold_recruit_mean_s",
                 "pool.acc_a", "pool.acc_b"),
     "stream": ("arrivals.rate", "policy.redundancy.votes",
-               "pool.acc_a", "pool.acc_b"),
+               "pool.acc_a", "pool.acc_b",
+               "difficulty.p_hard", "difficulty.hard_scale"),
 }
 
 # engine defaults the spec layer must not silently change
@@ -284,6 +285,19 @@ def to_stream_config(spec: ScenarioSpec):
         ),
         trace=_trace_config(spec),
     )
+
+
+def to_serve_config(spec: ScenarioSpec):
+    """ScenarioSpec -> serve-mode StreamConfig for the live front end
+    (``repro.serving.server``): the exact ``to_stream_config`` lowering
+    with ``serve=True``, which swaps the sampled arrival process for
+    injected per-shard counts and threads request uids through the
+    backlog/window state (``labelstream.router.serve_tick``). The HTTP
+    surface itself (host/port/timeouts) stays host-side in
+    ``spec.serve``."""
+    import dataclasses
+
+    return dataclasses.replace(to_stream_config(spec), serve=True)
 
 
 def compile_for(spec: ScenarioSpec, engine: str, *, seed: int = 0):

@@ -46,6 +46,16 @@ _STREAM_VOTES_AXIS = "policy.redundancy.votes"
 #: draw on BOTH jitted engines (simfast ``PopTraced`` / stream
 #: ``StreamTraced``)
 _ACC_AXES = ("pool.acc_a", "pool.acc_b")
+#: stream axes traced through the StreamTraced grid bundle (the acc axes
+#: plus the difficulty mixture: the hard-task draw is reparameterized on
+#: (p_hard, hard_scale), so a traced absolute value reproduces the
+#: static-config program bit-for-bit)
+_STREAM_TRACED_AXES = {
+    "pool.acc_a": "acc_a",
+    "pool.acc_b": "acc_b",
+    "difficulty.p_hard": "p_hard",
+    "difficulty.hard_scale": "hard_scale",
+}
 
 
 def _resolve_engine(spec: ScenarioSpec, engine):
@@ -230,12 +240,13 @@ def sweep(scenario, axis: str, values, engine: str = None, *, seed: int = 0,
         return dict(axis=axis, values=values, engine=engine,
                     vectorized=True, results=results, raw=raw)
 
-    # Beta accuracy params trace through the worker draw (the draw is
-    # reparameterized on (a, b), so a traced absolute value reproduces the
-    # static-config draw bit-for-bit); one compilation per acc sweep on
-    # either jitted engine. Device-sharded stream ticks keep their pmap
+    # Beta accuracy params and the difficulty mixture trace through the
+    # StreamTraced grid bundle (the worker draw is reparameterized on
+    # (a, b) and the hard-task draw on (p_hard, hard_scale), so a traced
+    # absolute value reproduces the static-config draw bit-for-bit); one
+    # compilation per sweep. Device-sharded stream ticks keep their pmap
     # program and fall through to the per-value path.
-    if engine == "stream" and axis in _ACC_AXES \
+    if engine == "stream" and axis in _STREAM_TRACED_AXES \
             and scenario.sharding.n_devices == 1:
         from repro.labelstream.router import (
             StreamTraced, run_stream_grid, stream_summary,
@@ -249,7 +260,10 @@ def sweep(scenario, axis: str, values, engine: str = None, *, seed: int = 0,
             votes_cap=np.full((V,), cfg.policy.votes_cap, np.int32),
             acc_a=np.full((V,), cfg.acc_a, np.float32),
             acc_b=np.full((V,), cfg.acc_b, np.float32),
-        )._replace(**{axis.split(".")[1]: np.asarray(values, np.float32)})
+            p_hard=np.full((V,), cfg.p_hard, np.float32),
+            hard_scale=np.full((V,), cfg.hard_scale, np.float32),
+        )._replace(**{_STREAM_TRACED_AXES[axis]:
+                      np.asarray(values, np.float32)})
         raw = run_stream_grid(cfg, horizon if horizon is not None
                               else scenario.horizon, tr, n_reps=n_reps,
                               seed=seed, warmup_frac=warmup_frac)

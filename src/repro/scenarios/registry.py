@@ -20,8 +20,8 @@ import dataclasses
 from repro.scenarios.spec import (
     AdmissionSpec, ArrivalSpec, DifficultySpec, EngineKnobs, FeatureSpec,
     GridSpec, LearnerSpec, MaintenanceSpec, PolicySpec, PoolSpec,
-    RedundancySpec, RoutingSpec, ScenarioSpec, ShardingSpec, StragglerSpec,
-    override,
+    RedundancySpec, RoutingSpec, ScenarioSpec, ServeSpec, ShardingSpec,
+    StragglerSpec, override,
 )
 
 _REGISTRY: dict = {}
@@ -245,6 +245,27 @@ def _seed():
         policy=PolicySpec(redundancy=_drip, routing=RoutingSpec(kind="scored"),
                           learner=LearnerSpec(enabled=True,
                                               min_votes_known=1)),
+    ))
+
+    # the live-serving workload (repro.serving.server + bench_serve): a
+    # FAST high-accuracy crowd (6 s median worker latency, 2 s ticks) so
+    # submissions finalize within a handful of ticks — the regime where
+    # wall-clock answer latency is dominated by the serving loop itself,
+    # which is what the SLO bench must measure. The arrival process is
+    # nominal only: serve mode injects real submissions instead.
+    register_scenario("serve_default", ScenarioSpec(
+        window=32,
+        pool=PoolSpec(pool_size=16, n_shards=2, median_mu=6.0,
+                      sigma_ln=0.6, latency_floor=0.5,
+                      session_mean_s=3600.0),
+        arrivals=ArrivalSpec(kind="poisson", rate=0.5),
+        engine=EngineKnobs(dt=2.0, tis_bin_s=4.0),
+        policy=PolicySpec(
+            redundancy=RedundancySpec(adaptive=True, votes=3,
+                                      conf_threshold=0.9, min_votes=1,
+                                      max_outstanding=2),
+        ),
+        serve=ServeSpec(tick_interval_s=0.0),
     ))
 
     # the device-scaling workload: 8 pool shards so the shard groups

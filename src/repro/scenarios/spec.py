@@ -239,6 +239,47 @@ class TraceSpec:
 
 @_static
 @dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Live serving front end (``repro.serving.server``): the stream tick
+    driven by real HTTP submissions instead of the sampled arrival
+    process. Submissions are micro-batched into per-shard injected
+    arrival counts each tick; router state stays device-resident with
+    donated buffers between ticks and queries are answered from the
+    finalized-label stream with wall-clock timestamps.
+
+    ``tick_interval_s``    — minimum wall seconds between ticks while work
+    is in flight (0 runs ticks back-to-back, the bench setting);
+    ``max_pending``        — host-side admission queue bound: submissions
+    beyond it are rejected with 429 instead of buffering unboundedly;
+    ``request_timeout_s``  — default cap on a blocking ``wait=true``
+    submission/query (the TASK stays in the system; only the HTTP wait
+    times out);
+    ``drain_timeout_s``    — graceful-shutdown budget to finish in-flight
+    tasks before outstanding requests are resolved as ``"shutdown"``.
+    """
+    host: str = "127.0.0.1"
+    port: int = 0                 # 0 = ephemeral (picked by the OS)
+    tick_interval_s: float = 0.01
+    max_pending: int = 4096
+    request_timeout_s: float = 30.0
+    drain_timeout_s: float = 10.0
+
+    def __post_init__(self):
+        c = ServeSpec
+        _check(c, 0 <= self.port <= 65535, "port",
+               f"must be in [0, 65535], got {self.port}")
+        _check(c, self.tick_interval_s >= 0, "tick_interval_s",
+               f"must be >= 0, got {self.tick_interval_s}")
+        _check(c, self.max_pending >= 1, "max_pending",
+               f"must be >= 1, got {self.max_pending}")
+        _check(c, self.request_timeout_s > 0, "request_timeout_s",
+               f"must be > 0, got {self.request_timeout_s}")
+        _check(c, self.drain_timeout_s >= 0, "drain_timeout_s",
+               f"must be >= 0, got {self.drain_timeout_s}")
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
 class EngineKnobs:
     """Discretization/measurement knobs that belong to the simulation, not
     the workload. ``dt=None`` uses the engine default (2 s batch tick /
@@ -484,6 +525,7 @@ class ScenarioSpec:
     engine: EngineKnobs = EngineKnobs()
     sharding: ShardingSpec = ShardingSpec()
     trace: TraceSpec = TraceSpec()
+    serve: ServeSpec = ServeSpec()
 
     def __post_init__(self):
         c = ScenarioSpec

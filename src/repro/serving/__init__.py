@@ -1,0 +1,3 @@
+"""Serving-side components: the discrete-event request-path scheduler
+(:mod:`repro.serving.scheduler`) and the live asyncio HTTP front end for
+the streaming label router (:mod:`repro.serving.server`)."""

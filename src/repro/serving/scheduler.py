@@ -30,8 +30,8 @@ from repro.core.workers import Worker
 class Request:
     rid: int
     arrived: float
-    ready_at: float = None     # preprocessing done
-    done_at: float = None
+    ready_at: Optional[float] = None     # preprocessing done
+    done_at: Optional[float] = None
     attempts: int = 0
 
 

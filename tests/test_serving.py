@@ -1,0 +1,234 @@
+"""Live serving front end (repro.serving.server): conservation under
+concurrent clients, request timeouts, abrupt disconnects, graceful
+shutdown, and bitwise determinism of the serve tick under a fixed seed.
+
+All HTTP tests share one scenario config so the serve tick compiles once
+per test session; each test spins up a fresh in-process server on an
+ephemeral loopback port (no sockets leak across tests)."""
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+
+def _spec():
+    from repro import scenarios
+    return scenarios.get_scenario("serve_default")
+
+
+def _server(**kw):
+    from repro.serving.server import LabelServer
+    kw.setdefault("tick_interval_s", 0.0)
+    return LabelServer(_spec(), seed=0, port=0, **kw)
+
+
+def test_conservation_under_concurrent_clients():
+    """Every submission from racing keep-alive clients answers, and the
+    ledger balances: submitted == answered + pending + in-system +
+    dropped + shutdown, with zero device drops (capacity throttling)."""
+    from repro.serving.server import ServeClient
+
+    async def main():
+        srv = await _server().start()
+        n_clients, per_client = 6, 5
+
+        async def client(i):
+            c = await ServeClient(srv.host, srv.port).connect()
+            out = []
+            for _ in range(per_client):
+                out.append(await c.submit(wait=True, timeout_s=60.0))
+            await c.aclose()
+            return out
+
+        results = await asyncio.gather(
+            *[client(i) for i in range(n_clients)])
+        stats = srv.stats()
+        await srv.close()
+        return results, stats
+
+    results, stats = asyncio.run(main())
+    flat = [r for out in results for r in out]
+    assert all(s == 200 and r["status"] == "done" for s, r in flat), flat
+    n = len(flat)
+    assert stats["submitted"] == n
+    assert stats["answered"] == n
+    assert stats["dropped"] == 0
+    assert stats["conservation"] is True
+    # answered requests carry the full label payload + wall-clock latency
+    for _, r in flat:
+        assert r["label"] in (0, 1)
+        assert r["votes"] >= 1
+        assert r["latency_s"] >= 0.0
+
+
+def test_request_timeout_keeps_task_in_system():
+    """A wait=True submission whose long-poll times out gets 202 — but
+    only the HTTP wait dies; the task stays in the system, finalizes on
+    a later tick, and is retrievable via GET /labels/<id>."""
+    from repro.serving.server import ServeClient
+
+    async def main():
+        srv = await _server().start()
+        c = await ServeClient(srv.host, srv.port).connect()
+        status, r = await c.submit(wait=True, timeout_s=0.0)
+        assert status == 202, (status, r)
+        assert r["status"] in ("pending", "queued"), r
+        rid = r["id"]
+        for _ in range(400):
+            status, r = await c.label(rid)
+            if r["status"] == "done":
+                break
+            await asyncio.sleep(0.02)
+        stats = srv.stats()
+        await c.aclose()
+        await srv.close()
+        return r, stats
+
+    r, stats = asyncio.run(main())
+    assert r["status"] == "done", r
+    assert stats["answered"] == stats["submitted"] == 1
+    assert stats["conservation"] is True
+
+
+def test_abrupt_client_disconnect():
+    """A client that submits and vanishes before reading the response
+    must not wedge the server or leak its task: the submission still
+    finalizes, later clients are served, conservation holds."""
+    from repro.serving.server import ServeClient
+
+    async def main():
+        srv = await _server().start()
+
+        # full request, socket torn down before the response is read
+        reader, writer = await asyncio.open_connection(srv.host, srv.port)
+        body = json.dumps({"wait": True, "timeout_s": 60.0}).encode()
+        writer.write((f"POST /tasks HTTP/1.1\r\nHost: t\r\n"
+                      f"Content-Length: {len(body)}\r\n\r\n").encode()
+                     + body)
+        await writer.drain()
+        writer.close()
+
+        # half a request, then gone mid-headers
+        reader, writer = await asyncio.open_connection(srv.host, srv.port)
+        writer.write(b"POST /tasks HTTP/1.1\r\nContent-Le")
+        await writer.drain()
+        writer.close()
+
+        # a well-behaved client is still served
+        c = await ServeClient(srv.host, srv.port).connect()
+        status, r = await c.submit(wait=True, timeout_s=60.0)
+        assert status == 200 and r["status"] == "done", (status, r)
+        # the orphaned submission drains too
+        for _ in range(400):
+            stats = srv.stats()
+            if stats["answered"] == stats["submitted"]:
+                break
+            await asyncio.sleep(0.02)
+        await c.aclose()
+        await srv.close()
+        return stats
+
+    stats = asyncio.run(main())
+    # the torn-down half-request never became a submission; the complete
+    # one did and was answered despite the dead socket
+    assert stats["submitted"] == 2
+    assert stats["answered"] == 2
+    assert stats["conservation"] is True
+
+
+def test_graceful_shutdown_resolves_stragglers():
+    """close(drain=True) answers what it can inside the drain window and
+    resolves the rest as status='shutdown' — nothing is left hanging and
+    the conservation ledger still balances."""
+    from repro.serving.server import ServeClient
+
+    async def main():
+        srv = await _server().start()
+        c = await ServeClient(srv.host, srv.port).connect()
+        rids = []
+        for _ in range(8):
+            status, r = await c.submit(wait=False)
+            assert status in (200, 202)
+            rids.append(r["id"])
+        await c.aclose()
+        await srv.close(drain=True)
+        states = [srv._reqs[rid].status for rid in rids]
+        return states, srv.stats()
+
+    states, stats = asyncio.run(main())
+    assert all(s in ("done", "shutdown") for s in states), states
+    assert stats["conservation"] is True
+    assert stats["answered"] + stats["shutdown_unanswered"] == 8
+    # after close, new submissions are refused (server socket is down)
+    assert stats["pending"] == 0 and stats["in_system"] == 0
+
+
+def test_rejects_bad_requests():
+    """400 on malformed JSON, 404 on unknown routes, 404 on unknown ids;
+    none of these perturb the ledger."""
+    from repro.serving.server import ServeClient
+
+    async def main():
+        srv = await _server().start()
+        c = await ServeClient(srv.host, srv.port).connect()
+        out = {}
+        # malformed JSON body
+        reader, writer = await asyncio.open_connection(srv.host, srv.port)
+        writer.write(b"POST /tasks HTTP/1.1\r\nHost: t\r\n"
+                     b"Content-Length: 5\r\n\r\n{oops")
+        await writer.drain()
+        line = await reader.readline()
+        out["bad_json"] = int(line.split()[1])
+        writer.close()
+        out["no_route"] = (await c.request("GET", "/nope"))[0]
+        out["bad_id"] = (await c.label(99))[0]
+        stats = srv.stats()
+        await c.aclose()
+        await srv.close()
+        return out, stats
+
+    out, stats = asyncio.run(main())
+    assert out == {"bad_json": 400, "no_route": 404, "bad_id": 404}
+    assert stats["submitted"] == 0 and stats["conservation"] is True
+
+
+def test_serve_tick_deterministic_fixed_seed():
+    """Two serve runs with the same seed and the same injection schedule
+    produce bitwise-identical finalization streams and end states — the
+    live server's tick stream is replayable."""
+    import jax
+    from repro import scenarios
+    from repro.labelstream.router import serve_init, serve_tick
+
+    cfg = scenarios.to_serve_config(_spec())
+    S = cfg.n_shards
+    rng = np.random.default_rng(123)
+    # a fixed, bursty injection schedule (well under backlog capacity)
+    schedule = rng.integers(0, 3, size=(30, S)).astype(np.int32)
+
+    def run_once():
+        state = serve_init(cfg, seed=7)
+        uid_base = np.zeros((S,), np.int32)
+        outs = []
+        for n_arr in schedule:
+            state, out = serve_tick(cfg, state, n_arr, uid_base)
+            uid_base = uid_base + n_arr
+            outs.append(jax.device_get(out))
+        return outs, jax.device_get(state)
+
+    outs_a, state_a = run_once()
+    outs_b, state_b = run_once()
+    for oa, ob in zip(outs_a, outs_b):
+        assert sorted(oa) == sorted(ob)
+        for k in oa:
+            np.testing.assert_array_equal(np.asarray(oa[k]),
+                                          np.asarray(ob[k]), err_msg=k)
+    la, ta = jax.tree_util.tree_flatten(state_a)
+    lb, tb = jax.tree_util.tree_flatten(state_b)
+    assert ta == tb
+    for xa, xb in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    # the finalization stream actually finalized something
+    total_fin = sum(int(np.asarray(o["fin"]).sum()) for o in outs_a)
+    assert total_fin > 0
