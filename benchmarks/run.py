@@ -16,9 +16,9 @@ def main() -> None:
     # anything initializes jax so the flag takes effect
     from benchmarks import bench_simfast
     from benchmarks import (bench_workers, bench_straggler, bench_pool,
-                            bench_combined, bench_grid, bench_hybrid,
-                            bench_e2e, bench_kernels, bench_labelstream,
-                            bench_serve, roofline)
+                            bench_combined, bench_embed, bench_grid,
+                            bench_hybrid, bench_e2e, bench_kernels,
+                            bench_labelstream, bench_serve, roofline)
     print("name,us_per_call,derived")
     t0 = time.time()
     if smoke:
@@ -40,6 +40,9 @@ def main() -> None:
         print("# --- smoke: live serving front end (wall-clock answer "
               "latency through the jitted serve tick) ---", flush=True)
         bench_serve.run(smoke=True)
+        print("# --- smoke: LM-embedding features (encoder throughput + "
+              "chance_hard recovery) ---", flush=True)
+        bench_embed.run(smoke=True)
         print(f"# total {time.time()-t0:.1f}s", flush=True)
         return
     for mod, tag in ((bench_workers, "worker latency CDFs (Fig 2)"),
@@ -57,6 +60,9 @@ def main() -> None:
                       "per static class"),
                      (bench_serve,
                       "live serving front end (wall-clock SLOs)"),
+                     (bench_embed,
+                      "LM-embedding task features (encoder + chance_hard "
+                      "recovery)"),
                      (roofline, "roofline (dry-run artifacts)")):
         print(f"# --- {tag} ---", flush=True)
         mod.run()

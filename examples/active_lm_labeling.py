@@ -1,32 +1,50 @@
-"""Hybrid active/passive labeling -> model training, end to end (paper §5/6.5).
+"""Hybrid active/passive labeling on LM-embedded text tasks (paper §5/6.5).
 
 The crowd (simulated workers with medical-deployment-calibrated latencies)
-labels a CIFAR-dimension dataset; CLAMShell splits each round between
-uncertainty-sampled points (scored with the fused entropy kernel) and random
-points, retrains asynchronously, and reports the accuracy-vs-time curve
-against pure active and pure passive learning. The learner policy is
-declared on a ``repro.scenarios`` spec and driven through
-``scenarios.run_learning``.
+labels a corpus of synthetic text tasks whose features are REAL language-
+model embeddings: ``repro.embed`` tokenizes class-correlated text, runs it
+through the in-repo model stack (``logits_mode="hidden"`` forward, masked
+mean pooling, seeded random projection), and hands the learner the
+resulting vectors. CLAMShell splits each round between uncertainty-sampled
+points (scored with the fused entropy kernel) and random points, retrains
+asynchronously, and reports the accuracy-vs-time curve against pure active
+and pure passive learning. The workload AND the embedding pipeline are
+declared on one ``repro.scenarios`` spec; ``run_learning`` builds the
+LM-feature dataset from it.
 
-    PYTHONPATH=src python examples/active_lm_labeling.py
+    PYTHONPATH=src python examples/active_lm_labeling.py [--smoke]
 """
+import sys
+
 from repro import scenarios
 from repro.core.clamshell import acc_at_time
-from repro.data.datasets import cifar_like, train_test_split
+
+SMOKE = "--smoke" in sys.argv
 
 
-def run(kind):
-    X, y = cifar_like(2500, seed=4)
-    Xtr, ytr, Xte, yte = train_test_split(X, y)
-    spec = scenarios.ScenarioSpec(
+def build_spec(kind):
+    return scenarios.ScenarioSpec(
+        n_classes=4,
+        # no difficulty mixture here: the batch events engine doesn't
+        # model it (stream engines do; see the lm_chance_hard scenario)
+        features=scenarios.FeatureSpec(kind="lm", n_features=16,
+                                       class_sep=2.0),
+        embed=scenarios.EmbedSpec(seq_len=16, bank_size=64, batch_size=64),
         pool=scenarios.PoolSpec(pool_size=24),
         policy=scenarios.PolicySpec(
             maintenance=scenarios.MaintenanceSpec(pm_l=150.0),
             learner=scenarios.LearnerSpec(
                 kind=kind, al_batch=6,
                 async_retrain=(kind != "AL"))))
-    res = scenarios.run_learning(spec, Xtr, ytr, Xte, yte, engine="events",
-                                 seed=0, label_budget=300)
+
+
+def run(kind):
+    spec = build_spec(kind)
+    res = scenarios.run_learning(
+        spec, engine="events", seed=0,
+        label_budget=60 if SMOKE else 300,
+        n_train=400 if SMOKE else 2000,
+        n_test=200 if SMOKE else 500)
     return res["curve"], res["result"]
 
 
@@ -38,7 +56,8 @@ def main():
         print(f"  {k}: acc@t={acc_at_time(curve, t_ref):.3f} "
               f"final={curve[-1][2]:.3f} total={res.total_time:,.0f}s "
               f"labels={res.n_labels} cost=${res.cost:.2f}")
-    print("hybrid = active's sample-efficiency + passive's parallelism.")
+    print("hybrid = active's sample-efficiency + passive's parallelism, "
+          "now on LM features.")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,50 @@
+"""embed: LM-embedding task features end-to-end.
+
+The subsystem that replaces synthetic Gaussian task features with real
+LM representations from the in-repo ``repro.models`` stack:
+
+  * :mod:`repro.embed.corpus`  — deterministic synthetic text tasks
+    (class-correlated token distributions; difficulty = signal strength)
+    plus a hash tokenizer for real submitted text;
+  * :mod:`repro.embed.encoder` — jitted padded/masked batched embedding
+    extraction (``logits_mode="hidden"`` forward, bf16 -> f32, masked
+    mean / last-token pooling, seeded random projection, pmap chunks);
+  * :mod:`repro.embed.bank`    — the precomputed device-resident
+    :class:`EmbeddingBank` the jitted stream/serve ticks gather from
+    (no extra randomness vs the Gaussian path) and host-side dataset
+    building for the batch learning loops.
+
+Declaratively: ``FeatureSpec(kind="lm")`` + ``EmbedSpec`` on a
+``ScenarioSpec`` (registry: ``lm_stream``, ``lm_chance_hard``).
+
+Exports resolve lazily (PEP 562), mirroring ``labelstream/__init__``.
+"""
+import importlib
+
+_EXPORTS = {
+    "EmbedConfig": "config",
+    "POOLING_KINDS": "config",
+    "make_tokens": "corpus",
+    "tokenize_text": "corpus",
+    "signal_strength": "corpus",
+    "encode": "encoder",
+    "resolved_config": "encoder",
+    "model_params": "encoder",
+    "projection": "encoder",
+    "EmbeddingBank": "bank",
+    "embedding_bank": "bank",
+    "bank_gather": "bank",
+    "embed_texts": "bank",
+    "make_dataset": "bank",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        mod = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        value = getattr(mod, name)
+        globals()[name] = value          # cache for subsequent lookups
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

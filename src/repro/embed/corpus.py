@@ -1,0 +1,97 @@
+"""Deterministic synthetic text-task generator.
+
+Each task is a seeded token-id sequence whose token DISTRIBUTION carries
+the class signal: every class owns a small block of signature tokens in
+the upper half of the vocab, and each position is a signature token with
+probability ``signal`` (else a Zipf-skewed background token from the
+lower half). ``signal`` maps ``FeatureSpec.class_sep`` into token space
+and is shrunk by ``hard_sep_scale`` on hard tasks, so ``chance_hard``-
+style workloads — difficulty visible in feature space — exist in
+EMBEDDING space too: a hard task's text is mostly background noise, and
+its pooled LM representation collapses toward the background mean no
+matter which class it nominally belongs to.
+
+Everything is a pure function of ``(EmbedConfig.seed, labels, hard)`` —
+two calls with equal inputs produce bit-equal token arrays — which is
+what lets :mod:`repro.embed.bank` precompute a device-resident bank the
+jitted stream tick can gather from without consuming any randomness.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.embed.config import EmbedConfig
+
+#: signature tokens per class (vocab block width)
+SIG_TOKENS = 8
+
+
+def signal_strength(class_sep: float, hard_sep_scale: float = 1.0,
+                    hard: bool = False) -> float:
+    """Map the Gaussian-feature ``class_sep`` knob onto the per-position
+    signature-token probability (clipped to keep some background mass)."""
+    s = min(class_sep / 4.0, 0.95)
+    if hard:
+        s *= hard_sep_scale
+    return float(max(s, 0.0))
+
+
+def make_tokens(ec: EmbedConfig, labels, hard, n_classes: int,
+                vocab_size: int, class_sep: float,
+                hard_sep_scale: float = 1.0):
+    """Token-id sequences for ``len(labels)`` tasks.
+
+    ``labels`` (N,) int class ids, ``hard`` (N,) bool difficulty flags.
+    Returns ``(tokens (N, seq_len) int32, lengths (N,) int32)`` with
+    variable lengths in ``[seq_len // 2, seq_len]``; positions past a
+    task's length are zero-padded (the encoder masks them).
+    """
+    labels = np.asarray(labels, np.int32)
+    hard = np.asarray(hard, bool)
+    N, T = labels.shape[0], ec.seq_len
+    if vocab_size < 2 * n_classes * SIG_TOKENS:
+        raise ValueError(
+            f"vocab_size={vocab_size} too small for {n_classes} classes x "
+            f"{SIG_TOKENS} signature tokens (need >= "
+            f"{2 * n_classes * SIG_TOKENS})")
+    bg = vocab_size // 2                      # background token range
+    key = jax.random.key(ec.seed)
+    u = np.asarray(jax.random.uniform(key, (3, N, T)))
+    ul = np.asarray(jax.random.uniform(jax.random.fold_in(key, 1), (N,)))
+
+    s_easy = signal_strength(class_sep, hard_sep_scale, hard=False)
+    s_hard = signal_strength(class_sep, hard_sep_scale, hard=True)
+    sig_p = np.where(hard, s_hard, s_easy)[:, None]          # (N, 1)
+    # class c's signature block sits at [bg + c*SIG, bg + (c+1)*SIG)
+    sig_tok = (bg + labels[:, None] * SIG_TOKENS
+               + np.minimum((u[1] * SIG_TOKENS).astype(np.int32),
+                            SIG_TOKENS - 1))
+    # Zipf-ish background: quadratic skew toward low token ids
+    bg_tok = np.minimum((u[2] ** 2 * bg).astype(np.int32), bg - 1)
+    tokens = np.where(u[0] < sig_p, sig_tok, bg_tok).astype(np.int32)
+
+    lo = T // 2
+    lengths = (lo + np.minimum((ul * (T - lo + 1)).astype(np.int32),
+                               T - lo)).astype(np.int32)
+    mask = np.arange(T)[None, :] < lengths[:, None]
+    return jnp.asarray(np.where(mask, tokens, 0)), jnp.asarray(lengths)
+
+
+def tokenize_text(text: str, seq_len: int, vocab_size: int):
+    """Deterministic hash tokenizer for REAL submitted text (the serving
+    path): whitespace words roll through sha1 into stable token ids.
+    Returns ``(tokens (seq_len,) int32, length int)``; empty text maps to
+    a single zero token so every submission embeds somewhere."""
+    words = text.split()[:seq_len]
+    if not words:
+        return np.zeros((seq_len,), np.int32), 1
+    toks = [int.from_bytes(
+        hashlib.sha1(w.encode("utf-8", "replace")).digest()[:4], "big")
+        % vocab_size for w in words]
+    out = np.zeros((seq_len,), np.int32)
+    out[:len(toks)] = toks
+    return out, len(toks)

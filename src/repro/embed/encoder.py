@@ -1,0 +1,130 @@
+"""Jitted batched embedding extraction through the ``repro.models`` stack.
+
+Token sequences run through ``models.model.forward`` with
+``logits_mode="hidden"`` (bf16 compute, f32 final-norm hidden states),
+are pooled over the real (unpadded) positions — masked mean or the last
+real token — and projected to the learner's feature width by a seeded
+Gaussian random projection. Model params, the resolved config and the
+projection are all deterministic functions of :class:`EmbedConfig`, and
+every micro-batch is padded to the static ``batch_size`` by REPEATING
+the last row (the ``core.simfast._pad_keys`` idiom: real rows stay
+bit-identical whatever the batch remainder, pad rows are dropped), so a
+corpus embeds to the same features regardless of chunking or device
+count. With multiple visible devices the micro-batch axis is pmapped
+(pad -> reshape (D, B, T) -> pmap -> unpad).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.embed.config import EmbedConfig
+
+
+@functools.lru_cache(maxsize=None)
+def resolved_config(ec: EmbedConfig):
+    """The (possibly reduced) ModelConfig behind an EmbedConfig."""
+    from repro.configs.base import reduced
+    from repro.configs.registry import get_config
+
+    cfg = get_config(ec.model)
+    return reduced(cfg) if ec.reduced else cfg
+
+
+@functools.lru_cache(maxsize=None)
+def model_params(ec: EmbedConfig):
+    """Seeded random-init params for the embedding model (no training —
+    random features through a structured architecture are a standard
+    strong baseline, and nothing downstream assumes pretrained weights)."""
+    from repro.models.model import model_template
+    from repro.models.params import init_params
+
+    return init_params(model_template(resolved_config(ec)),
+                       jax.random.key(ec.seed))
+
+
+@functools.lru_cache(maxsize=None)
+def projection(ec: EmbedConfig, n_features: int):
+    """Seeded Gaussian random projection d_model -> n_features (JL-style;
+    variance-preserving 1/sqrt(n_features) scale)."""
+    cfg = resolved_config(ec)
+    if ec.projection_dim is not None and ec.projection_dim != n_features:
+        raise ValueError(
+            f"EmbedConfig.projection_dim={ec.projection_dim} != requested "
+            f"feature width {n_features} (FeatureSpec.n_features)")
+    k = jax.random.fold_in(jax.random.key(ec.seed), 0x9E3779B9)
+    return (jax.random.normal(k, (cfg.d_model, n_features))
+            / jnp.sqrt(jnp.float32(n_features)))
+
+
+def _cross_src(cfg, B):
+    """Zero stub cross-source for architectures that demand one (whisper's
+    encoder frames, VLM image tokens) — task text carries the signal."""
+    if cfg.is_encoder_decoder:
+        return jnp.zeros((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.n_img_tokens:
+        return jnp.zeros((B, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+    return None
+
+
+def _embed_batch(cfg, params, tokens, lengths, pooling, proj):
+    """(B, T) int32 tokens + (B,) lengths -> (B, F) f32 features."""
+    from repro.models.model import forward
+
+    B, T = tokens.shape
+    hidden, _, _ = forward(params, cfg, tokens, mode="train",
+                           logits_mode="hidden",
+                           cross_src=_cross_src(cfg, B))
+    if pooling == "mean":
+        mask = (jnp.arange(T)[None, :] < lengths[:, None])
+        pooled = ((hidden * mask[:, :, None]).sum(1)
+                  / jnp.maximum(lengths, 1).astype(jnp.float32)[:, None])
+    else:                                     # "last": final real token
+        pooled = hidden[jnp.arange(B), jnp.maximum(lengths - 1, 0)]
+    return (pooled @ proj).astype(jnp.float32)
+
+
+_embed_jit = jax.jit(_embed_batch, static_argnums=(0, 4))
+_embed_pmap = jax.pmap(_embed_batch, static_broadcasted_argnums=(0, 4),
+                       in_axes=(None, None, 0, 0, None, None))
+
+
+def encode(ec: EmbedConfig, tokens, lengths, n_features: int, *,
+           shard: bool = True):
+    """Embed ``(N, seq_len)`` token sequences to ``(N, n_features)`` f32.
+
+    Chunked into static ``ec.batch_size`` micro-batches (one compilation
+    for any N); with ``shard`` and multiple visible devices each chunk
+    covers ``batch_size * n_devices`` rows and pmaps over them. Short
+    chunks are padded by repeating the last row and unpadded on the way
+    out, so results are independent of chunking and device count."""
+    cfg = resolved_config(ec)
+    params = model_params(ec)
+    proj = projection(ec, n_features)
+    tokens = jnp.asarray(tokens, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if tokens.ndim != 2 or tokens.shape[1] != ec.seq_len:
+        raise ValueError(f"tokens must be (N, seq_len={ec.seq_len}), "
+                         f"got {tokens.shape}")
+    N, B = int(tokens.shape[0]), ec.batch_size
+    D = jax.local_device_count() if shard else 1
+    step = B * D if D > 1 else B
+    feats = []
+    for i in range(0, N, step):
+        tb, lb = tokens[i:i + step], lengths[i:i + step]
+        n = int(tb.shape[0])
+        pad = step - n
+        if pad:
+            tb = jnp.concatenate(
+                [tb, jnp.broadcast_to(tb[-1:], (pad, tb.shape[1]))])
+            lb = jnp.concatenate([lb, jnp.broadcast_to(lb[-1:], (pad,))])
+        if D > 1:
+            out = _embed_pmap(cfg, params, tb.reshape(D, B, -1),
+                              lb.reshape(D, B), ec.pooling, proj)
+            out = out.reshape(step, n_features)
+        else:
+            out = _embed_jit(cfg, params, tb, lb, ec.pooling, proj)
+        feats.append(out[:n])
+    return jnp.concatenate(feats, axis=0)

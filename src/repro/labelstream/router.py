@@ -64,6 +64,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.crowd import SWITCH_DELAY_S, WAIT_PAY_PER_S, WORK_PAY_PER_RECORD
+from repro.embed.config import EmbedConfig
 from repro.core.simfast import (
     FastConfig, INF, PopTraced, _aot_timed, _init_workers, _uniform_block,
     churn_and_maintain, draw_latency, priority_match,
@@ -106,6 +107,14 @@ class StreamLearnerConfig:
                                   # by this factor — difficulty becomes
                                   # visible in feature space (the signal the
                                   # learnability-aware admission head reads)
+    # feature source: "gaussian" draws class-conditional Gaussians in the
+    # tick (the historical path, bit-identical); "lm" gathers precomputed
+    # LM embeddings of synthetic text tasks from the device-resident
+    # repro.embed bank — the SAME uniform draw the Gaussian path would
+    # spend on its first feature coordinate picks the bank variant, so the
+    # workload randomness (labels, difficulty, votes) is identical
+    feature_kind: str = "gaussian"
+    embed: Optional[EmbedConfig] = None   # required iff feature_kind="lm"
     prior_scale: float = 1.0      # fusion weight at full ramp
     ramp_n: float = 48.0          # training examples to reach full weight
     known_threshold: float = 0.97 # fused confidence to call a task known
@@ -347,6 +356,13 @@ def _init_shard(cfg: StreamConfig, key, pop=None):
                   count=jnp.zeros((), jnp.int32))
         if cfg.serve:
             bl["uid"] = jnp.full((Q + 1,), -1, jnp.int32)
+        if cfg.serve and cfg.learner.feature_kind == "lm":
+            # serve + lm binds task identity at ARRIVAL (an injected
+            # request's label/embedding must ride the FIFO ring to its
+            # admission tick), so the ring carries it alongside the times
+            bl["tlab"] = jnp.zeros((Q + 1,), jnp.int32)
+            bl["diff"] = jnp.ones((Q + 1,))
+            bl["feat"] = jnp.zeros((Q + 1, cfg.learner.n_features))
     return ws, banks, _init_window(cfg), bl
 
 
@@ -382,7 +398,8 @@ def _task_features(u1, u2, tl, diff, L: StreamLearnerConfig, C: int):
 
 def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
                 warmup_t, lW, lb, fuse_w, gW, gb, cap_eff=None,
-                p_hard_t=None, hard_scale_t=None, uid_base=None):
+                p_hard_t=None, hard_scale_t=None, uid_base=None,
+                bank=None, feat_in=None, labels_in=None):
     P, Ws, C = cfg.pool_size, cfg.window, cfg.n_classes
     Q, M, cap = cfg.backlog, cfg.max_arrivals_per_tick, cfg.policy.votes_cap
     # cap_eff is the (possibly traced) EFFECTIVE vote budget for the masked
@@ -429,8 +446,22 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
                             (2 + 2 * F) * M).reshape(2 + 2 * F, M)
         diff_a = jnp.where(ua[0] < ph, hs, 1.0)
         tl_a = jnp.floor(ua[1] * C).astype(jnp.int32).clip(0, C - 1)
-        feat_a = _task_features(ua[2:2 + F].T, ua[2 + F:2 + 2 * F].T,
-                                tl_a, diff_a, L, C)
+        if L.feature_kind == "lm":
+            # the uniform the Gaussian path would spend on the first
+            # feature coordinate picks the bank variant instead — the
+            # diff/label/vote streams stay bit-identical across kinds
+            from repro.embed.bank import bank_gather
+            if labels_in is not None:
+                tl_a = jnp.where(labels_in >= 0, labels_in, tl_a)
+            feat_a = bank_gather(bank, ua[2], tl_a, diff_a)
+            if feat_in is not None:
+                # injected real-text embeddings (serve mode) override the
+                # gathered synthetic ones; NaN rows mean "simulate"
+                feat_a = jnp.where(jnp.isfinite(feat_in[:, 0])[:, None],
+                                   feat_in, feat_a)
+        else:
+            feat_a = _task_features(ua[2:2 + F].T, ua[2 + F:2 + 2 * F].T,
+                                    tl_a, diff_a, L, C)
         bl_times = bl["times"].at[dstw].set(t)
         bl_diff = bl["diff"].at[dstw].set(diff_a)
         bl_tlab = bl["tlab"].at[dstw].set(tl_a)
@@ -463,37 +494,68 @@ def _shard_tick(cfg: StreamConfig, ws, banks, win, bl, n_arr, t, step, seed,
         bl_count = bl["count"]
     else:
         # FIFO ring of arrival times (PR-2 semantics, bit-for-bit)
+        lm_ring = cfg.serve and L.feature_kind == "lm"
         space = Q - bl["count"]
         n_push = jnp.minimum(n_arr, space)
         dropped = (n_arr - n_push).astype(jnp.int32)
         slot = jnp.arange(M, dtype=jnp.int32)
         pos = (bl["head"] + bl["count"] + slot) % Q
-        bl_times = bl["times"].at[jnp.where(slot < n_push, pos, Q)].set(t)
+        posw = jnp.where(slot < n_push, pos, Q)
+        bl_times = bl["times"].at[posw].set(t)
         if cfg.serve:
-            bl_uid = bl["uid"].at[jnp.where(slot < n_push, pos, Q)].set(
-                uid_base + slot)
+            bl_uid = bl["uid"].at[posw].set(uid_base + slot)
+        if lm_ring:
+            # serve + lm binds identity at ARRIVAL: draw (or accept the
+            # injected) label/embedding now and ride the ring with it
+            from repro.embed.bank import bank_gather
+            ua = _uniform_block(seed ^ jnp.uint32(0x0BAD5EED), step,
+                                3 * M).reshape(3, M)
+            diff_a = jnp.where(ua[0] < ph, hs, 1.0)
+            tl_a = jnp.floor(ua[1] * C).astype(jnp.int32).clip(0, C - 1)
+            if labels_in is not None:
+                tl_a = jnp.where(labels_in >= 0, labels_in, tl_a)
+            feat_a = bank_gather(bank, ua[2], tl_a, diff_a)
+            if feat_in is not None:
+                feat_a = jnp.where(jnp.isfinite(feat_in[:, 0])[:, None],
+                                   feat_in, feat_a)
+            bl_tlab = bl["tlab"].at[posw].set(tl_a)
+            bl_diff = bl["diff"].at[posw].set(diff_a)
+            bl_feat = bl["feat"].at[posw].set(feat_a)
         bl_count = bl["count"] + n_push
         n_adm = jnp.where(gate, jnp.minimum(bl_count, free.sum()), 0
                           ).astype(jnp.int32)
         admit = free & (frank < n_adm)
-        arr_t = bl_times[jnp.where(admit, (bl["head"] + frank) % Q, Q)]
+        src = jnp.where(admit, (bl["head"] + frank) % Q, Q)
+        arr_t = bl_times[src]
         if cfg.serve:
-            uid_w = bl_uid[jnp.where(admit, (bl["head"] + frank) % Q, Q)]
+            uid_w = bl_uid[src]
         bl = dict(times=bl_times, head=(bl["head"] + n_adm) % Q,
                   count=bl_count - n_adm)
         if cfg.serve:
             bl["uid"] = bl_uid
         bl_count = bl["count"]
-        # fresh-task draws at ADMISSION (difficulty mixture + true label)
-        uw = _uniform_block(seed ^ jnp.uint32(0x33CC33CC), step, 2 * Ws
-                            ).reshape(2, Ws)
-        diff = jnp.where(uw[0] < ph, hs, 1.0)
-        tl = jnp.floor(uw[1] * C).astype(jnp.int32).clip(0, C - 1)
-        if L.enabled:
-            F = L.n_features
-            uf = _uniform_block(seed ^ jnp.uint32(0x5EEDF00D), step,
-                                2 * Ws * F).reshape(2, Ws, F)
-            featw = _task_features(uf[0], uf[1], tl, diff, L, C)
+        if lm_ring:
+            bl["tlab"], bl["diff"], bl["feat"] = bl_tlab, bl_diff, bl_feat
+            diff = bl_diff[src]
+            tl = bl_tlab[src]
+            featw = bl_feat[src]
+        else:
+            # fresh-task draws at ADMISSION (difficulty mixture + label)
+            uw = _uniform_block(seed ^ jnp.uint32(0x33CC33CC), step, 2 * Ws
+                                ).reshape(2, Ws)
+            diff = jnp.where(uw[0] < ph, hs, 1.0)
+            tl = jnp.floor(uw[1] * C).astype(jnp.int32).clip(0, C - 1)
+            if L.enabled:
+                F = L.n_features
+                uf = _uniform_block(seed ^ jnp.uint32(0x5EEDF00D), step,
+                                    2 * Ws * F).reshape(2, Ws, F)
+                if L.feature_kind == "lm":
+                    # same-shaped block as the Gaussian draw; its first
+                    # column picks the bank variant, the rest is unread
+                    from repro.embed.bank import bank_gather
+                    featw = bank_gather(bank, uf[0, :, 0], tl, diff)
+                else:
+                    featw = _task_features(uf[0], uf[1], tl, diff, L, C)
     win = dict(win)
     win["active"] = win["active"] | admit
     win["arrival_t"] = jnp.where(admit, arr_t, win["arrival_t"])
@@ -886,16 +948,29 @@ def _steal_rebalance(cfg: StreamConfig, bl, lo, axis_name):
     times = bl["times"].at[rows, jnp.where(validc, posr, Q)].set(
         jnp.where(validc, incoming, 0.0))
     new_bl = dict(times=times, head=head, count=count + take_l)
-    if "uid" in bl:
-        # serve mode: the request uid ring rides the identical donation
-        # plan so a stolen backlog entry keeps its submitting request
-        don_u = _gat(jnp.take_along_axis(bl["uid"][:, :Q], pos, axis=1))
-        pool_u = jnp.full((S * K + 1,), -1, jnp.int32).at[
+
+    def _move_ring(ring, fill):
+        # an extra identity ring (request uid, and in serve+lm mode the
+        # label/difficulty/embedding bound at arrival) rides the identical
+        # donation plan so a stolen backlog entry keeps its task identity.
+        # Scalar rings are (Sl, Q+1); the embedding ring carries a
+        # trailing feature axis, hence the broadcastable mask/pool shapes
+        trail = ring.shape[2:]
+        px = pos[..., None] if trail else pos
+        vd = validd[..., None] if trail else validd
+        vc = validc[..., None] if trail else validc
+        don_r = _gat(jnp.take_along_axis(ring[:, :Q], px, axis=1))
+        pool_r = jnp.full((S * K + 1,) + trail, fill, ring.dtype).at[
             ranks.reshape(-1)].set(
-            jnp.where(validd, don_u, -1).reshape(-1))[:S * K]
-        inc_u = pool_u[jnp.where(validc, tcum_l[:, None] + k[None, :], 0)]
-        new_bl["uid"] = bl["uid"].at[rows, jnp.where(validc, posr, Q)].set(
-            jnp.where(validc, inc_u, -1))
+            jnp.where(vd, don_r, fill).reshape((-1,) + trail))[:S * K]
+        inc_r = pool_r[jnp.where(validc, tcum_l[:, None] + k[None, :], 0)]
+        return ring.at[rows, jnp.where(validc, posr, Q)].set(
+            jnp.where(vc, inc_r, fill))
+
+    for name, fill in (("uid", -1), ("tlab", 0), ("diff", 1.0),
+                       ("feat", 0.0)):
+        if name in bl:
+            new_bl[name] = _move_ring(bl[name], fill)
     return new_bl, take_l, give_l
 
 
@@ -986,7 +1061,7 @@ def _learner_push_fit(cfg: StreamConfig, state, train, step, gat):
 
 
 def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
-             cap_eff=None, axis_name=None, traced=None):
+             cap_eff=None, axis_name=None, traced=None, bank=None):
     """One replication of the streaming service.
 
     ``axis_name`` switches on device sharding: the function then runs
@@ -1110,7 +1185,7 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
             lambda w, bk, wi, b, na, sd: _shard_tick(
                 cfg, w, bk, wi, b, na, t, step, sd, warmup_t, lW, lb,
                 fuse_w, gW, gb, cap_eff=cap_eff,
-                p_hard_t=ph_t, hard_scale_t=hs_t),
+                p_hard_t=ph_t, hard_scale_t=hs_t, bank=bank),
         )(state["ws"], state["banks"], state["win"], state["bl"],
           n_arr, seeds)
 
@@ -1199,9 +1274,23 @@ def _run_one(cfg: StreamConfig, horizon: int, key, warmup_t, rate_scale,
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
-def _run_jit(cfg: StreamConfig, horizon: int, keys, warmup_t, rate_scale):
+def _run_jit(cfg: StreamConfig, horizon: int, keys, warmup_t, rate_scale,
+             bank):
     return jax.vmap(
-        lambda k: _run_one(cfg, horizon, k, warmup_t, rate_scale))(keys)
+        lambda k: _run_one(cfg, horizon, k, warmup_t, rate_scale,
+                           bank=bank))(keys)
+
+
+def _bank_for(cfg: StreamConfig):
+    """Device-resident embedding-bank features for ``feature_kind="lm"``
+    (host-side, cached per config). None on the Gaussian path — the
+    compiled program is then exactly the pre-embed program."""
+    if cfg.learner.feature_kind != "lm":
+        return None
+    from repro.embed.bank import embedding_bank
+    return embedding_bank(cfg.learner.embed, cfg.n_classes,
+                          cfg.learner.n_features, cfg.learner.class_sep,
+                          cfg.learner.hard_sep_scale).feats
 
 
 @functools.lru_cache(maxsize=None)
@@ -1223,19 +1312,23 @@ def _run_sharded_jit(cfg: StreamConfig, horizon: int):
     D = cfg.sharding.n_devices
     check_stream_sharding(cfg.n_shards, D)
     mesh = make_stream_mesh(D)
+    # the lm bank is a per-config constant: closed over (replicated on
+    # every device) rather than threaded through in_specs, so the gaussian
+    # program signature — and its compiled output — is untouched
+    bank = _bank_for(cfg)
 
     def body(keys_data, warmup_t, rate_scale):
         keys = jax.random.wrap_key_data(keys_data)
         return jax.vmap(
             lambda k: _run_one(cfg, horizon, k, warmup_t, rate_scale,
-                               axis_name="shard"))(keys)
+                               axis_name="shard", bank=bank))(keys)
 
     # output structure from an abstract single-device trace: everything is
     # replicated except the per_shard subtree (sharded on axis 1, after
     # the replication axis)
     shapes = jax.eval_shape(
         lambda k, w, r: jax.vmap(
-            lambda kk: _run_one(cfg, horizon, kk, w, r))(k),
+            lambda kk: _run_one(cfg, horizon, kk, w, r, bank=bank))(k),
         jax.random.split(jax.random.key(0), 1), 0.0, 1.0)
     out_specs = {
         k: (leading_axis_specs(v, "shard", axis=1) if k == "per_shard"
@@ -1264,6 +1357,33 @@ def _validate_stream_config(cfg: StreamConfig):
     if cfg.learner.enabled and cfg.learner.n_features < cfg.n_classes:
         raise ValueError("learner.n_features must be >= n_classes "
                          "(one-hot class means)")
+    L = cfg.learner
+    if L.feature_kind not in ("gaussian", "lm"):
+        raise ValueError("learner.feature_kind must be 'gaussian' or 'lm', "
+                         f"got {L.feature_kind!r}")
+    if L.feature_kind == "lm":
+        if not L.enabled:
+            raise ValueError(
+                "learner.feature_kind='lm' requires learner.enabled: LM "
+                "embeddings exist to feed the learner/fusion path")
+        if L.embed is None:
+            raise ValueError(
+                "learner.feature_kind='lm' requires learner.embed (an "
+                "EmbedConfig; the scenario layer lowers spec.embed into it)")
+        if L.embed.projection_dim is not None \
+                and L.embed.projection_dim != L.n_features:
+            raise ValueError(
+                f"learner.embed.projection_dim={L.embed.projection_dim} "
+                f"must equal learner.n_features={L.n_features} (the "
+                "projection target IS the learner feature width)")
+        if L.embed.bank_size % (2 * cfg.n_classes) != 0:
+            raise ValueError(
+                f"learner.embed.bank_size={L.embed.bank_size} must be a "
+                f"positive multiple of 2 * n_classes = {2 * cfg.n_classes}")
+    elif L.embed is not None:
+        raise ValueError("learner.embed is set but feature_kind="
+                         f"{L.feature_kind!r}; an embedding config without "
+                         "the lm feature path is a misconfiguration")
     if cfg.routing.admission not in ("fifo", "uncertain",
                                      "uncertain_learnable"):
         raise ValueError("routing.admission must be 'fifo', 'uncertain' or "
@@ -1314,7 +1434,7 @@ def run_stream(cfg, horizon: int, *, n_reps: int = 1,
             jnp.float32(rate_scale))
     else:
         out = _run_jit(cfg, int(horizon), keys, warmup_t,
-                       jnp.float32(rate_scale))
+                       jnp.float32(rate_scale), _bank_for(cfg))
     out = dict(out)
     out["warmup_t"] = warmup_t
     out["measured_s"] = horizon * cfg.dt - warmup_t
@@ -1322,17 +1442,20 @@ def run_stream(cfg, horizon: int, *, n_reps: int = 1,
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
-def _run_swept(cfg: StreamConfig, horizon: int, keys, warmup_t, rate_scales):
+def _run_swept(cfg: StreamConfig, horizon: int, keys, warmup_t, rate_scales,
+               bank):
     return jax.vmap(lambda rs: jax.vmap(
-        lambda k: _run_one(cfg, horizon, k, warmup_t, rs))(keys))(rate_scales)
+        lambda k: _run_one(cfg, horizon, k, warmup_t, rs,
+                           bank=bank))(keys))(rate_scales)
 
 
 @functools.partial(jax.pmap, static_broadcasted_argnums=(0, 1),
-                   in_axes=(None, None, None, None, 0))
+                   in_axes=(None, None, None, None, 0, None))
 def _run_swept_pmap(cfg: StreamConfig, horizon: int, keys, warmup_t,
-                    rate_scales):
+                    rate_scales, bank):
     return jax.vmap(lambda rs: jax.vmap(
-        lambda k: _run_one(cfg, horizon, k, warmup_t, rs))(keys))(rate_scales)
+        lambda k: _run_one(cfg, horizon, k, warmup_t, rs,
+                           bank=bank))(keys))(rate_scales)
 
 
 def run_stream_sweep(cfg, horizon: int, rate_scales, *, n_reps: int = 1,
@@ -1354,17 +1477,18 @@ def run_stream_sweep(cfg, horizon: int, rate_scales, *, n_reps: int = 1,
     scales = jnp.asarray(rate_scales, jnp.float32)
     V = int(scales.shape[0])
     D = jax.local_device_count()
+    bank = _bank_for(cfg)
     if shard and D > 1 and V > 1:
         pad = (-V) % D
         if pad:
             scales = jnp.concatenate(
                 [scales, jnp.broadcast_to(scales[-1:], (pad,))])
         out = _run_swept_pmap(cfg, int(horizon), keys, warmup_t,
-                              scales.reshape(D, -1))
+                              scales.reshape(D, -1), bank)
         out = jax.tree_util.tree_map(
             lambda v: v.reshape((V + pad,) + v.shape[2:])[:V], out)
     else:
-        out = _run_swept(cfg, int(horizon), keys, warmup_t, scales)
+        out = _run_swept(cfg, int(horizon), keys, warmup_t, scales, bank)
     out = dict(out)
     out["warmup_t"] = warmup_t
     out["measured_s"] = horizon * cfg.dt - warmup_t
@@ -1373,10 +1497,10 @@ def run_stream_sweep(cfg, horizon: int, rate_scales, *, n_reps: int = 1,
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
 def _run_capswept(cfg: StreamConfig, horizon: int, keys, warmup_t, caps,
-                  rate_scale):
+                  rate_scale, bank):
     return jax.vmap(lambda c: jax.vmap(
         lambda k: _run_one(cfg, horizon, k, warmup_t, rate_scale,
-                           cap_eff=c))(keys))(caps)
+                           cap_eff=c, bank=bank))(keys))(caps)
 
 
 def run_stream_votes_sweep(cfg, horizon: int, votes_caps, *, n_reps: int = 1,
@@ -1407,7 +1531,8 @@ def run_stream_votes_sweep(cfg, horizon: int, votes_caps, *, n_reps: int = 1,
     keys = jax.random.split(jax.random.key(seed), n_reps)
     warmup_t = float(warmup_frac * horizon * cfg.dt)
     out = _run_capswept(cfg, int(horizon), keys, warmup_t,
-                        jnp.asarray(caps, jnp.int32), jnp.float32(rate_scale))
+                        jnp.asarray(caps, jnp.int32), jnp.float32(rate_scale),
+                        _bank_for(cfg))
     out = dict(out)
     out["warmup_t"] = warmup_t
     out["measured_s"] = horizon * cfg.dt - warmup_t
@@ -1415,18 +1540,20 @@ def run_stream_votes_sweep(cfg, horizon: int, votes_caps, *, n_reps: int = 1,
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
-def _run_grid_jit(cfg: StreamConfig, horizon: int, keys, warmup_t, traced):
+def _run_grid_jit(cfg: StreamConfig, horizon: int, keys, warmup_t, traced,
+                  bank):
     return jax.vmap(lambda tr: jax.vmap(
         lambda k: _run_one(cfg, horizon, k, warmup_t, jnp.float32(1.0),
-                           traced=tr))(keys))(traced)
+                           traced=tr, bank=bank))(keys))(traced)
 
 
 @functools.partial(jax.pmap, static_broadcasted_argnums=(0, 1),
-                   in_axes=(None, None, None, None, 0))
-def _run_grid_pmap(cfg: StreamConfig, horizon: int, keys, warmup_t, traced):
+                   in_axes=(None, None, None, None, 0, None))
+def _run_grid_pmap(cfg: StreamConfig, horizon: int, keys, warmup_t, traced,
+                   bank):
     return jax.vmap(lambda tr: jax.vmap(
         lambda k: _run_one(cfg, horizon, k, warmup_t, jnp.float32(1.0),
-                           traced=tr))(keys))(traced)
+                           traced=tr, bank=bank))(keys))(traced)
 
 
 def run_stream_grid(cfg, horizon: int, traced: StreamTraced, *,
@@ -1482,6 +1609,7 @@ def run_stream_grid(cfg, horizon: int, traced: StreamTraced, *,
     keys = jax.random.split(jax.random.key(seed), n_reps)
     warmup_t = float(warmup_frac * horizon * cfg.dt)
     D = jax.local_device_count()
+    bank = _bank_for(cfg)
     if shard and D > 1 and V >= D:
         pad = (-V) % D
         padded = StreamTraced(*[
@@ -1489,13 +1617,13 @@ def run_stream_grid(cfg, horizon: int, traced: StreamTraced, *,
             .reshape(D, -1) for leaf in traced])
         out = _aot_timed(_run_grid_pmap, timing_name, 2,
                          cfg, int(horizon), keys, jnp.float32(warmup_t),
-                         padded)
+                         padded, bank)
         out = jax.tree_util.tree_map(
             lambda v: v.reshape((V + pad,) + v.shape[2:])[:V], out)
     else:
         out = _aot_timed(_run_grid_jit, timing_name, 2,
                          cfg, int(horizon), keys, jnp.float32(warmup_t),
-                         traced)
+                         traced, bank)
     out = dict(out)
     out["warmup_t"] = warmup_t
     out["measured_s"] = horizon * cfg.dt - warmup_t
@@ -1661,10 +1789,13 @@ def serve_init(cfg, seed: int = 0):
 
 
 def _serve_tick_impl(cfg: StreamConfig, state, n_arr, uid_base,
+                     feat_in=None, labels_in=None, bank=None,
                      axis_name=None):
     """One serve tick: mirrors ``_run_one``'s scan body with injected
     arrival counts in place of the sampled arrival process (no warmup —
-    every finalization is reported). Returns ``(new_state, out)``."""
+    every finalization is reported). In lm mode ``feat_in``/``labels_in``
+    carry per-injection real-text embeddings and known labels (NaN rows /
+    -1 mean "simulate from the bank"). Returns ``(new_state, out)``."""
     S, sh = cfg.n_shards, cfg.sharding
     D = sh.n_devices if axis_name is not None else 1
     Sl = S // D
@@ -1678,12 +1809,21 @@ def _serve_tick_impl(cfg: StreamConfig, state, n_arr, uid_base,
 
     t, step = state["t"], state["step"]
     lW, lb, fuse_w, gW, gb = _learner_tick_params(cfg, state)
-    ws, win, bl, m, train = jax.vmap(
-        lambda w, bk, wi, b, na, ub, sd: _shard_tick(
-            cfg, w, bk, wi, b, na, t, step, sd, jnp.float32(0.0), lW, lb,
-            fuse_w, gW, gb, uid_base=ub),
-    )(state["ws"], state["banks"], state["win"], state["bl"],
-      n_arr, uid_base, state["seeds"])
+    if cfg.learner.feature_kind == "lm":
+        ws, win, bl, m, train = jax.vmap(
+            lambda w, bk, wi, b, na, ub, fi, li, sd: _shard_tick(
+                cfg, w, bk, wi, b, na, t, step, sd, jnp.float32(0.0), lW,
+                lb, fuse_w, gW, gb, uid_base=ub, bank=bank, feat_in=fi,
+                labels_in=li),
+        )(state["ws"], state["banks"], state["win"], state["bl"],
+          n_arr, uid_base, feat_in, labels_in, state["seeds"])
+    else:
+        ws, win, bl, m, train = jax.vmap(
+            lambda w, bk, wi, b, na, ub, sd: _shard_tick(
+                cfg, w, bk, wi, b, na, t, step, sd, jnp.float32(0.0), lW,
+                lb, fuse_w, gW, gb, uid_base=ub),
+        )(state["ws"], state["banks"], state["win"], state["bl"],
+          n_arr, uid_base, state["seeds"])
 
     if sh.steal != "none":
         bl, got, gave = _steal_rebalance(cfg, bl, lo, axis_name)
@@ -1706,8 +1846,10 @@ def _serve_tick_impl(cfg: StreamConfig, state, n_arr, uid_base,
 
 
 @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
-def _serve_tick_jit(cfg: StreamConfig, state, n_arr, uid_base):
-    return _serve_tick_impl(cfg, state, n_arr, uid_base)
+def _serve_tick_jit(cfg: StreamConfig, state, n_arr, uid_base, feat_in,
+                    labels_in, bank):
+    return _serve_tick_impl(cfg, state, n_arr, uid_base, feat_in=feat_in,
+                            labels_in=labels_in, bank=bank)
 
 
 @functools.lru_cache(maxsize=None)
@@ -1725,10 +1867,15 @@ def _serve_tick_sharded_jit(cfg: StreamConfig):
     D = cfg.sharding.n_devices
     check_stream_sharding(cfg.n_shards, D)
     mesh = make_stream_mesh(D)
+    # the lm bank is a per-config constant closed over (replicated), same
+    # as _run_sharded_jit; None on the gaussian path
+    bank = _bank_for(cfg)
+    lm = cfg.learner.feature_kind == "lm"
 
-    def body(state, n_arr, uid_base):
+    def body(state, n_arr, uid_base, feat_in, labels_in):
         return _serve_tick_impl(cfg, state, n_arr, uid_base,
-                                axis_name="shard")
+                                feat_in=feat_in, labels_in=labels_in,
+                                bank=bank, axis_name="shard")
 
     state_shapes = jax.eval_shape(functools.partial(serve_init, cfg, 0))
     state_specs = {
@@ -1737,17 +1884,24 @@ def _serve_tick_sharded_jit(cfg: StreamConfig):
             else Pspec(), v)
         for k, v in state_shapes.items()}
     arr_sh = jax.ShapeDtypeStruct((cfg.n_shards,), jnp.int32)
+    M, F = cfg.max_arrivals_per_tick, cfg.learner.n_features
+    feat_sh = jax.ShapeDtypeStruct((cfg.n_shards, M, F), jnp.float32) \
+        if lm else None
+    lab_sh = jax.ShapeDtypeStruct((cfg.n_shards, M), jnp.int32) \
+        if lm else None
     out_shapes = jax.eval_shape(
-        lambda s, na, ub: _serve_tick_impl(cfg, s, na, ub),
+        lambda s, na, ub: _serve_tick_impl(cfg, s, na, ub, feat_in=feat_sh,
+                                           labels_in=lab_sh, bank=bank),
         state_shapes, arr_sh, arr_sh)
     rep_specs = jax.tree_util.tree_map(lambda _: Pspec(), out_shapes[1])
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(state_specs, Pspec("shard"), Pspec("shard")),
+                   in_specs=(state_specs, Pspec("shard"), Pspec("shard"),
+                             Pspec("shard"), Pspec("shard")),
                    out_specs=(state_specs, rep_specs), check_rep=False)
     return jax.jit(fn, donate_argnums=(0,))
 
 
-def serve_tick(cfg, state, n_arr, uid_base):
+def serve_tick(cfg, state, n_arr, uid_base, feat=None, labels=None):
     """Advance the live service by ONE tick with injected arrivals.
 
     ``n_arr[s]`` tasks enter shard ``s`` this tick carrying uids
@@ -1763,10 +1917,35 @@ def serve_tick(cfg, state, n_arr, uid_base):
     ``conf``/``tis`` give their request uid, fused label, vote count,
     posterior confidence and time-in-system (leading dim n_shards), plus
     per-shard ``backlog``/``in_flight``/``stolen``/``donated`` occupancy
-    and the post-tick clock ``t``."""
+    and the post-tick clock ``t``.
+
+    In lm mode (``learner.feature_kind="lm"``), ``feat`` is an optional
+    ``(n_shards, max_arrivals_per_tick, n_features)`` float array of
+    injected real-text embeddings and ``labels`` an optional
+    ``(n_shards, max_arrivals_per_tick)`` int array of known labels for
+    this tick's injections, aligned with the uid order; NaN feature rows
+    and -1 labels mean "simulate from the embedding bank". Both must be
+    None for Gaussian features."""
     cfg = _as_serve_config(cfg)
     n_arr = jnp.asarray(n_arr, jnp.int32)
     uid_base = jnp.asarray(uid_base, jnp.int32)
+    if cfg.learner.feature_kind == "lm":
+        S, M = cfg.n_shards, cfg.max_arrivals_per_tick
+        F = cfg.learner.n_features
+        feat = jnp.full((S, M, F), jnp.nan, jnp.float32) if feat is None \
+            else jnp.asarray(feat, jnp.float32)
+        labels = jnp.full((S, M), -1, jnp.int32) if labels is None \
+            else jnp.asarray(labels, jnp.int32)
+        if feat.shape != (S, M, F) or labels.shape != (S, M):
+            raise ValueError(
+                f"serve_tick lm injections must be feat ({S}, {M}, {F}) "
+                f"and labels ({S}, {M}); got {feat.shape} / {labels.shape}")
+    elif feat is not None or labels is not None:
+        raise ValueError(
+            "serve_tick feat/labels injections require learner."
+            "feature_kind='lm' (Gaussian tasks draw identity in the tick)")
     if cfg.sharding.n_devices > 1:
-        return _serve_tick_sharded_jit(cfg)(state, n_arr, uid_base)
-    return _serve_tick_jit(cfg, state, n_arr, uid_base)
+        return _serve_tick_sharded_jit(cfg)(state, n_arr, uid_base,
+                                            feat, labels)
+    return _serve_tick_jit(cfg, state, n_arr, uid_base, feat, labels,
+                           _bank_for(cfg))

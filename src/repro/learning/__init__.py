@@ -28,6 +28,7 @@ _EXPORTS = {
     "entropy_from_logits": "linear",
     "test_accuracy": "linear",
     "MIN_KERNEL_CLASSES": "linear",
+    "standardize": "features",
     "topk_uncertain": "select",
     "al_select": "select",
     "passive_select": "select",

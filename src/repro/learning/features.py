@@ -1,0 +1,18 @@
+"""Shared feature-space transforms for the learning stack."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def standardize(X, eps: float = 1e-6):
+    """Per-feature zero-mean / unit-std standardization (f32).
+
+    The one normalization both the embedding bank and host-built LM
+    datasets apply before features reach ``repro.learning.linear``, so
+    the learner sees the same feature scale the Gaussian path produces
+    (unit noise). ``eps`` floors the std so constant features map to 0
+    instead of NaN."""
+    X = jnp.asarray(X, jnp.float32)
+    mu = X.mean(axis=0, keepdims=True)
+    sd = X.std(axis=0, keepdims=True)
+    return (X - mu) / jnp.maximum(sd, eps)

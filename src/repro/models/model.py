@@ -292,7 +292,7 @@ def forward(
     positions=None,               # decode: (B,) current position
     cache=None,
     cross_src=None,               # (B, T, d) frame/patch embeddings (stub input)
-    logits_mode: str = "all",     # all | last
+    logits_mode: str = "all",     # all | last | hidden
     remat: bool = False,
     attn_impl: str = "auto",
     mlstm_impl: str = "chunked",
@@ -370,6 +370,14 @@ def forward(
         new_tail.append(nc)
 
     x = L.apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    if logits_mode == "hidden":
+        # final-norm hidden states instead of vocab logits — the embedding
+        # surface (repro.embed.encoder pools these into task features)
+        hidden = x.astype(jnp.float32)
+        new_cache = None
+        if mode in ("prefill", "decode"):
+            new_cache = {"groups": new_group_caches, "tail": tuple(new_tail)}
+        return hidden, new_cache, aux
     if logits_mode == "last":
         x = x[:, -1:]
     unembed = params.get("unembed")

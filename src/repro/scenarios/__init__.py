@@ -46,6 +46,7 @@ _EXPORTS = {
     "ShardingSpec": "spec",
     "TraceSpec": "spec",
     "ServeSpec": "spec",
+    "EmbedSpec": "spec",
     "GridSpec": "spec",
     "override": "spec",
     # registry
@@ -66,6 +67,7 @@ _EXPORTS = {
     "to_stream_config": "compile",
     "to_serve_config": "compile",
     "to_cs_config": "compile",
+    "to_embed_config": "compile",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -97,6 +97,12 @@ def _check_batch_engine(spec: ScenarioSpec, engine: str):
         _reject(engine, "policy.learner.enabled",
                 "= True; online learner fusion is a stream-engine policy "
                 "(batch engines run hybrid learning via run_learning)")
+    if spec.features.kind != "gaussian":
+        _reject(engine, "features.kind",
+                f"= {spec.features.kind!r}; the batch engines consume "
+                "feature MATRICES, not in-tick feature draws — build an "
+                "LM dataset with repro.embed.bank.make_dataset (or let "
+                "scenarios.run_learning build it) instead")
     if spec.difficulty.p_hard > 0:
         _reject(engine, "difficulty.p_hard",
                 "> 0; the difficulty mixture is modeled by the stream "
@@ -254,6 +260,8 @@ def to_stream_config(spec: ScenarioSpec):
             n_features=feat.n_features,
             class_sep=feat.class_sep,
             hard_sep_scale=feat.hard_sep_scale,
+            feature_kind=feat.kind,
+            embed=to_embed_config(spec) if feat.kind == "lm" else None,
             prior_scale=lr.prior_scale,
             ramp_n=lr.ramp_n,
             known_threshold=lr.known_threshold,
@@ -284,6 +292,26 @@ def to_stream_config(spec: ScenarioSpec):
             steal_slack=spec.sharding.steal_slack,
         ),
         trace=_trace_config(spec),
+    )
+
+
+def to_embed_config(spec: ScenarioSpec):
+    """ScenarioSpec -> ``repro.embed.EmbedConfig`` (the LM-embedding
+    extraction config behind ``FeatureSpec(kind="lm")``). Exact field
+    copy of ``spec.embed`` — the spec twin exists so scenarios stay
+    declarative and jax-free until an engine actually embeds."""
+    from repro.embed.config import EmbedConfig
+
+    em = spec.embed
+    return EmbedConfig(
+        model=em.model,
+        reduced=em.reduced,
+        pooling=em.pooling,
+        seq_len=em.seq_len,
+        bank_size=em.bank_size,
+        projection_dim=em.projection_dim,
+        batch_size=em.batch_size,
+        seed=em.seed,
     )
 
 

@@ -329,12 +329,22 @@ def sweep(scenario, axis: str, values, engine: str = None, *, seed: int = 0,
                 results=results)
 
 
-def run_learning(scenario, X, y, X_test, y_test, engine: str = "simfast", *,
+def run_learning(scenario, X=None, y=None, X_test=None, y_test=None,
+                 engine: str = "simfast", *,
                  vectorized: bool = True, rounds: int = 10, n_reps: int = 64,
                  seed: int = 0, label_budget: int = 500,
                  fit_steps: int = 60, k_active=None, use_kernel: bool = True,
-                 accest=None, max_time: float = 6 * 3600.0):
+                 accest=None, max_time: float = 6 * 3600.0,
+                 n_train: int = 1500, n_test: int = 500):
     """Hybrid/active learning runs through the same spec vocabulary.
+
+    With ``X=None`` the dataset is built FROM THE SPEC: ``features.kind=
+    "lm"`` encodes a fresh synthetic text corpus through the scenario's
+    ``EmbedSpec`` model (``repro.embed.bank.make_dataset`` — real LM
+    representations, difficulty visible as collapsed class structure),
+    while the Gaussian default draws a ``make_classification`` matrix with
+    the spec's feature width/separation. ``n_train``/``n_test`` size the
+    auto-built split and are ignored when matrices are passed explicitly.
 
     ``engine="simfast"`` drives ``simulate_learning_batch`` (one jitted
     scan-over-rounds, vmap-over-replications program) when ``vectorized``,
@@ -352,6 +362,32 @@ def run_learning(scenario, X, y, X_test, y_test, engine: str = "simfast", *,
     if not isinstance(scenario, ScenarioSpec):
         raise TypeError("run_learning() takes a ScenarioSpec, got "
                         f"{type(scenario).__name__}")
+    if X is None:
+        if y is not None or X_test is not None or y_test is not None:
+            raise ValueError("run_learning: pass all of X/y/X_test/y_test "
+                             "or none (spec-built dataset)")
+        if scenario.features.kind == "lm":
+            from repro.embed.bank import make_dataset
+            X, y, X_test, y_test = make_dataset(scenario, n_train, n_test,
+                                                seed=seed)
+        else:
+            from repro.data.datasets import (
+                make_classification, train_test_split,
+            )
+            f = scenario.features
+            Xa, ya = make_classification(
+                n_samples=n_train + n_test, n_features=f.n_features,
+                n_informative=min(f.n_features,
+                                  max(2, scenario.n_classes)),
+                n_classes=scenario.n_classes, class_sep=f.class_sep,
+                seed=seed)
+            X, y, X_test, y_test = train_test_split(
+                Xa, ya, test_frac=n_test / (n_train + n_test), seed=seed)
+    if scenario.features.kind != "gaussian":
+        # the batch engines consume the MATRIX built above, not in-tick
+        # feature draws; lower the config with the kind stripped so
+        # _check_batch_engine's stream-only rejection doesn't fire
+        scenario = override(scenario, {"features.kind": "gaussian"})
     if engine == "events":
         from repro.core.clamshell import ClamShell
         cfg = to_cs_config(scenario, seed=seed)

@@ -18,10 +18,10 @@ from __future__ import annotations
 import dataclasses
 
 from repro.scenarios.spec import (
-    AdmissionSpec, ArrivalSpec, DifficultySpec, EngineKnobs, FeatureSpec,
-    GridSpec, LearnerSpec, MaintenanceSpec, PolicySpec, PoolSpec,
-    RedundancySpec, RoutingSpec, ScenarioSpec, ServeSpec, ShardingSpec,
-    StragglerSpec, override,
+    AdmissionSpec, ArrivalSpec, DifficultySpec, EmbedSpec, EngineKnobs,
+    FeatureSpec, GridSpec, LearnerSpec, MaintenanceSpec, PolicySpec,
+    PoolSpec, RedundancySpec, RoutingSpec, ScenarioSpec, ServeSpec,
+    ShardingSpec, StragglerSpec, override,
 )
 
 _REGISTRY: dict = {}
@@ -286,6 +286,47 @@ def _seed():
         ),
         sharding=ShardingSpec(n_devices=1, steal="pressure",
                               steal_max=4, steal_slack=1),
+    ))
+
+    # LM-embedding task features (repro.embed): the streaming workloads
+    # where the learner consumes real model representations of synthetic
+    # text tasks instead of Gaussian draws. A tiny reduced encoder +
+    # 64-entry bank keeps these runnable in the registry smoke (the bank
+    # builds once per config and is reused across every run/sweep/grid).
+    _lm_embed = EmbedSpec(seq_len=16, bank_size=64, batch_size=32)
+    register_scenario("lm_stream", ScenarioSpec(
+        window=8,
+        pool=PoolSpec(pool_size=8, n_shards=2),
+        arrivals=ArrivalSpec(kind="poisson", rate=0.01),
+        engine=EngineKnobs(dt=5.0, tis_bin_s=16.0),
+        features=FeatureSpec(kind="lm", n_features=8, class_sep=3.0),
+        embed=_lm_embed,
+        policy=PolicySpec(
+            redundancy=RedundancySpec(adaptive=True, votes=3,
+                                      conf_threshold=0.95, min_votes=1,
+                                      max_outstanding=1),
+            learner=LearnerSpec(enabled=True, min_votes_known=1),
+        ),
+    ))
+    # chance_hard with LM features: same crowd/difficulty workload as
+    # chance_hard (chance-level hard tasks, mmpp bursts), but difficulty
+    # lives in EMBEDDING space — hard tasks' class-signal token rate is
+    # shrunk, so their embeddings collapse toward the background-text
+    # manifold and the learnability head must find that structure in real
+    # representations (the bench_embed recovery comparison row)
+    register_scenario("lm_chance_hard", ScenarioSpec(
+        window=8,
+        pool=_het["pool"],
+        arrivals=ArrivalSpec(kind="mmpp", rate=0.01, rate_hi=0.12,
+                             dwell_mean_s=900.0),
+        engine=EngineKnobs(dt=5.0, tis_bin_s=8.0),
+        difficulty=DifficultySpec(p_hard=0.35, hard_scale=0.0),
+        features=FeatureSpec(kind="lm", n_features=8, class_sep=3.0,
+                             hard_sep_scale=0.1),
+        embed=_lm_embed,
+        policy=PolicySpec(redundancy=_drip, routing=RoutingSpec(kind="scored"),
+                          learner=LearnerSpec(enabled=True,
+                                              min_votes_known=1)),
     ))
 
 

@@ -36,6 +36,8 @@ from typing import Optional
 import jax
 
 _ARRIVAL_KINDS = ("batch", "poisson", "mmpp", "diurnal")
+_FEATURE_KINDS = ("gaussian", "lm")
+_POOLING_KINDS = ("mean", "last")
 _ADMISSION_KINDS = ("fifo", "uncertain", "uncertain_learnable")
 _ROUTING_KINDS = ("uniform", "scored")
 _LEARNER_KINDS = ("AL", "PL", "HL", "NL")
@@ -109,23 +111,69 @@ class DifficultySpec:
 @_static
 @dataclasses.dataclass(frozen=True)
 class FeatureSpec:
-    """The observable side of a task — class-conditional Gaussian features
-    the hybrid learner generalizes over. ``hard_sep_scale < 1`` makes hard
-    tasks hard for the MODEL too (their class separation shrinks by that
-    factor), which is what lets difficulty-aware admission learn to avoid
-    chance-level tasks from features alone."""
+    """The observable side of a task — the feature vector the hybrid
+    learner generalizes over. ``kind="gaussian"`` draws class-conditional
+    Gaussians in the tick (the historical path); ``kind="lm"`` gathers
+    precomputed LM embeddings of synthetic text tasks from the
+    device-resident ``repro.embed`` bank (configured by the scenario's
+    :class:`EmbedSpec`). Either way ``hard_sep_scale < 1`` makes hard
+    tasks hard for the MODEL too (Gaussian: class separation shrinks by
+    that factor; lm: the text's class-signal token rate shrinks), which
+    is what lets difficulty-aware admission learn to avoid chance-level
+    tasks from features alone."""
     n_features: int = 8
     class_sep: float = 1.8
     hard_sep_scale: float = 1.0
+    kind: str = "gaussian"
 
     def __post_init__(self):
         c = FeatureSpec
+        _check(c, self.kind in _FEATURE_KINDS, "kind",
+               f"must be one of {_FEATURE_KINDS}, got {self.kind!r}")
         _check(c, self.n_features >= 1, "n_features",
                f"must be >= 1, got {self.n_features}")
         _check(c, self.class_sep > 0, "class_sep",
                f"must be > 0, got {self.class_sep}")
         _check(c, 0.0 < self.hard_sep_scale <= 1.0, "hard_sep_scale",
                f"must be in (0, 1], got {self.hard_sep_scale}")
+
+
+@_static
+@dataclasses.dataclass(frozen=True)
+class EmbedSpec:
+    """LM-embedding configuration for ``FeatureSpec(kind="lm")`` — the
+    declarative twin of :class:`repro.embed.EmbedConfig`.
+
+    ``model`` names a ``repro.configs`` architecture (``reduced=True``
+    runs it at smoke scale); ``pooling`` collapses hidden states to one
+    vector per task; ``bank_size`` embeddings are precomputed into the
+    device-resident bank the jitted ticks gather from (layout
+    ``2 x n_classes x variants``, so it must be a multiple of
+    ``2 * n_classes`` — validated on the ScenarioSpec where n_classes is
+    known); ``projection_dim`` optionally pins the random-projection
+    target, which must equal ``FeatureSpec.n_features``."""
+    model: str = "xlstm-125m"
+    reduced: bool = True
+    pooling: str = "mean"
+    seq_len: int = 48
+    bank_size: int = 512
+    projection_dim: Optional[int] = None
+    batch_size: int = 64
+    seed: int = 0
+
+    def __post_init__(self):
+        c = EmbedSpec
+        _check(c, self.pooling in _POOLING_KINDS, "pooling",
+               f"must be one of {_POOLING_KINDS}, got {self.pooling!r}")
+        _check(c, self.seq_len >= 4, "seq_len",
+               f"must be >= 4, got {self.seq_len}")
+        _check(c, self.bank_size >= 2, "bank_size",
+               f"must be >= 2, got {self.bank_size}")
+        _check(c, self.projection_dim is None or self.projection_dim >= 1,
+               "projection_dim",
+               f"must be None or >= 1, got {self.projection_dim}")
+        _check(c, self.batch_size >= 1, "batch_size",
+               f"must be >= 1, got {self.batch_size}")
 
 
 @_static
@@ -526,6 +574,7 @@ class ScenarioSpec:
     sharding: ShardingSpec = ShardingSpec()
     trace: TraceSpec = TraceSpec()
     serve: ServeSpec = ServeSpec()
+    embed: EmbedSpec = EmbedSpec()
 
     def __post_init__(self):
         c = ScenarioSpec
@@ -571,6 +620,34 @@ class ScenarioSpec:
                   f"steal={sh.steal!r} rebalances the FIFO backlog ring and "
                   "requires policy.admission.kind='fifo', got "
                   f"{self.policy.admission.kind!r}")
+        if self.features.kind == "lm":
+            em = self.embed
+            if self.arrivals.kind != "batch" \
+                    and not self.policy.learner.enabled:
+                _fail(c, "features.kind",
+                      "= 'lm' on a stream workload requires policy.learner."
+                      "enabled=True — LM embeddings exist to feed the "
+                      "learnability head; without it the features are dead "
+                      "weight in the tick (batch workloads feed "
+                      "run_learning's own learner instead)")
+            if em.projection_dim is not None \
+                    and em.projection_dim != self.features.n_features:
+                _fail(c, "embed.projection_dim",
+                      f"= {em.projection_dim} must equal "
+                      f"features.n_features={self.features.n_features} "
+                      "(the projection target IS the learner feature "
+                      "width; set projection_dim=None to infer it)")
+            if em.bank_size % (2 * self.n_classes) != 0:
+                _fail(c, "embed.bank_size",
+                      f"= {em.bank_size} must be a positive multiple of "
+                      f"2 * n_classes = {2 * self.n_classes} (the bank is "
+                      "laid out easy/hard x class x variant)")
+            if em.bank_size < self.pool.n_shards * self.window:
+                _fail(c, "embed.bank_size",
+                      f"= {em.bank_size} is smaller than n_shards x window "
+                      f"= {self.pool.n_shards * self.window}; a bank that "
+                      "cannot cover one full window of in-flight tasks "
+                      "aliases variants pathologically — raise bank_size")
 
 
 # ---------------------------------------------------------------------------

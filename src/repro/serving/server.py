@@ -24,7 +24,12 @@ Endpoints (JSON in/out):
                            "timeout_s": float}`` optional. ``wait`` long-
                            polls until the label finalizes or the timeout
                            fires (the TASK stays in the system; only the
-                           HTTP wait times out).
+                           HTTP wait times out). LM scenarios
+                           (``features.kind="lm"``) also accept ``"text"``
+                           (the task content — batch-embedded through the
+                           LM encoder and injected into the tick in place
+                           of a bank draw) and ``"label"`` (known true
+                           class for accuracy accounting).
   ``GET /labels/<id>``     current state of a submission.
   ``GET /stats``           counters, conservation check, wall-clock
                            latency percentiles, ``repro.obs.timing`` rows.
@@ -56,6 +61,8 @@ class _Req:
     status: str = "pending"
     shard: int = -1
     uid: int = -1
+    text: Optional[str] = None    # LM scenarios: embed-then-inject
+    given_label: int = -1         # LM scenarios: known true label, or -1
     label: Optional[int] = None
     conf: float = 0.0
     votes: int = 0
@@ -107,6 +114,11 @@ class LabelServer:
         self.seed = seed
 
         S = self.cfg.n_shards
+        # LM scenarios accept real text: submissions carrying "text" are
+        # batch-embedded on the tick thread and injected alongside the
+        # simulated arrivals (NaN rows in the feat plan = "draw from the
+        # bank as usual").
+        self._lm = self.cfg.learner.feature_kind == "lm"
         self.state = None
         self._pending: collections.deque = collections.deque()
         self._reqs: dict = {}
@@ -193,6 +205,7 @@ class LabelServer:
         S, M, Q = cfg.n_shards, cfg.max_arrivals_per_tick, cfg.backlog
         n_arr = np.zeros((S,), np.int32)
         room = np.minimum(M, Q - self._backlog)
+        inject = []                   # (shard, slot, req) needing embed
         while self._pending:
             s = int(np.argmax(room - n_arr))
             if room[s] - n_arr[s] <= 0:
@@ -202,27 +215,64 @@ class LabelServer:
             req.uid = int(self._next_uid[s]) + int(n_arr[s])
             req.status = "queued"
             self._by_uid[(s, req.uid)] = req
+            if self._lm and (req.text is not None or req.given_label >= 0):
+                inject.append((s, int(n_arr[s]), req))
             n_arr[s] += 1
         uid_base = self._next_uid.astype(np.int32)
         self._next_uid += n_arr
-        return n_arr, uid_base
+        return n_arr, uid_base, inject
 
-    def _device_tick(self, n_arr, uid_base):
+    def _device_tick(self, n_arr, uid_base, inject=()):
         """Blocking jitted tick + transfer of the small srv_* bundle
         (runs on the executor thread; wall-clock lands in the
         ``repro.obs.timing`` registry, so the first call's compile shows
-        up as the cold-vs-warm split)."""
+        up as the cold-vs-warm split). LM scenarios batch-embed any
+        text-carrying submissions here (one encoder call per tick) and
+        inject the vectors + known labels into this tick's arrivals."""
         import jax
         from repro.labelstream.router import serve_tick
         from repro.obs import timing
 
+        feat = labels = None
+        if self._lm and inject:
+            feat, labels = self._embed_plan(n_arr, inject)
+
         def step():
             self.state, out = serve_tick(self.cfg, self.state, n_arr,
-                                         uid_base)
+                                         uid_base, feat=feat,
+                                         labels=labels)
             return jax.device_get(out)
 
         out, _ = timing.timeit("serve.tick", step)
         return out
+
+    def _embed_plan(self, n_arr, inject):
+        """Turn the tick's text-carrying submissions into the router's
+        injection arrays: ``feat`` (S, M, F) f32 with NaN rows meaning
+        "simulate from the bank", ``labels`` (S, M) int32 with -1 meaning
+        "draw". Texts are embedded in ONE batched encoder call
+        (:func:`repro.embed.bank.embed_texts`) in the bank's
+        standardized feature space."""
+        from repro.embed.bank import embed_texts
+        from repro.obs import timing
+
+        cfg = self.cfg
+        S, M = cfg.n_shards, cfg.max_arrivals_per_tick
+        F = cfg.learner.n_features
+        feat = np.full((S, M, F), np.nan, np.float32)
+        labels = np.full((S, M), -1, np.int32)
+        texted = [(s, w, r) for s, w, r in inject if r.text is not None]
+        if texted:
+            vecs, _ = timing.timeit("serve.embed", lambda: np.asarray(
+                embed_texts(cfg.learner.embed, [r.text for _, _, r in texted],
+                            cfg.n_classes, F, cfg.learner.class_sep,
+                            cfg.learner.hard_sep_scale)))
+            for (s, w, _), v in zip(texted, vecs):
+                feat[s, w] = v
+        for s, w, r in inject:
+            if r.given_label >= 0:
+                labels[s, w] = r.given_label
+        return feat, labels
 
     def _absorb(self, out, n_arr, uid_base):
         now = time.monotonic()
@@ -271,9 +321,9 @@ class LabelServer:
                 self._work.clear()
                 await self._work.wait()
             t0 = time.monotonic()
-            n_arr, uid_base = self._inject_plan()
+            n_arr, uid_base, inject = self._inject_plan()
             out = await loop.run_in_executor(
-                None, self._device_tick, n_arr, uid_base)
+                None, self._device_tick, n_arr, uid_base, inject)
             self._absorb(out, n_arr, uid_base)
             if self._closing and not self._pending and not self._by_uid:
                 self._drained.set()
@@ -356,13 +406,27 @@ class LabelServer:
                 raise ValueError("body must be a JSON object")
         except (ValueError, json.JSONDecodeError) as e:
             return 400, dict(error=str(e))
+        text = payload.get("text")
+        label = payload.get("label", -1)
+        if text is not None and not isinstance(text, str):
+            return 400, dict(error='"text" must be a string')
+        if not isinstance(label, int) or isinstance(label, bool) \
+                or not -1 <= label < self.cfg.n_classes:
+            return 400, dict(
+                error=f'"label" must be an int in [0, {self.cfg.n_classes})'
+                      ' or -1')
+        if not self._lm and (text is not None or label >= 0):
+            return 400, dict(
+                error='"text"/"label" need an LM scenario '
+                      '(features.kind="lm"); this server runs '
+                      f'"{self.cfg.learner.feature_kind}" features')
         if self._closing:
             return 503, dict(error="shutting down")
         if len(self._pending) >= self.max_pending:
             self.rejected += 1
             return 429, dict(error="admission queue full")
         req = _Req(rid=self._next_rid, event=asyncio.Event(),
-                   t_submit=time.monotonic())
+                   t_submit=time.monotonic(), text=text, given_label=label)
         self._next_rid += 1
         self._reqs[req.rid] = req
         self._pending.append(req)
@@ -407,7 +471,7 @@ class LabelServer:
             p50_latency_s=float(np.percentile(lat, 50)) if lat.size else None,
             p95_latency_s=float(np.percentile(lat, 95)) if lat.size else None,
             timing=[row for row in timing.summary()
-                    if row["name"] == "serve.tick"],
+                    if row["name"] in ("serve.tick", "serve.embed")],
         )
         return s
 
@@ -464,10 +528,15 @@ class ServeClient:
             await self.aclose()
         return status, (json.loads(data) if data else None)
 
-    async def submit(self, *, wait: bool = False, timeout_s: float = None):
+    async def submit(self, *, wait: bool = False, timeout_s: float = None,
+                     text: str = None, label: int = None):
         obj = {"wait": wait}
         if timeout_s is not None:
             obj["timeout_s"] = timeout_s
+        if text is not None:
+            obj["text"] = text
+        if label is not None:
+            obj["label"] = label
         return await self.request("POST", "/tasks", obj)
 
     async def label(self, rid: int):

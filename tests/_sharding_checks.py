@@ -164,6 +164,41 @@ def collect() -> dict:
     pa = simulate_swept_pop(fcfg, 3, pop, seed=5, shard=True)
     pb = simulate_swept_pop(fcfg, 3, pop, seed=5, shard=False)
     report["simfast_pop_pad_parity"] = _tree_equal(pa, pb)
+
+    # ---- EmbeddingBank gather across the forced mesh -------------------
+    # (a) the raw gather: pmapped device-parallel lookups must equal the
+    # single-device vmap over the same indices (the bank is replicated —
+    # a sharded gather that drifted would silently corrupt LM features)
+    from repro.embed.bank import bank_gather, embedding_bank
+    from repro.scenarios.compile import to_embed_config
+    lm_spec = scenarios.get_scenario("lm_stream")
+    ec = to_embed_config(lm_spec)
+    bank = embedding_bank(ec, lm_spec.n_classes,
+                          lm_spec.features.n_features,
+                          lm_spec.features.class_sep,
+                          lm_spec.features.hard_sep_scale)
+    rngb = np.random.default_rng(9)
+    u = rngb.random((D, 16)).astype(np.float32)
+    tl = rngb.integers(0, lm_spec.n_classes, (D, 16)).astype(np.int32)
+    df = (rngb.random((D, 16)) * 2).astype(np.float32)
+    gp = jax.pmap(lambda uu, tt, dd: bank_gather(bank.feats, uu, tt, dd))(
+        u, tl, df)
+    gv = jax.vmap(lambda uu, tt, dd: bank_gather(bank.feats, uu, tt, dd))(
+        u, tl, df)
+    report["bank_gather_pmap_parity"] = _tree_equal(
+        np.asarray(gp), np.asarray(gv))
+
+    # (b) the full LM stream tick under shard_map (lm_stream has 2 pool
+    # shards -> 2 devices) vs the single-device run: gathering from the
+    # device-resident bank inside the sharded tick must stay bitwise
+    # identical — same invariant the Gaussian path pins above
+    lm1 = scenarios.get_scenario("lm_stream")
+    lmD = scenarios.get_scenario(
+        "lm_stream", {"sharding.n_devices": min(2, D)})
+    l1 = run_stream(to_stream_config(lm1), HORIZON, n_reps=N_REPS, seed=3)
+    lD = run_stream(to_stream_config(lmD), HORIZON, n_reps=N_REPS, seed=3)
+    a, b = _common(l1, lD)
+    report["lm_parity_sharded"] = _tree_equal(a, b)
     return report
 
 

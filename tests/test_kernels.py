@@ -98,6 +98,55 @@ def test_streaming_xent(N, V, dtype):
                                atol=max(tol(dtype) * 10, 1e-4), rtol=1e-2)
 
 
+# ---------------------------------------------------------------------------
+# entropy at learner widths: the active-learning scorer runs entropy over
+# class posteriors for a whole candidate pool — many rows, few columns —
+# the transpose of the LM-vocab regime the sweep above covers.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("N,C", [
+    (256, 2),       # minimal classes, lane-width rows
+    (384, 10),      # non-pow-2 rows
+    (512, 64),      # widest class count the scenarios use
+    (777, 17),      # both dims non-pow-2
+    (1024, 48),     # largest candidate pool, non-pow-2 classes
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_entropy_learner_widths(N, C, dtype):
+    x = (jax.random.normal(jax.random.fold_in(KEY, N * C), (N, C)) * 3
+         ).astype(dtype)
+    out = entropy_scores(x, interpret=True)
+    expect = ref.entropy_ref(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=max(tol(dtype), 1e-4) * 10, rtol=1e-2)
+    assert (np.asarray(out) >= -1e-3).all()
+    assert (np.asarray(out) <= np.log(C) + 1e-3).all()
+
+
+@pytest.mark.parametrize("B,N,C", [(4, 300, 8), (3, 256, 33)])
+def test_entropy_vmapped(B, N, C):
+    """The grid engine maps the scorer over scenario cells; the kernel
+    must survive a batch axis added by vmap, matching per-row calls."""
+    x = jax.random.normal(KEY, (B, N, C)) * 3
+    out = jax.vmap(lambda r: entropy_scores(r, interpret=True))(x)
+    assert out.shape == (B, N)
+    for b in range(B):
+        np.testing.assert_allclose(np.asarray(out[b]),
+                                   np.asarray(ref.entropy_ref(x[b])),
+                                   atol=1e-3, rtol=1e-2)
+
+
+@pytest.mark.tpu
+@pytest.mark.parametrize("N,C", [(512, 64), (1024, 48), (777, 17)])
+def test_entropy_learner_widths_mosaic(N, C):
+    """Real Mosaic lowering of the learner-width entropy path
+    (auto-skipped off-TPU)."""
+    x = jax.random.normal(jax.random.fold_in(KEY, N + C), (N, C)) * 3
+    out = entropy_scores(x)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.entropy_ref(x)),
+                               atol=1e-3, rtol=1e-2)
+
+
 def test_uncertainty_topk_selects_most_uncertain():
     from repro.kernels.ops import uncertainty_topk
     # rows with increasing temperature -> increasing entropy

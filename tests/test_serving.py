@@ -193,6 +193,58 @@ def test_rejects_bad_requests():
     assert stats["submitted"] == 0 and stats["conservation"] is True
 
 
+def test_lm_text_submission_embeds_and_answers():
+    """On an LM scenario, a submission carrying real text (plus a known
+    label) embeds through the encoder and injects into the tick — it
+    answers like any other task, the embed path shows up in the timing
+    stats, and plain no-text submissions still work side by side. On a
+    Gaussian scenario the same body is a 400."""
+    from repro import scenarios
+    from repro.serving.server import LabelServer, ServeClient
+
+    async def main():
+        srv = await LabelServer(scenarios.get_scenario("lm_stream"),
+                                seed=0, port=0,
+                                tick_interval_s=0.0).start()
+        c = await ServeClient(srv.host, srv.port).connect()
+        texted = await c.submit(wait=True, timeout_s=60.0,
+                                text="the quick brown fox", label=1)
+        plain = await c.submit(wait=True, timeout_s=60.0)
+        stats = srv.stats()
+        await c.aclose()
+        await srv.close()
+        return texted, plain, stats
+
+    (st, rt), (sp, rp), stats = asyncio.run(main())
+    assert st == 200 and rt["status"] == "done", (st, rt)
+    assert sp == 200 and rp["status"] == "done", (sp, rp)
+    assert stats["answered"] == stats["submitted"] == 2
+    assert stats["conservation"] is True
+    timed = {row["name"] for row in stats["timing"]}
+    assert "serve.embed" in timed, timed
+
+
+def test_text_submission_rejected_on_gaussian_scenario():
+    """serve_default draws Gaussian features in the tick — there is no
+    encoder to route text through, so text/label bodies are a 400 that
+    names the feature kind and never enters the ledger."""
+    from repro.serving.server import ServeClient
+
+    async def main():
+        srv = await _server().start()
+        c = await ServeClient(srv.host, srv.port).connect()
+        status, r = await c.submit(text="hello", label=0)
+        stats = srv.stats()
+        await c.aclose()
+        await srv.close()
+        return status, r, stats
+
+    status, r, stats = asyncio.run(main())
+    assert status == 400, (status, r)
+    assert "lm" in r["error"], r
+    assert stats["submitted"] == 0 and stats["conservation"] is True
+
+
 def test_serve_tick_deterministic_fixed_seed():
     """Two serve runs with the same seed and the same injection schedule
     produce bitwise-identical finalization streams and end states — the

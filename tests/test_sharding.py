@@ -103,6 +103,14 @@ def test_grid_ragged_class_pmap_bit_identical(report):
     assert report["simfast_pop_pad_parity"] is True
 
 
+def test_embedding_bank_sharded_gather_parity(report):
+    """LM features across the mesh: the pmapped bank gather matches the
+    single-device vmap bitwise, and the full lm_stream tick under
+    shard_map stays bit-identical to the unsharded run."""
+    assert report["bank_gather_pmap_parity"] is True
+    assert report["lm_parity_sharded"] is True
+
+
 @pytest.mark.tpu
 def test_sharded_parity_mosaic():
     """Same parity invariant on real TPU devices (Mosaic lowering): the
